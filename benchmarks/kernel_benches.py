@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp reference.
+
+On CPU the numbers measure the XLA reference path (the Pallas kernels run
+interpreted, which is not representative); the derived column therefore
+reports the oracle-vs-kernel max error — the correctness contract — plus
+the XLA path's wall time per call at smoke shapes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.nn import attention, ssd
+
+
+def _time(fn, *args, n=5):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.tree.map(lambda a: a.block_until_ready(), out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def flash_attention_bench():
+    B, S, H, KvH, Dh = 2, 512, 8, 2, 64
+    k0 = jax.random.PRNGKey(0)
+    q = jax.random.normal(k0, (B, S, H, Dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KvH, Dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KvH, Dh))
+    o = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    r = ref.flash_attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(o - r)))
+    xla_us = _time(jax.jit(lambda q, k, v: attention.chunked_attention(
+        q, k, v, causal=True, chunk_q=128, chunk_k=128)), q, k, v)
+    return ([{"shape": f"B{B} S{S} H{H} kv{KvH} dh{Dh}", "max_err": err,
+              "xla_chunked_us": round(xla_us, 1)}],
+            f"kernel_vs_oracle_err={err:.1e}")
+
+
+def ssd_scan_bench():
+    b, s, h, p, g, n = 2, 512, 8, 32, 1, 32
+    k0 = jax.random.PRNGKey(0)
+    x = jax.random.normal(k0, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(k0, (b, s, h)))
+    A = -jnp.exp(jax.random.normal(k0, (h,)) * 0.3)
+    B = jax.random.normal(jax.random.PRNGKey(3), (b, s, g, n)) * 0.3
+    C = jax.random.normal(jax.random.PRNGKey(4), (b, s, g, n)) * 0.3
+    y = ops.ssd_scan(x, dt, A, B, C, chunk=64)
+    yr = ref.ssd_scan_ref(x, dt, A, B, C)
+    err = float(jnp.max(jnp.abs(y - yr)))
+    xla_us = _time(jax.jit(lambda *a: ssd.ssd_chunked(*a, chunk=64)[0]),
+                   x, dt, A, B, C)
+    return ([{"shape": f"b{b} s{s} h{h} p{p} n{n}", "max_err": err,
+              "xla_chunked_us": round(xla_us, 1)}],
+            f"kernel_vs_oracle_err={err:.1e}")

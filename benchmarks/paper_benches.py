@@ -1,0 +1,130 @@
+"""One benchmark per paper table/figure (DESIGN.md §6 index).
+
+Each bench returns (rows, derived) where `derived` is the headline number
+the paper reports for that figure.  benchmarks/run.py times each and emits
+``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import aria2, dse, scaling
+from repro.core.aria2 import (FULL_OFFLOAD, FULL_ON_DEVICE, PART_AGGREGATION,
+                              PRIMITIVES, RAW_MBPS, Scenario)
+from repro.core.calibrate import PAPER_DELTAS, report as calibration_report
+
+
+def table2_sensor_rates():
+    """Table II sensor suite -> raw + compressed (10:1) uplink rates."""
+    rows = [
+        {"sensor": "POV RGB (1440x1440@5, binned 2x2)",
+         "raw_mbps": round(RAW_MBPS["rgb"], 2)},
+        {"sensor": "4x greyscale (640x480@30)",
+         "raw_mbps": round(RAW_MBPS["gs"], 2)},
+        {"sensor": "2x ET (320x240@30)", "raw_mbps": round(RAW_MBPS["et"], 2)},
+        {"sensor": "audio (2x OPUS 128kbps)",
+         "raw_mbps": round(RAW_MBPS["audio_opus"], 3)},
+        {"sensor": "2x IMU (800Hz x 6 x 16b)",
+         "raw_mbps": round(RAW_MBPS["imu"], 3)},
+    ]
+    total = float(aria2.offloaded_mbps(FULL_OFFLOAD))
+    rows.append({"sensor": "TOTAL offloaded @10:1", "raw_mbps": round(total, 2)})
+    # paper sanity: 512x512@30fps 8b @10:1 = 6.3 Mbps (SS V-B)
+    check = 512 * 512 * 30 * 8 / 10 / 1e6
+    return rows, f"offload={total:.1f}Mbps;512p-check={check:.2f}Mbps"
+
+
+def fig3_power_composition():
+    """Fig 3a/3b: category breakdown for full-offload vs full-on-device."""
+    rows = []
+    for sc in (FULL_OFFLOAD, FULL_ON_DEVICE):
+        rep = aria2.build_system(sc).evaluate()
+        cats = rep.by_category()
+        t = rep.total_mw
+        rows.append({"scenario": sc.name, "total_mw": round(t, 1),
+                     **{k: round(100 * v / t, 1) for k, v in
+                        sorted(cats.items())}})
+    p0, p1 = rows[0]["total_mw"], rows[1]["total_mw"]
+    delta = 100 * (p1 - p0) / p0
+    return rows, f"on_device_delta={delta:+.1f}%(paper -16%)"
+
+
+def fig4_placement_dse():
+    """Fig 4: all 16 placements; paper's 6 highlighted subsets compared."""
+    rows = dse.placement_sweep()
+    res = calibration_report()
+    worst = max(abs(r["residual"]) for r in res["deltas"])
+    return rows, f"max_residual_vs_paper={worst:.2f}pp"
+
+
+def table3_amdahl():
+    """Table III: cumulative component power distribution + Amdahl bound."""
+    rep = aria2.build_system(FULL_ON_DEVICE).evaluate()
+    per = rep.per_component()
+    rev = {p: part for part, parts in PART_AGGREGATION.items()
+           for p in parts}
+    agg: dict[str, float] = {}
+    for n, p in per:
+        agg[rev.get(n, n)] = agg.get(rev.get(n, n), 0.0) + p
+    per = sorted(agg.items(), key=lambda kv: -kv[1])
+    total = sum(p for _, p in per)
+    paper = [(0.001, 82, 1.47), (0.005, 118, 9.47), (0.01, 129, 17.49),
+             (0.05, 140, 43.29), (0.10, 143, 61.60), (0.25, 145, 100.0)]
+    rows = []
+    for th, pc, ps in paper:
+        sel = [p for _, p in per if p <= th * total]
+        rows.append({"threshold_pct": 100 * th, "model_n": len(sel),
+                     "paper_n": pc,
+                     "model_share_pct": round(100 * sum(sel) / total, 2),
+                     "paper_share_pct": ps})
+    top2 = sum(p for _, p in per[:2]) / total
+    amdahl = 1.0 / (1.0 - top2)
+    return rows, (f"n={len(per)};top2={100*top2:.1f}%(paper 38.4%);"
+                  f"amdahl_bound={amdahl:.2f}x(paper ~1.6x)")
+
+
+def fig5_tech_scaling():
+    """Fig 5: node-by-node projection, on-device scenario."""
+    model = aria2.build_system(FULL_ON_DEVICE)
+    rows = scaling.project(model, n_steps=4)
+    t0, t4 = rows[0]["total_mw"], rows[-1]["total_mw"]
+    a0 = rows[0].get("analog_mw", 0) + rows[0].get("rf_mw", 0)
+    a4 = rows[-1].get("analog_mw", 0) + rows[-1].get("rf_mw", 0)
+    return rows, (f"total x{t4/t0:.2f} over 4 nodes; analog+rf share "
+                  f"{100*a0/t0:.0f}%->{100*a4/t4:.0f}%")
+
+
+def fig6_compression():
+    """Fig 6: compression x fps sensitivity; asymptote = link floor."""
+    rows = dse.compression_sweep()
+    base = next(r for r in rows if r["compression"] == 1 and
+                r["fps_scale"] == 1)
+    best = min(rows, key=lambda r: r["total_mw"])
+    return rows, (f"{base['total_mw']:.0f}mW @1:1 -> {best['total_mw']:.0f}mW"
+                  f" @{best['compression']}:1/{best['fps_scale']}x "
+                  f"(asymptotic link floor)")
+
+
+def beyond_sensitivity():
+    """Beyond-paper: gradient sensitivity of system power wrt coefficients."""
+    rows = dse.sensitivity()
+    top = rows[0]
+    return rows, (f"top lever: {top['theta']} "
+                  f"(elasticity {top['elasticity']:.2f})")
+
+
+def beyond_pareto():
+    """Beyond-paper: placement x compression Pareto front
+    (power vs offloaded context bandwidth)."""
+    pts, front = dse.pareto()
+    return front, f"{len(front)} non-dominated of {len(pts)} configs"
+
+
+def contention_telemetry():
+    """PnPSim scheduling telemetry: duty cycles + deadline misses."""
+    from repro.core.workloads import duty_cycles
+    tel = duty_cycles({p: True for p in PRIMITIVES})
+    rows = [{"resource": k, "duty": round(v, 4),
+             "mean_wait_ms": round(1e3 * tel.mean_wait.get(k, 0), 3)}
+            for k, v in sorted(tel.duty.items())]
+    return rows, f"deadline_misses={tel.deadline_misses}"

@@ -1,0 +1,108 @@
+"""Roofline report: reads the dry-run artifacts (results/dryrun/*.json).
+
+Per (arch x shape x mesh): the three terms (compute / memory / collective,
+seconds per step, per device), the dominant bottleneck, MODEL_FLOPS =
+6*N*D (train) or 2*N_active*D (inference) vs compiled HLO flops, and the
+roofline fraction.  EXPERIMENTS.md SSRoofline is generated from this.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str | None = None) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / "*.json"))):
+        r = json.loads(Path(f).read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def table(mesh: str = "single") -> list[dict]:
+    out = []
+    for r in load_cells(mesh):
+        if r.get("skipped"):
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r["mesh"], "status": "SKIP",
+                        "note": r.get("reason", "")[:60]})
+            continue
+        if not r.get("ok"):
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r["mesh"], "status": "FAIL",
+                        "note": r.get("error", "")[:60]})
+            continue
+        t = r["terms"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "compute_s": round(t["compute_s"], 4),
+            "memory_s": round(t["memory_s"], 4),
+            "collective_s": round(t["collective_s"], 4),
+            "dominant": r["dominant"].replace("_s", ""),
+            "roofline_frac": round(r["roofline_fraction"], 3),
+            "useful_flops_ratio": round(r.get("useful_flops_ratio", 0), 2),
+            "hbm_gb_per_dev": round(r["memory"]["resident_bytes"] / 1e9, 1),
+        })
+    return out
+
+
+PERF_DIR = Path(__file__).resolve().parent.parent / "results" / "perf"
+
+# SSPerf winning variants per hillclimbed cell (EXPERIMENTS.md SSPerf)
+TUNED_VARIANTS = {
+    ("yi-34b", "train_4k"): "sp+seqattn+ck4096x4096",
+    ("mamba2-2.7b", "train_4k"): "dp256+ssd128",
+    ("whisper-medium", "prefill_32k"): "ck2048x2048",
+    ("dbrx-132b", "train_4k"): "sp3+ck2048",
+    ("zamba2-1.2b", "train_4k"): "dp256",
+    ("gemma3-4b", "prefill_32k"): "localattn+ck2048",
+    ("moonshot-v1-16b-a3b", "train_4k"): "sp3+ck2048",
+}
+
+
+def tuned_table() -> list[dict]:
+    """Baseline vs SSPerf-tuned bound per hillclimbed cell."""
+    out = []
+    for (arch, shape), variant in TUNED_VARIANTS.items():
+        b = RESULTS / f"{arch}__{shape}__single.json"
+        t = PERF_DIR / f"{arch}__{shape}__{variant}.json"
+        if not (b.exists() and t.exists()):
+            continue
+        rb = json.loads(b.read_text())
+        rt = json.loads(t.read_text())
+        if not (rb.get("ok") and rt.get("ok")):
+            continue
+        b0 = max(rb["terms"].values())
+        b1 = max(rt["terms"].values())
+        out.append({
+            "arch": arch, "shape": shape, "variant": variant,
+            "baseline_bound_s": round(b0, 3),
+            "tuned_bound_s": round(b1, 3),
+            "speedup": round(b0 / b1, 2) if b1 else 0.0,
+            "tuned_rf": round(rt["terms"]["compute_s"] / b1, 3) if b1 else 0,
+            "tuned_gb": round(rt["memory"]["resident_bytes"] / 1e9, 1),
+        })
+    return out
+
+
+def run():
+    rows = table("single")
+    ok = [r for r in rows if r["status"] == "ok"]
+    if not ok:
+        return rows, "no dry-run artifacts yet (run repro.launch.dryrun)"
+    med = sorted(r["roofline_frac"] for r in ok)[len(ok) // 2]
+    best = max(ok, key=lambda r: r["roofline_frac"])
+    tuned = tuned_table()
+    sp = max((t["speedup"] for t in tuned), default=0.0)
+    best_rf = max((t["tuned_rf"] for t in tuned), default=0.0)
+    return ({"baseline": rows, "tuned": tuned},
+            (f"{len(ok)} baseline cells (median rf={med:.3f}, best="
+             f"{best['arch']}/{best['shape']}={best['roofline_frac']:.3f}); "
+             f"{len(tuned)} tuned cells (best speedup {sp:.1f}x, "
+             f"best rf {best_rf:.3f})"))

@@ -1,0 +1,46 @@
+"""Benchmark harness entry: one bench per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (and writes JSON detail files under
+results/benchmarks/).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+
+
+def main() -> None:
+    from . import kernel_benches, paper_benches, roofline
+    benches = [
+        ("table2_sensor_rates", paper_benches.table2_sensor_rates),
+        ("fig3_power_composition", paper_benches.fig3_power_composition),
+        ("fig4_placement_dse", paper_benches.fig4_placement_dse),
+        ("table3_amdahl", paper_benches.table3_amdahl),
+        ("fig5_tech_scaling", paper_benches.fig5_tech_scaling),
+        ("fig6_compression", paper_benches.fig6_compression),
+        ("contention_telemetry", paper_benches.contention_telemetry),
+        ("beyond_sensitivity", paper_benches.beyond_sensitivity),
+        ("beyond_pareto", paper_benches.beyond_pareto),
+        ("kernel_flash_attention", kernel_benches.flash_attention_bench),
+        ("kernel_ssd_scan", kernel_benches.ssd_scan_bench),
+        ("roofline", roofline.run),
+    ]
+    OUT.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        try:
+            rows, derived = fn()
+            us = (time.perf_counter() - t0) * 1e6
+            (OUT / f"{name}.json").write_text(json.dumps(rows, indent=1))
+        except Exception as e:  # noqa: BLE001
+            us = (time.perf_counter() - t0) * 1e6
+            derived = f"ERROR:{type(e).__name__}:{e}"
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,33 @@
+"""End-to-end system view: one wearable scenario -> device power +
+uplink -> backend fleet sizing from the dry-run roofline.
+
+This is the paper's full loop (Fig 1): sense -> compute/compress on-device
+-> offload -> backend contextual AI — with both sides quantified by the
+same framework.
+
+    PYTHONPATH=src python examples/end_to_end_system.py
+"""
+from repro.core import aria2, offload
+from repro.core.aria2 import FULL_OFFLOAD, FULL_ON_DEVICE
+
+for sc in (FULL_OFFLOAD, FULL_ON_DEVICE):
+    s = offload.offload_summary(sc)
+    print(f"\n=== {s['scenario']} ===")
+    print(f"device: {s['device_mw']:.0f} mW, uplink {s['uplink_mbps']:.1f} "
+          f"Mbps")
+    fleet = offload.size_fleet(sc, n_users=1e6, duty=0.35)
+    total_pods = 0.0
+    for r in fleet:
+        if r.get("note"):
+            print(f"  {r['stream']:8s} -> {r['arch']:22s} {r['note']}")
+            continue
+        print(f"  {r['stream']:8s} -> {r['arch']:22s} "
+              f"{r['tokens_per_s']/1e6:8.1f}M tok/s  needs {r['pods']:8.1f} "
+              f"pods (256 chips each)")
+        if r["pods"] != float("inf"):
+            total_pods += r["pods"]
+    print(f"  ~{total_pods:.0f} pods for 1M always-on users @35% duty")
+
+print("\nNote: pod capacity comes from the dry-run roofline bound of each "
+      "backend cell\n(results/dryrun/*.json); §Perf-tuned shardings raise "
+      "it up to 16x (EXPERIMENTS.md).")

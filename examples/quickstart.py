@@ -1,0 +1,45 @@
+"""Quickstart: the paper's full-system power model in ~40 lines.
+
+Builds the calibrated Aria2 model, reproduces the paper's headline numbers
+(Fig 3/4, Table III), and runs a placement DSE — then shows the
+beyond-paper differentiable sensitivity analysis.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import aria2, dse
+from repro.core.aria2 import FULL_OFFLOAD, FULL_ON_DEVICE, PRIMITIVES, Scenario
+
+# 1. scenario totals (the compute <-> communication trade-off, SSV)
+p0 = float(aria2.total_mw(FULL_OFFLOAD))
+p1 = float(aria2.total_mw(FULL_ON_DEVICE))
+print(f"full offload     : {p0:7.1f} mW")
+print(f"full on-device   : {p1:7.1f} mW   ({100*(p1-p0)/p0:+.1f}% vs paper -16%)")
+print(f"always-on target : {200.0:7.1f} mW   (3 Wh / 15 h, SSIII-B)\n")
+
+# 2. per-primitive placement deltas (Fig 4)
+for prim in PRIMITIVES:
+    p = float(aria2.total_mw(Scenario("s", (prim,))))
+    print(f"  {prim:15s} on-device: {100*(p-p0)/p0:+6.2f}%")
+
+# 3. component power distribution (Table III / Amdahl's law for power)
+rep = aria2.build_system(FULL_ON_DEVICE).evaluate()
+rev = {p: part for part, parts in aria2.PART_AGGREGATION.items()
+       for p in parts}
+agg = {}
+for n, p in rep.per_component():
+    agg[rev.get(n, n)] = agg.get(rev.get(n, n), 0.0) + p
+rows = sorted(agg.values(), reverse=True)
+top2 = sum(rows[:2]) / sum(rows)
+print(f"\ntop-2 components = {100*top2:.1f}% of power "
+      f"=> max {1/(1-top2):.2f}x system gain from optimizing them alone")
+
+# 4. compression sweep (Fig 6) — first/last points
+sweep = dse.compression_sweep(compressions=(1, 8, 64), fps_scales=(1,))
+for r in sweep:
+    print(f"  compression {r['compression']:3d}:1 -> {r['total_mw']:6.0f} mW "
+          f"({r['offload_mbps']:6.1f} Mbps)")
+
+# 5. beyond-paper: which physical coefficient buys the most power?
+print("\ngradient sensitivity (d total / d theta, elasticity):")
+for row in dse.sensitivity()[:4]:
+    print(f"  {row['theta']:22s} {row['elasticity']:+.3f}")

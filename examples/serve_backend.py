@@ -1,0 +1,35 @@
+"""Serving example: batched requests through the continuous-batching
+server — the decode_step here is exactly what the dry-run lowers with
+sequence-sharded KV caches on the production mesh.
+
+    PYTHONPATH=src python examples/serve_backend.py [--arch gemma3-4b]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.models import registry
+from repro.serving.engine import Request, Server
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="granite-3-2b",
+                choices=registry.arch_names())
+ap.add_argument("--requests", type=int, default=6)
+args = ap.parse_args()
+
+cfg, model = registry.get(args.arch, smoke=True)
+params = model.init(jax.random.PRNGKey(0), cfg)
+srv = Server(cfg, model, params, batch_slots=4, max_len=64, eos=-1)
+
+rng = np.random.default_rng(0)
+for rid in range(args.requests):
+    prompt = rng.integers(2, cfg.vocab, size=rng.integers(4, 12))
+    srv.submit(Request(rid, prompt.astype(np.int32), max_new_tokens=8))
+
+done = srv.run()
+for r in done:
+    print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
+print(f"\nstats: {srv.stats.prefills} prefills, "
+      f"{srv.stats.decode_steps} decode steps, "
+      f"{srv.stats.tokens_out} tokens out")

@@ -1,0 +1,25 @@
+"""Design-space exploration driver (SSV-B): evaluate every on/off-device
+placement x compression point, print the Pareto front of (system power,
+offloaded context bandwidth), and project technology scaling.
+
+    PYTHONPATH=src python examples/wearable_dse.py
+"""
+from repro.core import aria2, dse, scaling
+
+pts, front = dse.pareto(compressions=(4, 10, 20, 40))
+print(f"{len(pts)} design points; Pareto front (power vs context bandwidth):")
+print(f"{'on-device':42s} {'comp':>5s} {'mW':>7s} {'Mbps':>7s}")
+for p in front:
+    print(f"{p['on_device']:42s} {p['compression']:5d} "
+          f"{p['total_mw']:7.1f} {p['offload_mbps']:7.2f}")
+
+print("\nplacement sweep (all 16 subsets):")
+for r in dse.placement_sweep():
+    print(f"  {r['on_device']:42s} {r['total_mw']:7.1f} mW "
+          f"({r['delta_pct']:+6.2f}%)  {r['offload_mbps']:6.1f} Mbps")
+
+print("\ntechnology scaling (Fig 5):")
+for row in scaling.project(aria2.build_system(aria2.FULL_ON_DEVICE)):
+    share = (row.get("analog_mw", 0) + row.get("rf_mw", 0)) / row["total_mw"]
+    print(f"  {row['node']:12s} {row['total_mw']:7.1f} mW   "
+          f"analog+rf share {100*share:4.1f}%")

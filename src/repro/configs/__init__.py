@@ -1,0 +1,1 @@
+from .base import SHAPES, ModelConfig, ShapeConfig, shape_applicable  # noqa: F401

@@ -1,0 +1,30 @@
+"""dbrx-132b [hf:databricks/dbrx-base; unverified] — 16 experts top-4,
+fine-grained MoE; largest assigned arch."""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b", family="moe",
+        n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+        d_ff=10752, vocab=100352,
+        n_experts=16, top_k=4)
+
+
+def smoke() -> ModelConfig:
+    import jax.numpy as jnp
+    return ModelConfig(
+        name="dbrx-132b-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+        d_ff=32, vocab=256,
+        n_experts=4, top_k=2, capacity_factor=2.0,
+        compute_dtype=jnp.float32)
+
+
+def tuned() -> ModelConfig:
+    """SSPerf winner: Megatron-SP residual + seq-sharded MoE IO
+    (all-gather -> route -> reduce-scatter) + pinned head-sharded attention
+    + 2048 chunks.  train_4k bound 25.4s -> 13.8s (1.84x), rf 0.574."""
+    import dataclasses
+    return dataclasses.replace(config(), sequence_parallel=True,
+                               attn_chunk_q=2048, attn_chunk_k=2048)

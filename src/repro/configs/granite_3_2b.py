@@ -1,0 +1,17 @@
+"""granite-3-2b [hf:ibm-granite/granite-3.0-2b-base; hf] — dense GQA."""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-3-2b", family="dense",
+        n_layers=40, d_model=2048, n_heads=32, n_kv_heads=8,
+        d_ff=8192, vocab=49155)
+
+
+def smoke() -> ModelConfig:
+    import jax.numpy as jnp
+    return ModelConfig(
+        name="granite-3-2b-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+        d_ff=128, vocab=256, compute_dtype=jnp.float32)

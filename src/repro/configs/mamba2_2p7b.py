@@ -1,0 +1,36 @@
+"""mamba2-2.7b [arXiv:2405.21060; unverified] — pure SSD, attention-free."""
+from .base import ModelConfig
+from ..nn.ssd import SSDConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-2.7b", family="ssm",
+        n_layers=64, d_model=2560, n_heads=1, n_kv_heads=1, head_dim=1,
+        d_ff=0, vocab=50280,
+        ssm=SSDConfig(d_model=2560, d_state=128, head_dim=64, expand=2,
+                      n_groups=1, chunk=64),
+        sub_quadratic=True)
+
+
+def smoke() -> ModelConfig:
+    import jax.numpy as jnp
+    return ModelConfig(
+        name="mamba2-2.7b-smoke", family="ssm",
+        n_layers=2, d_model=64, n_heads=1, n_kv_heads=1, head_dim=1,
+        d_ff=0, vocab=256,
+        ssm=SSDConfig(d_model=64, d_state=16, head_dim=16, expand=2,
+                      n_groups=1, chunk=8),
+        sub_quadratic=True, compute_dtype=jnp.float32)
+
+
+def tuned() -> ModelConfig:
+    """SSPerf winner: ZeRO pure-DP (no tensor-parallel psums; weights
+    FSDP-gathered) + SSD chunk 128.  Modeled step bound 13.8s -> 1.59s
+    (8.7x) on train_4k; fits 6.2 GB/chip."""
+    import dataclasses
+    from ..nn.ssd import SSDConfig
+    cfg = config()
+    return dataclasses.replace(
+        cfg, pure_dp=True,
+        ssm=dataclasses.replace(cfg.ssm, chunk=128))

@@ -1,0 +1,28 @@
+"""whisper-medium [arXiv:2212.04356; unverified] — enc-dec, conv frontend
+stubbed (input_specs provides precomputed frame embeddings)."""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium", family="encdec",
+        n_layers=24, dec_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=4096, vocab=51865, audio_frames=1500)
+
+
+def smoke() -> ModelConfig:
+    import jax.numpy as jnp
+    return ModelConfig(
+        name="whisper-medium-smoke", family="encdec",
+        n_layers=2, dec_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=256, audio_frames=32, compute_dtype=jnp.float32)
+
+
+def tuned() -> ModelConfig:
+    """SSPerf: XLA-path chunk tuning (marginal; the score/softmax HBM
+    traffic is chunk-invariant) — the remaining lever is the Pallas flash
+    kernel (kernels/flash_attention.py), quantified analytically in
+    EXPERIMENTS.md SSPerf."""
+    import dataclasses
+    return dataclasses.replace(config(), attn_chunk_q=2048,
+                               attn_chunk_k=2048)

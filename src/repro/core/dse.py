@@ -1,0 +1,94 @@
+"""Design-space exploration (§V-B, §VI-B) + beyond-paper extensions.
+
+Paper sweeps:
+  * placement_sweep      — all 2^4 on/off-device primitive placements
+                           (Fig 4 shows 6 of them; we evaluate all 16).
+  * compression_sweep    — compression {1..128} x fps {1..32} on the
+                           full-offload configuration (Fig 6).
+
+Beyond-paper:
+  * sensitivity          — d(total power)/d(theta) via jax.grad: ranks
+                           which physical coefficient buys the most power
+                           per unit improvement, replacing manual sweeps.
+  * pareto               — placement x compression grid -> (power,
+                           offload-bandwidth) Pareto front: bandwidth is a
+                           proxy for backend context fidelity.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import aria2
+from .aria2 import PRIMITIVES, Scenario
+
+
+def placement_sweep():
+    p0 = float(aria2.total_mw(aria2.FULL_OFFLOAD))
+    rows = []
+    for r in range(len(PRIMITIVES) + 1):
+        for subset in itertools.combinations(PRIMITIVES, r):
+            p = float(aria2.total_mw(Scenario("dse", subset)))
+            rows.append({
+                "on_device": "+".join(subset) if subset else "(none)",
+                "total_mw": round(p, 1),
+                "delta_pct": round(100 * (p - p0) / p0, 2),
+                "offload_mbps": round(
+                    float(aria2.offloaded_mbps(Scenario("d", subset))), 2),
+            })
+    return sorted(rows, key=lambda r: r["total_mw"])
+
+
+def compression_sweep(compressions=(1, 2, 4, 8, 16, 32, 64, 128),
+                      fps_scales=(1, 2, 4, 8, 16, 32)):
+    rows = []
+    for c in compressions:
+        for f in fps_scales:
+            sc = Scenario("sweep", (), compression=float(c),
+                          fps_scale=float(f))
+            rows.append({
+                "compression": c, "fps_scale": f,
+                "offload_mbps": round(float(aria2.offloaded_mbps(sc)), 2),
+                "total_mw": round(float(aria2.total_mw(sc)), 1),
+            })
+    return rows
+
+
+def sensitivity(scenario: Scenario | None = None, keys=None):
+    """d(total)/d(theta_k): mW of system power per unit of coefficient."""
+    sc = scenario or aria2.FULL_ON_DEVICE
+    keys = keys or list(aria2.THETA0)
+    th0 = {k: jnp.asarray(float(aria2.THETA0[k])) for k in keys}
+
+    def f(th):
+        return aria2.total_mw(sc, th)
+
+    grads = jax.grad(f)(th0)
+    rows = [{"theta": k, "value": float(th0[k]),
+             "d_total_mw_d_theta": float(grads[k]),
+             "elasticity": float(grads[k] * th0[k] / f(th0))}
+            for k in keys]
+    return sorted(rows, key=lambda r: -abs(r["elasticity"]))
+
+
+def pareto(compressions=(4, 10, 20, 40)):
+    """Placement x compression -> non-dominated (power, bandwidth) points."""
+    pts = []
+    for r in range(len(PRIMITIVES) + 1):
+        for subset in itertools.combinations(PRIMITIVES, r):
+            for c in compressions:
+                sc = Scenario("p", subset, compression=float(c))
+                pts.append({
+                    "on_device": "+".join(subset) or "(none)",
+                    "compression": c,
+                    "total_mw": round(float(aria2.total_mw(sc)), 1),
+                    "offload_mbps": round(float(aria2.offloaded_mbps(sc)), 2),
+                })
+    front = []
+    for p in sorted(pts, key=lambda x: x["total_mw"]):
+        if all(p["offload_mbps"] > q["offload_mbps"] for q in front):
+            front.append(p)
+    return pts, front

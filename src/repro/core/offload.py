@@ -1,0 +1,112 @@
+"""Wearable -> backend offload bridge (§II-A: signals are "offloaded and
+processed by a backend datacenter").
+
+Converts a device scenario's offloaded stream rates into backend workload
+shapes — which assigned architecture serves each egocentric stream, at what
+request rate — and sizes a backend pod fleet from the dry-run/§Perf
+roofline numbers.  This closes the loop between the paper's device model
+and our 256-chip backend cells: the compute the device *doesn't* do
+(Fig 4's placement trade-off) reappears here as backend tokens/second.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+from . import aria2
+from .aria2 import RAW_MBPS, Scenario
+
+RESULTS = Path(__file__).resolve().parents[3] / "results"
+
+# backend service per offloaded stream: (arch, shape cell, tokens-or-frames
+# produced per user-second of stream)
+STREAM_SERVICE = {
+    # ASR: 1 s audio ~= 50 acoustic frames -> whisper decoder tokens
+    "audio": ("whisper-medium", "prefill_32k", 50.0),
+    # RGB POV frames -> VLM scene/object understanding (576 tokens/frame@5fps)
+    "rgb": ("phi-3-vision-4.2b", "prefill_32k", 576.0 * 5),
+    # egocentric signal narration -> personal-context LM ingest
+    "signals": ("granite-3-2b", "prefill_32k", 30.0),
+    # long-horizon personal-context aggregation (months of signals)
+    "context": ("mamba2-2.7b", "train_4k", 30.0),
+}
+
+
+@dataclass(frozen=True)
+class BackendDemand:
+    stream: str
+    arch: str
+    cell: str
+    tokens_per_user_s: float
+    offloaded: bool
+
+
+def backend_demand(sc: Scenario) -> list[BackendDemand]:
+    """Which backend services are active for a device scenario."""
+    on = sc.placements()
+    rows = []
+    rows.append(BackendDemand("rgb", *STREAM_SERVICE["rgb"][:2],
+                              STREAM_SERVICE["rgb"][2], True))  # RGB always
+    rows.append(BackendDemand(
+        "audio", *STREAM_SERVICE["audio"][:2], STREAM_SERVICE["audio"][2],
+        not on["asr"]))           # ASR off-device -> backend transcribes
+    rows.append(BackendDemand("signals", *STREAM_SERVICE["signals"][:2],
+                              STREAM_SERVICE["signals"][2], True))
+    rows.append(BackendDemand("context", *STREAM_SERVICE["context"][:2],
+                              STREAM_SERVICE["context"][2], True))
+    return rows
+
+
+def _cell_tokens_per_s(arch: str, shape: str, results_dir=None) -> float:
+    """Tokens/s/pod for a cell from its dry-run roofline bound."""
+    d = Path(results_dir) if results_dir else RESULTS / "dryrun"
+    f = d / f"{arch}__{shape}__single.json"
+    if not f.exists():
+        return 0.0
+    r = json.loads(f.read_text())
+    if not r.get("ok"):
+        return 0.0
+    bound_s = max(r["terms"].values())          # modeled step time
+    if shape.startswith("train"):
+        toks = 256 * 4096
+    elif shape.startswith("prefill"):
+        toks = 32 * 32768
+    else:
+        toks = 128
+    return toks / bound_s if bound_s else 0.0
+
+
+def size_fleet(sc: Scenario, n_users: float = 1e6,
+               duty: float = 0.35, results_dir=None) -> list[dict]:
+    """Pods needed to serve n_users wearables in scenario `sc`.
+
+    duty = fraction of the day streams are active (§II: always-on sensing,
+    VAD/saliency-gated upload).
+    """
+    rows = []
+    for d in backend_demand(sc):
+        if not d.offloaded:
+            rows.append({"stream": d.stream, "arch": d.arch,
+                         "pods": 0.0, "note": "computed on-device"})
+            continue
+        demand = n_users * duty * d.tokens_per_user_s
+        cap = _cell_tokens_per_s(d.arch, d.cell, results_dir)
+        rows.append({
+            "stream": d.stream, "arch": d.arch, "cell": d.cell,
+            "tokens_per_s": demand,
+            "pod_tokens_per_s": round(cap, 1),
+            "pods": round(demand / cap, 1) if cap else float("inf"),
+        })
+    return rows
+
+
+def offload_summary(sc: Scenario) -> dict:
+    """Device-side uplink vs backend-side ingest for a scenario."""
+    return {
+        "scenario": sc.name,
+        "uplink_mbps": round(float(aria2.offloaded_mbps(sc)), 2),
+        "device_mw": round(float(aria2.total_mw(sc)), 1),
+        "backend": [d.__dict__ for d in backend_demand(sc)],
+    }

@@ -1,0 +1,84 @@
+"""Deterministic, checkpointable synthetic data pipeline.
+
+Batches are a pure function of (seed, step, host) — restarts resume at the
+exact step with zero replay/skip, and every data-parallel host draws a
+disjoint shard (the same contract a real distributed loader must satisfy).
+
+Two flavours:
+  * ``lm_batches``       — token LM batches for the backend archs.
+  * ``egocentric_batches`` — synthetic egocentric-signal streams (gaze /
+    pose / transcript token codes) mirroring the wearable offload format
+    (core/offload accounting), used by the contextual-AI training example.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+
+def _batch_rng(cfg: DataConfig, step: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, cfg.host_id]))
+
+
+def lm_batch(cfg: DataConfig, step: int) -> dict:
+    """Markov-ish synthetic tokens (learnable structure, not pure noise)."""
+    rng = _batch_rng(cfg, step)
+    B, S = cfg.host_batch, cfg.seq_len
+    base = rng.integers(0, cfg.vocab, size=(B, 1))
+    drift = rng.integers(-16, 17, size=(B, S)).cumsum(axis=1)
+    tokens = np.abs(base + drift) % cfg.vocab
+    tokens = tokens.astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1)
+    labels[:, -1] = 0
+    mask = np.ones((B, S), np.float32)
+    mask[:, -1] = 0.0
+    return {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels),
+            "mask": jnp.asarray(mask)}
+
+
+def lm_batches(cfg: DataConfig, start_step: int = 0) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield lm_batch(cfg, step)
+        step += 1
+
+
+def egocentric_batch(cfg: DataConfig, step: int,
+                     d_signal: int = 64) -> dict:
+    """Offloaded egocentric signal windows -> next-token personal-context
+    narration targets (synthetic)."""
+    rng = _batch_rng(cfg, step)
+    B, S = cfg.host_batch, cfg.seq_len
+    gaze = rng.standard_normal((B, S, 3)).cumsum(axis=1) * 0.01
+    pose = rng.standard_normal((B, S, 6)).cumsum(axis=1) * 0.01
+    hands = rng.standard_normal((B, S, 2, 21, 3)) * 0.1
+    tokens = rng.integers(0, cfg.vocab, size=(B, S)).astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1)
+    labels[:, -1] = 0
+    return {
+        "gaze": jnp.asarray(gaze, jnp.float32),
+        "pose": jnp.asarray(pose, jnp.float32),
+        "hands": jnp.asarray(hands.reshape(B, S, -1), jnp.float32),
+        "tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }

@@ -1,0 +1,36 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the real kernels run; everywhere else (this CPU container, unit
+tests) they execute under interpret=True, which runs the kernel body
+block-by-block in the Pallas interpreter — bit-level semantics of the
+BlockSpec tiling without TPU hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=512,
+                    block_k=512, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interp)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the Pallas kernels (per-kernel allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..nn import attention as _attn
+from ..nn import ssd as _ssd
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """Direct softmax(QK^T)V with the same masking semantics."""
+    return _attn.sdpa(q, k, v, causal=causal, window=window, scale=scale,
+                      bidirectional=not causal and window is None)
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """Sequential SSD recurrence (the 'linear form')."""
+    y, _ = _ssd.ssd_reference(x, dt, A, B, C)
+    return y

@@ -1,0 +1,101 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel [arXiv:2405.21060].
+
+TPU adaptation of the SSD algorithm: the grid walks (batch, head, chunk)
+with the chunk dimension sequential; the inter-chunk recurrent state
+(P x N, f32) lives in VMEM scratch.  Each grid step computes the
+quadratic-within-chunk "dual form" (an MXU-friendly (cl x cl) masked-decay
+matmul) plus the contribution of the carried state, then updates the state:
+
+    y_intra = ((C B^T) . L) (dt x),   L_ij = exp(cumsum dA)_i / _j  (i >= j)
+    y_inter = C state^T . exp(cA)
+    state  <- state * exp(sum dA) + (B dt x decay_out)
+
+Working set per step at cl=128, P=64, N=128:
+  x (cl,P) + B/C (cl,N) + L (cl,cl) f32 + state (P,N) f32  ~= 170 KB << VMEM.
+
+ref.py oracle: nn.ssd.ssd_reference (sequential recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                cl: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (cl, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (cl,)
+    A = a_ref[0]                                     # scalar
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)       # (cl, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)       # (cl, N)
+
+    dA = dt * A                                      # (cl,)
+    cA = jnp.cumsum(dA)                              # inclusive
+    seg = cA[:, None] - cA[None, :]                  # (i, j)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    Ldec = jnp.where(ii >= jj, jnp.exp(seg), 0.0)    # (cl, cl)
+
+    xdt = x * dt[:, None]                            # (cl, P)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    w = cb * Ldec                                    # (cl, cl)
+    y_intra = jax.lax.dot_general(w, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    state = state_scr[...]                           # (P, N)
+    y_inter = jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32) \
+        * jnp.exp(cA)[:, None]                       # (cl, P)
+
+    decay_out = jnp.exp(cA[-1] - cA)                 # (cl,)
+    upd = jax.lax.dot_general(
+        xdt * decay_out[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (P, N)
+    state_scr[...] = state * jnp.exp(cA[-1]) + upd
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=False):
+    """x:(b,s,h,p) dt:(b,s,h) A:(h,) B/C:(b,s,g,n) -> y:(b,s,h,p).
+
+    Matches nn.ssd.ssd_reference / ssd_chunked (zero initial state).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    cl = min(chunk, s)
+    assert s % cl == 0, (s, cl)
+    nc = s // cl
+
+    kernel = functools.partial(_ssd_kernel, cl=cl)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, cl, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, cl, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, cl, 1, n),
+                         lambda bi, hi, ci: (bi, ci, hi // rep, 0)),
+            pl.BlockSpec((1, cl, 1, n),
+                         lambda bi, hi, ci: (bi, ci, hi // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cl, 1, p),
+                               lambda bi, hi, ci: (bi, ci, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt.astype(jnp.float32), jnp.asarray(A, jnp.float32), B, C)
+    return y

@@ -1,0 +1,426 @@
+"""Static cost profiler for post-partitioning HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — a
+scan-over-layers model therefore under-reports flops/bytes/collectives by a
+factor of n_layers.  This walker parses the HLO module, builds the call
+graph (while bodies x trip count, fusions, calls, conditionals), and
+accumulates:
+
+  * flops            — dot / convolution ops (the >95% term),
+  * hbm_bytes        — operand+result bytes of every top-level op outside
+                       fused computations (post-fusion HBM traffic model),
+  * collective wire bytes per op kind (all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute),
+                       with replica-group-aware (n-1)/n factors,
+  * top collectives  — heaviest collective call sites with jax op_name
+                       metadata (drives the §Perf hillclimb).
+
+Trip counts come from the scan induction pattern (s32 constant in the while
+condition); XLA's "wide" loop pipelining keeps body-cost x trip invariant,
+so totals stay correct.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*"
+    r"(?P<type>\([^)]*\)|[\w\[\]\{\},:#\*]+)\s+"
+    r"(?P<op>[\w\-]+)\((?P<args>[^)]*)\)(?P<attrs>.*)$")
+_COMP_RE = re.compile(r"^(?P<entry>ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s*\(")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+            "after-all", "add-dependency", "partition-id", "replica-id",
+            "iota"}
+
+
+def shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_numel(type_str: str) -> int:
+    total = 0
+    for _, dims in shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type: str
+    op: str
+    args: list[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    symbols: dict[str, str]          # op name -> type str
+    defs: dict[str, "Op"] = dataclasses.field(default_factory=dict)
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], Optional[str]]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        if not raw.strip():
+            continue
+        if not raw[0].isspace() and raw.rstrip().endswith("{"):
+            m = _COMP_RE.match(raw)
+            if m:
+                cur = Computation(m.group("name"), [], {})
+                comps[cur.name] = cur
+                if m.group("entry"):
+                    entry = cur.name
+            continue
+        if raw.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(raw)
+        if not m:
+            continue
+        args = [a.strip().lstrip("%") for a in m.group("args").split(",")
+                if a.strip()]
+        op = Op(m.group("name"), m.group("type"), m.group("op"), args,
+                m.group("attrs"), raw)
+        cur.ops.append(op)
+        cur.symbols[op.name] = op.type
+        cur.defs[op.name] = op
+    return comps, entry
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(attrs)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        if op.op == "constant" and op.type.startswith("s32"):
+            m = re.search(r"constant\((\-?\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_n = shape_numel(op.type)
+    c = 1
+    m = _CDIMS_RE.search(op.attrs)
+    if m and op.args:
+        lhs_type = comp.symbols.get(op.args[0])
+        if lhs_type:
+            dims = shape_dims(lhs_type)
+            if dims:
+                lhs_dims = dims[0][1]
+                for i in m.group(1).split(","):
+                    if i and int(i) < len(lhs_dims):
+                        c *= lhs_dims[int(i)]
+    return 2.0 * out_n * c
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_n = shape_numel(op.type)
+    if len(op.args) < 2:
+        return 0.0
+    k_type = comp.symbols.get(op.args[1])
+    if not k_type:
+        return 0.0
+    k_n = shape_numel(k_type)
+    # dim_labels ...->b01f etc: output feature count ~ last dim of result
+    dims = shape_dims(op.type)
+    out_ch = dims[0][1][-1] if dims and dims[0][1] else 1
+    return 2.0 * out_n * max(k_n // max(out_ch, 1), 1)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+class Analyzer:
+    def __init__(self, text: str, n_devices: int):
+        self.comps, self.entry = parse_module(text)
+        self.n_devices = n_devices
+        self._memo: dict[tuple[str, bool], Cost] = {}
+        self.top_collectives: list[tuple[float, str, str]] = []
+        self.top_hbm: list[tuple[float, str, str]] = []
+
+    @staticmethod
+    def _true_bytes(comp: Computation, name: str, depth: int = 0) -> int:
+        """Bytes of a value, looking through convert/copy chains.
+
+        The CPU backend upcasts every bf16 dot/collective operand to f32 —
+        an artifact that would not exist on TPU.  Counting the narrowest
+        dtype along the convert chain keeps the roofline TPU-honest.
+        """
+        op = comp.defs.get(name)
+        if op is None:
+            return shape_bytes(comp.symbols.get(name, ""))
+        b = shape_bytes(op.type)
+        if depth < 4 and op.op in ("convert", "copy") and op.args:
+            return min(b, Analyzer._true_bytes(comp, op.args[0], depth + 1))
+        return b
+
+    _WIDTH_PASSTHROUGH = {"convert", "copy", "get-tuple-element", "bitcast",
+                          "transpose", "reshape", "broadcast", "slice",
+                          "dynamic-slice", "add", "multiply", "subtract",
+                          "divide", "negate", "select", "maximum", "minimum"}
+
+    def _src_width(self, comp: Computation, name: str, depth: int = 0) -> int:
+        """Narrowest float byte-width along the producer chain.
+
+        A dot/fusion whose inputs are (converted) bf16 would produce bf16 on
+        TPU even though the CPU backend computes it in f32 — collectives on
+        such values are counted at the source-program width.
+        """
+        op = comp.defs.get(name)
+        if op is None or depth > 6:
+            t = comp.symbols.get(name, "")
+            dims = shape_dims(t)
+            return DTYPE_BYTES.get(dims[0][0], 4) if dims else 4
+        dims = shape_dims(op.type)
+        own = DTYPE_BYTES.get(dims[0][0], 4) if dims else 4
+        if op.op in self._WIDTH_PASSTHROUGH or op.op in ("dot", "fusion"):
+            widths = [self._src_width(comp, a, depth + 1)
+                      for a in op.args[:4]]
+            widths = [w for w in widths if w >= 1]
+            if widths:
+                return min(own, min(widths))
+        return own
+
+    def _collective_cost(self, op: Op, kind: str, comp: Computation) -> float:
+        numel = shape_numel(op.type)
+        dims = shape_dims(op.type)
+        own_w = DTYPE_BYTES.get(dims[0][0], 4) if dims else 4
+        if op.args and own_w > 1 and dims and dims[0][0].startswith(
+                ("f", "bf")):
+            w = min(self._src_width(comp, a) for a in op.args)
+            size = numel * min(own_w, w)
+        else:
+            size = numel * own_w
+        n = max(_group_size(op.attrs, self.n_devices), 1)
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            return 2.0 * size * frac
+        if kind == "collective-permute":
+            return float(size)
+        return size * frac
+
+    def cost_of(self, comp_name: str, in_fusion: bool = False,
+                mult: float = 1.0) -> Cost:
+        key = (comp_name, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(comp_name)
+        total = Cost()
+        if comp is None:
+            return total
+        self._memo[key] = total      # break cycles defensively
+        for op in comp.ops:
+            kind = op.op[:-6] if op.op.endswith("-start") else op.op
+            if kind in COLLECTIVES:
+                wire = self._collective_cost(op, kind, comp)
+                total.coll_bytes[kind] = total.coll_bytes.get(kind, 0.) + wire
+                total.coll_counts[kind] = total.coll_counts.get(kind, 0) + 1
+                md = _METADATA_RE.search(op.attrs)
+                self.top_collectives.append(
+                    (wire * mult, kind, md.group(1) if md else op.name))
+                continue
+            if op.op.endswith("-done") or op.op in FREE_OPS:
+                continue
+            if op.op in ("convert", "copy"):
+                continue   # CPU dtype-upcast artifacts; fused away on TPU
+            if op.op == "while":
+                cond_body = _CALLED_RE.findall(op.attrs)
+                body = cond = None
+                for ref in cond_body:
+                    if "body=" + "%" + ref in op.attrs or \
+                       f"body=%{ref}" in op.attrs or f"body={ref}" in op.attrs:
+                        body = ref
+                    if f"condition=%{ref}" in op.attrs or \
+                       f"condition={ref}" in op.attrs:
+                        cond = ref
+                trip = _trip_count(self.comps[cond]) if cond in self.comps \
+                    else 1
+                if body:
+                    total.add(self.cost_of(body, in_fusion, mult * trip),
+                              trip)
+                continue
+            if op.op == "conditional":
+                m = _BRANCHES_RE.search(op.attrs)
+                branches = []
+                if m:
+                    branches = [b.strip().lstrip("%")
+                                for b in m.group(1).split(",")]
+                else:
+                    branches = _CALLED_RE.findall(op.attrs)
+                sub = [self.cost_of(b, in_fusion, mult) for b in branches
+                       if b in self.comps]
+                if sub:                       # worst-case branch
+                    worst = max(sub, key=lambda c: c.flops + c.hbm_bytes)
+                    total.add(worst)
+                continue
+            if op.op == "fusion":
+                called = _CALLED_RE.findall(op.attrs)
+                for c in called:
+                    total.add(self.cost_of(c, True, mult))   # flops only
+                if not in_fusion:
+                    self._acc_bytes(total, comp, op, mult)
+                continue
+            if op.op in ("call", "custom-call", "sort", "reduce",
+                         "reduce-window", "select-and-scatter", "scatter",
+                         "map", "async-start"):
+                for c in _CALLED_RE.findall(op.attrs):
+                    if c in self.comps:
+                        total.add(self.cost_of(c, in_fusion, mult))
+                if not in_fusion and op.op != "call":
+                    self._acc_bytes(total, comp, op, mult)
+                continue
+            if op.op == "dot":
+                total.flops += _dot_flops(op, comp)
+                if not in_fusion:
+                    self._acc_bytes(total, comp, op, mult)
+                continue
+            if op.op == "convolution":
+                total.flops += _conv_flops(op, comp)
+                if not in_fusion:
+                    self._acc_bytes(total, comp, op, mult)
+                continue
+            # generic data-moving op at top level
+            if not in_fusion:
+                self._acc_bytes(total, comp, op, mult)
+        return total
+
+    def _acc_bytes(self, total: "Cost", comp: Computation, op: Op,
+                   mult: float):
+        res = shape_bytes(op.type)
+        operands = [self._true_bytes(comp, a) for a in op.args]
+        b = sum(operands) + res
+        md = _METADATA_RE.search(op.attrs)
+        mdname = md.group(1) if md else op.name
+        norm = (mdname + " " + op.name).replace("-", "_")
+        # Pure dtype-convert / copy fusions on big buffers are CPU-backend
+        # artifacts (bf16 caches run as f32 on host): free on TPU.
+        if op.op == "fusion" and op.name.replace("-", "_").startswith(
+                ("convert", "copy_", "wrapped_convert", "wrapped_copy",
+                 "bitcast")):
+            return
+        # In-place aliasing: dynamic-update-slice flows the big buffer
+        # through untouched — real traffic is only the updated slice
+        # (2x: read update + write region).  dynamic-slice reads only the
+        # slice.  XLA aliases these in while loops; counting the full buffer
+        # would claim TBs of phantom traffic for scan-stacked tensors.
+        is_dus = op.op == "dynamic-update-slice" or \
+            "dynamic_update_slice" in norm
+        is_ds = op.op == "dynamic-slice" or \
+            (op.op == "fusion" and "dynamic_slice" in norm
+             and not is_dus)
+        if is_dus and operands:
+            buf = max(operands)
+            if abs(buf - res) <= 0.05 * max(res, 1):
+                b = 2.0 * max(sum(operands) - buf, res - buf, 0.0)
+        elif is_ds:
+            b = 2.0 * res
+        total.hbm_bytes += b
+        if b > 1e6:
+            self.top_hbm.append((b * mult, op.op, mdname))
+
+    def analyze(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry, False, 1.0)
+
+    def heaviest_collectives(self, k: int = 12):
+        agg: dict[tuple[str, str], float] = defaultdict(float)
+        cnt: dict[tuple[str, str], int] = defaultdict(int)
+        for wire, kind, name in self.top_collectives:
+            agg[(kind, name)] += wire
+            cnt[(kind, name)] += 1
+        rows = sorted(((v, k_[0], k_[1], cnt[k_]) for k_, v in agg.items()),
+                      reverse=True)[:k]
+        return [{"wire_bytes": round(v, 1), "op": kind, "count": c,
+                 "source": src[-160:]}
+                for v, kind, src, c in rows]
+
+    def heaviest_hbm(self, k: int = 12):
+        agg: dict[tuple[str, str], float] = defaultdict(float)
+        cnt: dict[tuple[str, str], int] = defaultdict(int)
+        for b, kind, name in self.top_hbm:
+            agg[(kind, name)] += b
+            cnt[(kind, name)] += 1
+        rows = sorted(((v, k_[0], k_[1], cnt[k_]) for k_, v in agg.items()),
+                      reverse=True)[:k]
+        return [{"bytes": round(v, 1), "op": kind, "count": c,
+                 "source": src[-160:]}
+                for v, kind, src, c in rows]
+
+
+def analyze_hlo(text: str, n_devices: int):
+    a = Analyzer(text, n_devices)
+    cost = a.analyze()
+    return cost, a

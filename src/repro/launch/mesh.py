@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (data x model).
+Multi-pod: 2 x 16 x 16 = 512 chips (pod x data x model); the `pod` axis
+carries pure data parallelism so FSDP weight gathering stays intra-pod and
+only gradient all-reduce crosses the (slow) pod interconnect.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """1x1 mesh on whatever single device exists (smoke tests)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))

@@ -1,0 +1,131 @@
+"""ShapeDtypeStruct input stands-ins + sharding specs per (arch x shape).
+
+``input_specs`` never allocates — the dry-run lowers against these structs.
+Cache/param specs are resolved per mesh via AxisEnv.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..nn.sharding import AxisEnv
+
+SDS = jax.ShapeDtypeStruct
+
+
+def param_struct(cfg: ModelConfig, model) -> Any:
+    """Parameter tree as ShapeDtypeStructs (no allocation)."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: model.init(key, cfg))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model=None) -> dict:
+    """Model inputs as ShapeDtypeStructs for the given shape."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": SDS((B, S), i32), "labels": SDS((B, S), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = SDS((B, cfg.audio_frames, cfg.d_model),
+                                  jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = SDS((B, cfg.vision_tokens,
+                                          cfg.vision_embed_dim), jnp.bfloat16)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": SDS((B, S), i32)}
+        if cfg.family == "encdec":
+            out["frames"] = SDS((B, cfg.audio_frames, cfg.d_model),
+                                jnp.bfloat16)
+        if cfg.family == "vlm":
+            out["vision_embeds"] = SDS((B, cfg.vision_tokens,
+                                        cfg.vision_embed_dim), jnp.bfloat16)
+        return out
+    # decode: one new token against a KV/state cache of length S
+    assert model is not None
+    cache = jax.eval_shape(
+        lambda: model.init_cache(cfg, B, S, jnp.bfloat16))
+    return {"token": SDS((B,), i32), "cache": cache,
+            "cur_len": SDS((), i32)}
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, env: AxisEnv) -> Any:
+    """Sharding for train/prefill inputs."""
+    B = shape.global_batch
+    b = env.batch_axes() if B % env.axes_size("batch") == 0 else None
+    bs = (tuple(b) if b and len(b) > 1 else (b[0] if b else None))
+
+    def spec(x):
+        return NamedSharding(env.mesh, P(bs, *([None] * (len(x.shape) - 1))))
+
+    if shape.kind == "train":
+        return {"batch": jax.tree.map(spec, input_specs(cfg, shape)["batch"])}
+    return jax.tree.map(spec, input_specs(cfg, shape))
+
+
+def serve_shard_descr(cfg: ModelConfig, shape: ShapeConfig, env: AxisEnv):
+    """How decode shards the KV sequence (flash-decode shard_map axes)."""
+    B = shape.global_batch
+    if B % env.mesh.shape["data"] == 0:
+        return {"kv_axes": ("model",), "batch_axis": "data"}
+    # batch too small to shard (long_500k): spread KV over the whole pod
+    return {"kv_axes": ("data", "model"), "batch_axis": None}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, env: AxisEnv,
+                cache_struct: Any) -> Any:
+    """Sharding for decode caches, by path+shape heuristics."""
+    descr = serve_shard_descr(cfg, shape, env)
+    kv_axes = descr["kv_axes"]
+    b_ax = descr["batch_axis"]
+    mesh = env.mesh
+    kv_size = int(np.prod([mesh.shape[a] for a in kv_axes]))
+    m_size = mesh.shape["model"]
+
+    def one(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        name = names[-1] if names else None
+        sh = leaf.shape
+        spec = [None] * len(sh)
+        if name in ("k", "v", "xk", "xv") and len(sh) == 5:
+            L, B, S, KvH, Dh = sh
+            if b_ax and B % mesh.shape[b_ax] == 0:
+                spec[1] = b_ax
+            if S % kv_size == 0 and name in ("k", "v"):
+                spec[2] = kv_axes if len(kv_axes) > 1 else kv_axes[0]
+            elif KvH % m_size == 0:
+                spec[3] = "model"
+        elif name == "conv" and len(sh) == 4:
+            L, B, K, C = sh
+            if b_ax and B % mesh.shape[b_ax] == 0:
+                spec[1] = b_ax
+            if C % m_size == 0:
+                spec[3] = "model"
+        elif name == "ssd" and len(sh) == 5:
+            L, B, H, Pd, N = sh
+            if b_ax and B % mesh.shape[b_ax] == 0:
+                spec[1] = b_ax
+            if H % m_size == 0:
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+def token_spec(shape: ShapeConfig, env: AxisEnv):
+    B = shape.global_batch
+    b = "data" if B % env.mesh.shape["data"] == 0 else None
+    return NamedSharding(env.mesh, P(b))
+
+
+def replicated(env: AxisEnv):
+    return NamedSharding(env.mesh, P())

@@ -1,0 +1,122 @@
+"""jit-able train / prefill / decode steps with full sharding assignments."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..nn.sharding import AxisEnv, param_shardings
+from ..training import optimizer as opt_lib
+from . import specs as specs_lib
+
+
+def opt_shardings(pshard: Any, env: AxisEnv) -> dict:
+    return {"m": pshard, "v": pshard,
+            "count": NamedSharding(env.mesh, P())}
+
+
+def make_train_step(cfg: ModelConfig, model, env: AxisEnv | None,
+                    opt_cfg: opt_lib.OptConfig | None = None):
+    opt_cfg = opt_cfg or opt_lib.OptConfig()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, cfg, batch, env=env))(params)
+        new_params, new_opt, metrics = opt_lib.update(
+            opt_cfg, grads, opt_state, params)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, model, env: AxisEnv | None):
+    def prefill_step(params, inputs):
+        if cfg.family == "encdec":
+            return model.prefill(params, cfg, inputs["tokens"],
+                                 inputs["frames"], env=env)
+        if cfg.family == "vlm":
+            return model.prefill(params, cfg, inputs["tokens"], env=env,
+                                 vision_embeds=inputs["vision_embeds"])
+        if cfg.family in ("ssm", "hybrid"):
+            # SSM prefill == forward (state cache is the scan carry);
+            # logits of last position are what serving consumes.
+            h, _ = model.forward(params, cfg, inputs["tokens"], env=env,
+                                 remat=False)
+            return h[:, -1, :]
+        return model.prefill(params, cfg, inputs["tokens"], env=env)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, model, env: AxisEnv | None,
+                     serve_shard=None):
+    def decode_step(params, token, cache, cur_len):
+        return model.decode_step(params, cfg, token, cache, cur_len,
+                                 env=env, serve_shard=serve_shard)
+
+    return decode_step
+
+
+def _sds_with(struct, shard):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (lowering inputs)."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct, shard)
+
+
+def lower_cell(cfg: ModelConfig, model, shape: ShapeConfig, mesh,
+               multi_pod: bool = False, donate: bool = True):
+    """Build + lower the right step for one (arch x shape x mesh) cell.
+
+    Returns the jax ``Lowered`` object (call .compile() on it).  Sharding
+    assignments ride on the ShapeDtypeStructs.
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    if shape.kind != "train":
+        # serving runs on bf16 weights (no optimizer masters needed)
+        cfg = dataclasses.replace(cfg, param_dtype=jnp.bfloat16)
+    env = AxisEnv(mesh, multi_pod=multi_pod,
+                  pure_dp=getattr(cfg, "pure_dp", False))
+    pstruct = specs_lib.param_struct(cfg, model)
+    pshard = param_shardings(pstruct, env)
+    p_sds = _sds_with(pstruct, pshard)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, model, env)
+        ostruct = jax.eval_shape(opt_lib.init, pstruct)
+        oshard = opt_shardings(pshard, env)
+        o_sds = _sds_with(ostruct, oshard)
+        batch = specs_lib.input_specs(cfg, shape)["batch"]
+        bshard = specs_lib.batch_specs(cfg, shape, env)["batch"]
+        b_sds = _sds_with(batch, bshard)
+        fn = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+        return fn.lower(p_sds, o_sds, b_sds)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, model, env)
+        inputs = specs_lib.input_specs(cfg, shape)
+        ishard = specs_lib.batch_specs(cfg, shape, env)
+        i_sds = _sds_with(inputs, ishard)
+        fn = jax.jit(step)
+        return fn.lower(p_sds, i_sds)
+
+    # decode
+    descr = specs_lib.serve_shard_descr(cfg, shape, env)
+    step = make_decode_step(cfg, model, env, serve_shard=descr)
+    ins = specs_lib.input_specs(cfg, shape, model=model)
+    c_sds = _sds_with(ins["cache"],
+                      specs_lib.cache_specs(cfg, shape, env, ins["cache"]))
+    t_sds = jax.ShapeDtypeStruct(ins["token"].shape, ins["token"].dtype,
+                                 sharding=specs_lib.token_spec(shape, env))
+    l_sds = jax.ShapeDtypeStruct((), ins["cur_len"].dtype,
+                                 sharding=specs_lib.replicated(env))
+    fn = jax.jit(step, donate_argnums=(2,) if donate else ())
+    return fn.lower(p_sds, t_sds, c_sds, l_sds)

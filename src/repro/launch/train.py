@@ -1,0 +1,133 @@
+"""Training driver: ``python -m repro.launch.train --arch olmo-1b --smoke``.
+
+Wires together: model zoo, synthetic pipeline, AdamW, optional int8
+gradient compression w/ error feedback, async atomic checkpointing,
+restart-from-latest, and the straggler watchdog.  On this CPU container it
+runs reduced configs; on a pod the same driver + make_production_mesh
+trains the full configs (the dry-run proves those lower+compile).
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..data.pipeline import DataConfig, lm_batch
+from ..models import registry
+from ..nn.sharding import AxisEnv
+from ..training import checkpoint as ckpt_lib
+from ..training import compression as comp_lib
+from ..training import optimizer as opt_lib
+from ..training.elastic import StepWatchdog, make_elastic_mesh, reshard
+from .mesh import make_host_mesh
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 50,
+          batch: int = 8, seq: int = 64, ckpt_dir: str | None = None,
+          ckpt_every: int = 20, compress_grads: bool = False,
+          use_mesh: bool = False, lr: float = 3e-3, log_every: int = 10):
+    cfg, model = registry.get(arch, smoke=smoke)
+    if cfg.family == "encdec":
+        seq = max(seq, 16)
+    env = None
+    if use_mesh:
+        mesh = make_elastic_mesh(model_parallel=1)
+        env = AxisEnv(mesh)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, cfg)
+    opt_cfg = opt_lib.OptConfig(lr=lr, warmup_steps=10, total_steps=steps)
+    opt_state = opt_lib.init(params)
+    err_state = comp_lib.init_error_state(params) if compress_grads else None
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch)
+    start = 0
+    ck = None
+    if ckpt_dir:
+        ck = ckpt_lib.AsyncCheckpointer(ckpt_dir)
+        last = ckpt_lib.latest_step(ckpt_dir)
+        if last is not None:
+            (params, opt_state), start = ckpt_lib.restore(
+                ckpt_dir, (params, opt_state), last)
+            print(f"resumed from step {start}")
+
+    def loss_of(p, b):
+        extra = {}
+        if cfg.family == "encdec":
+            b = dict(b)
+            b["frames"] = jax.random.normal(
+                jax.random.PRNGKey(1), (batch, cfg.audio_frames, cfg.d_model))
+        if cfg.family == "vlm":
+            b = dict(b)
+            b["vision_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(2),
+                (batch, cfg.vision_tokens, cfg.vision_embed_dim))
+        return model.loss_fn(p, cfg, b, env=env, remat=False)
+
+    @jax.jit
+    def step_fn(p, o, e, b):
+        loss, grads = jax.value_and_grad(loss_of)(p, b)
+        if e is not None:
+            grads, e = comp_lib.compress_grads(grads, e)
+        p, o, metrics = opt_lib.update(opt_cfg, grads, o, p)
+        metrics["loss"] = loss
+        return p, o, e, metrics
+
+    stop = {"flag": False}
+    prev = signal.signal(signal.SIGTERM,
+                         lambda *_: stop.__setitem__("flag", True))
+    wd = StepWatchdog()
+    losses = []
+    for s in range(start, steps):
+        wd.start()
+        b = lm_batch(dcfg, s)
+        params, opt_state, err_state, m = step_fn(params, opt_state,
+                                                  err_state, b)
+        losses.append(float(m["loss"]))
+        wd.stop(s)
+        if s % log_every == 0 or s == steps - 1:
+            print(f"step {s:5d} loss {float(m['loss']):8.4f} "
+                  f"gnorm {float(m['grad_norm']):8.3f} "
+                  f"lr {float(m['lr']):.2e}", flush=True)
+        if ck and (s + 1) % ckpt_every == 0:
+            ck.submit((params, opt_state), s + 1)
+        if stop["flag"]:
+            print("SIGTERM: checkpoint + clean exit")
+            if ck:
+                ck.submit((params, opt_state), s + 1)
+            break
+    if ck:
+        ck.wait()
+        ck.close()
+    signal.signal(signal.SIGTERM, prev)
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b",
+                    choices=registry.arch_names())
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--mesh", action="store_true")
+    args = ap.parse_args()
+    t0 = time.time()
+    _, losses = train(args.arch, smoke=args.smoke, steps=args.steps,
+                      batch=args.batch, seq=args.seq,
+                      ckpt_dir=args.ckpt_dir,
+                      compress_grads=args.compress_grads,
+                      use_mesh=args.mesh)
+    print(f"done in {time.time()-t0:.1f}s; "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

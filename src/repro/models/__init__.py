@@ -1,0 +1,1 @@
+from . import mamba_lm, registry, transformer, whisper  # noqa: F401

@@ -1,0 +1,222 @@
+"""Mamba2 (pure SSM) and Zamba2 (hybrid) language models.
+
+mamba2-2.7b  [arXiv:2405.21060]: 64 stacked SSD blocks, attention-free.
+zamba2-1.2b  [arXiv:2411.15242]: Mamba2 backbone + ONE weight-shared
+transformer block (full attention + MLP) invoked after every
+``cfg.attn_every`` mamba layers.  We scan the mamba backbone in chunks of
+``attn_every`` layers so the shared block appears a handful of times in the
+HLO with *tied* weights (true to the paper's parameter sharing).
+
+At ``long_500k`` the shared attention runs with a sliding window
+(``cfg.long_context_window``) — DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import attention as attn_lib
+from ..nn import core, ssd
+from ..nn.sharding import AxisEnv, constrain
+
+
+def init(key, cfg) -> core.Params:
+    dtype = cfg.param_dtype
+    ke, kl, ks, kn = jax.random.split(key, 4)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm": core.rmsnorm_init(cfg.d_model, dtype),
+                "mamba": ssd.mamba2_init(k1, cfg.ssm, dtype)}
+
+    params = {
+        "embed": core.embed_init_params(ke, cfg.vocab, cfg.d_model, dtype),
+        "layers": jax.vmap(one)(layer_keys),
+        "final_norm": core.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.attn_every:                       # zamba2 shared block (tied)
+        ka, km = jax.random.split(ks)
+        params["shared"] = {
+            "norm1": core.rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn_lib.attn_init(ka, cfg.d_model, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.head_dim, dtype),
+            "norm2": core.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": core.mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+        }
+    return params
+
+
+def _res_axes(cfg):
+    return ("batch", "tensor", None) if cfg.sequence_parallel \
+        else ("batch", None, None)
+
+
+def _mamba_layer(p, cfg, x, env):
+    h = core.rmsnorm_apply(p["norm"], x)
+    y = ssd.mamba2_apply(p["mamba"], cfg.ssm, h)
+    x = x + y
+    return constrain(x, env, _res_axes(cfg)), None
+
+
+def _shared_block(p, cfg, x, env, window):
+    B, S, _ = x.shape
+    h = core.rmsnorm_apply(p["norm1"], x)
+    q, k, v = attn_lib.qkv_proj(p["attn"], h)
+    pos = jnp.arange(S)
+    q = attn_lib.rope(q, pos[None, :], cfg.rope_theta)
+    k = attn_lib.rope(k, pos[None, :], cfg.rope_theta)
+    if S > 2048:
+        o = attn_lib.chunked_attention(q, k, v, causal=True, window=window,
+                                       chunk_q=cfg.attn_chunk_q,
+                                       chunk_k=cfg.attn_chunk_k)
+    else:
+        o = attn_lib.sdpa(q, k, v, causal=True, window=window)
+    x = x + attn_lib.out_proj(p["attn"], o)
+    h = core.rmsnorm_apply(p["norm2"], x)
+    x = x + core.mlp_apply(p["mlp"], h)
+    return constrain(x, env, _res_axes(cfg))
+
+
+def _backbone(params, cfg, h, env, window, remat=True):
+    body = lambda x, p: _mamba_layer(p, cfg, x, env)
+    if remat:
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.dots_saveable,
+            "dots_no_batch":
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }[cfg.remat_policy]
+        body = jax.checkpoint(body, policy=policy)
+    if not cfg.attn_every:
+        h, _ = jax.lax.scan(body, h, params["layers"])
+        return h
+    # zamba2: chunks of `attn_every` mamba layers + shared attn block;
+    # trailing (n_layers % attn_every) mamba layers run after the last
+    # shared invocation (38 = 6x6 + 2).
+    k = cfg.attn_every
+    n_full = cfg.n_layers // k
+    for c in range(n_full):
+        chunk = jax.tree.map(lambda a: a[c * k:(c + 1) * k], params["layers"])
+        h, _ = jax.lax.scan(body, h, chunk)
+        h = _shared_block(params["shared"], cfg, h, env, window)
+    rem = cfg.n_layers % k
+    if rem:
+        tail = jax.tree.map(lambda a: a[-rem:], params["layers"])
+        h, _ = jax.lax.scan(body, h, tail)
+    return h
+
+
+def forward(params, cfg, tokens, *, env: AxisEnv | None = None, remat=True,
+            window=None):
+    h = core.embed_apply(params["embed"], tokens, cfg.compute_dtype)
+    h = constrain(h, env, _res_axes(cfg))
+    h = _backbone(params, cfg, h, env, window, remat=remat)
+    h = core.rmsnorm_apply(params["final_norm"], h)
+    return h, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch, *, env=None, remat=True):
+    h, _ = forward(params, cfg, batch["tokens"], env=env, remat=remat)
+    return core.chunked_softmax_xent(params["embed"]["table"], h,
+                                     batch["labels"], batch.get("mask"),
+                                     chunk=min(cfg.ce_chunk, h.shape[1]))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype):
+    s = cfg.ssm
+    cache = {
+        "conv": jnp.zeros((cfg.n_layers, batch, s.d_conv - 1, s.conv_dim),
+                          dtype),
+        "ssd": jnp.zeros((cfg.n_layers, batch, s.n_heads, s.head_dim,
+                          s.d_state), jnp.float32),
+    }
+    if cfg.attn_every:
+        n_inv = cfg.n_layers // cfg.attn_every
+        kv_len = min(max_len, cfg.long_context_window or max_len) \
+            if max_len > 32_768 else max_len
+        cache["k"] = jnp.zeros((n_inv, batch, kv_len, cfg.n_kv_heads,
+                                cfg.head_dim), dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    return cache
+
+
+def decode_step(params, cfg, token, cache, cur_len, *, env=None,
+                serve_shard=None):
+    """One token through the SSM backbone (+ shared attn for zamba2)."""
+    B = token.shape[0]
+    h = core.embed_apply(params["embed"], token[:, None],
+                         cfg.compute_dtype)[:, 0]
+
+    def mamba_body(x, xs):
+        p, conv_c, ssd_c = xs
+        hn = core.rmsnorm_apply(p["norm"], x[:, None, :])[:, 0]
+        y, new = ssd.mamba2_step(p["mamba"], cfg.ssm, hn,
+                                 {"conv": conv_c, "ssd": ssd_c})
+        return x + y, (new["conv"], new["ssd"])
+
+    if not cfg.attn_every:
+        h, (conv_n, ssd_n) = jax.lax.scan(
+            mamba_body, h, (params["layers"], cache["conv"], cache["ssd"]))
+        h = core.rmsnorm_apply(params["final_norm"], h[:, None, :])[:, 0]
+        logits = core.unembed_logits(params["embed"]["table"], h)
+        return logits, {"conv": conv_n, "ssd": ssd_n}
+
+    k = cfg.attn_every
+    n_full = cfg.n_layers // k
+    rem = cfg.n_layers % k
+    conv_out, ssd_out, k_out, v_out = [], [], [], []
+    sp = params["shared"]
+    kv_len = cache["k"].shape[2]    # ring-buffer length (= window when long)
+    for c in range(n_full):
+        sl_c = jax.tree.map(lambda a: a[c * k:(c + 1) * k], params["layers"])
+        h, (cn, sn) = jax.lax.scan(
+            mamba_body, h,
+            (sl_c, cache["conv"][c * k:(c + 1) * k],
+             cache["ssd"][c * k:(c + 1) * k]))
+        conv_out.append(cn)
+        ssd_out.append(sn)
+        # shared attention block, one invocation's KV cache
+        hn = core.rmsnorm_apply(sp["norm1"], h[:, None, :])
+        q, kq, vq = attn_lib.qkv_proj(sp["attn"], hn)
+        pos = jnp.full((1, 1), cur_len)
+        q = attn_lib.rope(q, pos, cfg.rope_theta)
+        kq = attn_lib.rope(kq, pos, cfg.rope_theta)
+        slot = jnp.mod(cur_len, kv_len)     # ring buffer for windowed cache
+        if serve_shard is not None and env is not None:
+            o, kc, vc = attn_lib.sharded_decode_attention(
+                env.mesh, q[:, 0], cache["k"][c], cache["v"][c], slot,
+                kv_axes=serve_shard["kv_axes"],
+                batch_axis=serve_shard.get("batch_axis"),
+                k_new=kq[:, 0], v_new=vq[:, 0],
+                valid_len=jnp.minimum(cur_len + 1, kv_len))
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"][c], kq.astype(cache["k"].dtype), slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"][c], vq.astype(cache["v"].dtype), slot, axis=1)
+            o = attn_lib.decode_attention(q[:, 0], kc, vc,
+                                          jnp.minimum(cur_len + 1, kv_len))
+        h = h + attn_lib.out_proj(sp["attn"], o[:, None, :])[:, 0]
+        hn = core.rmsnorm_apply(sp["norm2"], h[:, None, :])
+        h = h + core.mlp_apply(sp["mlp"], hn)[:, 0]
+        k_out.append(kc)
+        v_out.append(vc)
+    if rem:
+        tail = jax.tree.map(lambda a: a[-rem:], params["layers"])
+        h, (cn, sn) = jax.lax.scan(
+            mamba_body, h, (tail, cache["conv"][-rem:], cache["ssd"][-rem:]))
+        conv_out.append(cn)
+        ssd_out.append(sn)
+    h = core.rmsnorm_apply(params["final_norm"], h[:, None, :])[:, 0]
+    logits = core.unembed_logits(params["embed"]["table"], h)
+    new_cache = {
+        "conv": jnp.concatenate(conv_out, 0),
+        "ssd": jnp.concatenate(ssd_out, 0),
+        "k": jnp.stack(k_out, 0), "v": jnp.stack(v_out, 0),
+    }
+    return logits, new_cache

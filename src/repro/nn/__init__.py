@@ -1,0 +1,1 @@
+from . import attention, core, moe, sharding, ssd  # noqa: F401

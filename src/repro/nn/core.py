@@ -1,0 +1,171 @@
+"""Minimal functional NN substrate (no flax/haiku available offline).
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every module is a
+pair of functions ``init(key, cfg) -> params`` / ``apply(params, x, ...)``.
+Sharding is attached by *path-regex rules* (see sharding.py) so parameter
+trees never carry metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of jnp arrays
+
+
+# ---------------------------------------------------------------------------
+# dtype policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+
+    def cast(self, x):
+        return jax.tree.map(lambda a: a.astype(self.compute_dtype), x)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, dtype, stddev: float):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    """LeCun-normal style init over the contracting dimension."""
+    if fan_in is None:
+        fan_in = shape[0]
+    return trunc_normal(key, shape, dtype, 1.0 / math.sqrt(max(fan_in, 1)))
+
+
+def embed_init(key, shape, dtype):
+    return trunc_normal(key, shape, dtype, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# primitive layers
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def nonparametric_layernorm(x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """OLMo-style LayerNorm without learnable scale/bias [arXiv:2402.00838]."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+def norm_init(kind: str, dim: int, dtype) -> Params:
+    if kind == "nonparametric_ln":
+        return {}
+    return rmsnorm_init(dim, dtype)
+
+
+def norm_apply(kind: str, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if kind == "nonparametric_ln":
+        return nonparametric_layernorm(x)
+    return rmsnorm_apply(params, x)
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, gated: bool = True) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(k1, (d_model, d_ff), dtype),
+        "wo": dense_init(k2, (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+    if gated:
+        p["wg"] = dense_init(k3, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, activation: str = "silu") -> jnp.ndarray:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[activation]
+    h = x @ params["wi"].astype(x.dtype)
+    if "wg" in params:
+        h = act(x @ params["wg"].astype(x.dtype)) * h
+    else:
+        h = act(h)
+    return h @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init_params(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": embed_init(key, (vocab, d_model), dtype)}
+
+
+def embed_apply(params: Params, tokens: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def unembed_logits(table: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Tied unembedding: h @ table.T."""
+    return h @ table.astype(h.dtype).T
+
+
+def chunked_softmax_xent(table: jnp.ndarray, h: jnp.ndarray, labels: jnp.ndarray,
+                         mask: jnp.ndarray | None = None, chunk: int = 512) -> jnp.ndarray:
+    """Cross-entropy over a huge vocab without materialising (B,S,V) at once.
+
+    Scans over sequence chunks; per-chunk logits are (B, chunk, V).  This is
+    the standard memory-side optimisation for vocab>=100k heads (gemma3:
+    262144) and keeps the dry-run memory_analysis honest.
+    """
+    B, S, D = h.shape
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    hs = h.reshape(B, n, chunk, D).swapaxes(0, 1)            # (n, B, c, D)
+    ls = labels.reshape(B, n, chunk).swapaxes(0, 1)          # (n, B, c)
+    if mask is None:
+        ms = jnp.ones((n, B, chunk), dtype=jnp.float32)
+    else:
+        ms = mask.reshape(B, n, chunk).swapaxes(0, 1).astype(jnp.float32)
+
+    def body(carry, xs):
+        hc, lc, mc = xs
+        logits = (hc @ table.astype(hc.dtype).T).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return carry + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls, ms))
+    denom = jnp.maximum(jnp.sum(ms), 1.0)
+    return total / denom
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def count_params(params: Params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(p.size * p.dtype.itemsize) for p in jax.tree.leaves(params))

@@ -1,0 +1,137 @@
+"""Path-regex sharding rules: logical axes -> mesh PartitionSpecs.
+
+Logical axes:
+  batch   — activation batch dim           -> ('data',) or ('pod','data')
+  fsdp    — weight d_model-like dims       -> ('data',)   (ZeRO-3 style)
+  tensor  — heads / d_ff / experts / vocab -> ('model',)
+
+A logical axis is *dropped* (None) whenever the dim size does not divide the
+mapped mesh axes — e.g. gemma3's 4 KV heads on a 16-way model axis fall back
+to replication instead of failing to lower.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class AxisEnv:
+    """Mapping from logical axis names to tuples of mesh axis names."""
+
+    def __init__(self, mesh: Mesh, *, multi_pod: bool = False,
+                 pure_dp: bool = False):
+        self.mesh = mesh
+        batch = ("pod", "data") if multi_pod else ("data",)
+        if pure_dp:
+            # ZeRO-style pure data parallelism: batch over every axis, no
+            # tensor sharding anywhere (weights are fsdp-sharded over the
+            # whole mesh and gathered just-in-time).  Wins when per-layer
+            # weights << per-layer activations (SSM blocks).
+            self.table = {"batch": batch + ("model",),
+                          "fsdp": ("data", "model"), "tensor": ()}
+        else:
+            self.table = {"batch": batch, "fsdp": ("data",),
+                          "tensor": ("model",)}
+
+    def mesh_axes(self, logical: str | None):
+        if logical is None:
+            return None
+        return self.table[logical]
+
+    def axes_size(self, logical: str | None) -> int:
+        if logical is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.table[logical]]))
+
+    def spec(self, shape: Sequence[int], logical: Sequence[str | None]) -> P:
+        """Resolve logical axes to a PartitionSpec, dropping non-dividers."""
+        assert len(shape) == len(logical), (shape, logical)
+        out = []
+        for dim, ax in zip(shape, logical):
+            if ax is None or dim % self.axes_size(ax) != 0 or \
+                    not self.table[ax]:
+                out.append(None)
+            else:
+                axes = self.table[ax]
+                out.append(axes if len(axes) > 1 else axes[0])
+        return P(*out)
+
+    def batch_axes(self):
+        return self.table["batch"]
+
+
+# (path-regex, logical axes for the param's own rank — a leading stacked-layer
+#  dim, if present, is auto-prepended as None).
+PARAM_RULES: list[tuple[str, tuple]] = [
+    (r".*embed/table$",          ("tensor", "fsdp")),
+    (r".*(lm_head|unembed)$",    ("fsdp", "tensor")),
+    (r".*attn/wq$",              ("fsdp", "tensor", None)),
+    (r".*attn/w[kv]$",           ("fsdp", "tensor", None)),
+    (r".*attn/wo$",              ("tensor", None, "fsdp")),
+    (r".*mlp/w[ig]$",            ("fsdp", "tensor")),
+    (r".*mlp/wo$",               ("tensor", "fsdp")),
+    (r".*moe/router$",           (None, None)),
+    (r".*moe/w[ig]$",            ("tensor", "fsdp", None)),
+    (r".*moe/wo$",               ("tensor", None, "fsdp")),
+    (r".*mamba/in_proj$",        ("fsdp", "tensor")),
+    (r".*mamba/out_proj$",       ("tensor", "fsdp")),
+    (r".*mamba/conv_w$",         (None, None, "tensor")),
+    (r".*mamba/conv_b$",         ("tensor",)),
+    (r".*mamba/(A_log|D|dt_bias)$", (None,)),
+    (r".*mamba/norm/scale$",     ("tensor",)),
+    (r".*/scale$",               (None,)),
+    (r".*(conv_frontend|patch_proj|pos_embed).*", None),  # replicate stubs
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def logical_for(path_str: str, rank: int) -> tuple:
+    for pat, logical in PARAM_RULES:
+        if re.match(pat, path_str):
+            if logical is None:
+                return (None,) * rank
+            if len(logical) == rank:
+                return logical
+            if len(logical) == rank - 1:           # stacked-layer leading dim
+                return (None,) + logical
+            # rank mismatch: replicate rather than mis-shard
+            return (None,) * rank
+    return (None,) * rank
+
+
+def param_specs(params: Any, env: AxisEnv) -> Any:
+    """PartitionSpec pytree matching `params` (by path-regex rules)."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        return env.spec(leaf.shape, logical_for(ps, leaf.ndim))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params: Any, env: AxisEnv) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(env.mesh, s),
+                        param_specs(params, env),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x: jnp.ndarray, env: AxisEnv | None, logical: Sequence[str | None]):
+    """with_sharding_constraint by logical axes (no-op when env is None)."""
+    if env is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(env.mesh, env.spec(x.shape, logical)))

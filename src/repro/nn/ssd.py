@@ -1,0 +1,250 @@
+"""Mamba2 / SSD (state-space duality) substrate [arXiv:2405.21060].
+
+Three paths:
+  * ``ssd_reference``  — direct sequential recurrence (oracle, O(S) steps).
+  * ``ssd_chunked``    — chunkwise-parallel SSD: quadratic intra-chunk block
+                         + scan over chunk states.  XLA path for training /
+                         prefill; never materialises more than
+                         (B, H, chunk, chunk) decay scores.
+  * Pallas kernel      — kernels/ssd_scan.py (TPU target).
+
+Plus the full Mamba2 block (in_proj -> causal depthwise conv -> SSD ->
+gated RMSNorm -> out_proj) with a single-token ``step`` path for decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import core
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64       # P
+    expand: int = 2
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 64
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+# ---------------------------------------------------------------------------
+# core SSD math
+# ---------------------------------------------------------------------------
+
+def ssd_reference(x, dt, A, B, C, state0=None):
+    """Sequential oracle.  x:(b,s,h,p) dt:(b,s,h) A:(h,) B/C:(b,s,g,n).
+
+    Returns y:(b,s,h,p), final state:(b,h,p,n).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)           # (b,s,h,n)
+    Ch = jnp.repeat(C, rep, axis=2)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(state, t):
+        xt, dtt, Bt, Ct = x[:, t], dt[:, t], Bh[:, t], Ch[:, t]
+        dA = jnp.exp(dtt.astype(jnp.float32) * A)              # (b,h)
+        upd = (dtt[..., None, None].astype(jnp.float32)
+               * xt[..., None].astype(jnp.float32)
+               * Bt[:, :, None, :].astype(jnp.float32))        # (b,h,p,n)
+        state = state * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct.astype(jnp.float32))
+        return state, y
+
+    state, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state
+
+
+def ssd_chunked(x, dt, A, B, C, state0=None, chunk=64):
+    """Chunkwise-parallel SSD (the 'dual' quadratic-within-chunk form)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    s_orig = s
+    if s % chunk:                      # pad tail (dt=0 -> state unchanged)
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s += pad
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xr = x.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtr = dt.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    Br = B.reshape(b, nc, chunk, g, n).transpose(1, 0, 2, 3, 4)
+    Cr = C.reshape(b, nc, chunk, g, n).transpose(1, 0, 2, 3, 4)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, p, n), f32)
+
+    def chunk_step(state, xs):
+        xc, dtc, Bc, Cc = xs                       # (b,L,h,p) (b,L,h) (b,L,g,n)
+        L = xc.shape[1]
+        dA = dtc.astype(f32) * A                   # (b,L,h)
+        cA = jnp.cumsum(dA, axis=1)                # inclusive cumsum
+        seg = cA[:, :, None, :] - cA[:, None, :, :]          # (b,i,j,h)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        Ldec = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)   # (b,i,j,h)
+        Bh = jnp.repeat(Bc, rep, axis=2).astype(f32)          # (b,L,h,n)
+        Ch = jnp.repeat(Cc, rep, axis=2).astype(f32)
+        xdt = xc.astype(f32) * dtc[..., None].astype(f32)     # (b,L,h,p)
+        # intra-chunk: y_i = sum_{j<=i} (C_i . B_j) Ldec_ij xdt_j
+        cb = jnp.einsum("bihn,bjhn->bijh", Ch, Bh)
+        w = cb * Ldec                                         # (b,i,j,h)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xdt)
+        # inter-chunk: y_i += C_i . state_prev * exp(cA_i)
+        y_inter = jnp.einsum("bihn,bhpn->bihp", Ch, state) * \
+            jnp.exp(cA)[..., None]
+        # new state: state*exp(sum dA) + sum_j exp(cA_L - cA_j) B_j xdt_j
+        decay_out = jnp.exp(cA[:, -1:, :] - cA)               # (b,L,h)
+        upd = jnp.einsum("bjhn,bjhp,bjh->bhpn", Bh, xdt, decay_out)
+        state = state * jnp.exp(cA[:, -1, :])[..., None, None] + upd
+        return state, (y_intra + y_inter).astype(x.dtype)
+
+    state, ys = jax.lax.scan(chunk_step, state0, (xr, dtr, Br, Cr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y[:, :s_orig], state
+
+
+def ssd_step(state, xt, dtt, A, Bt, Ct):
+    """Single-token recurrence for decode.
+
+    state:(b,h,p,n) xt:(b,h,p) dtt:(b,h) Bt/Ct:(b,g,n) -> (y, state).
+    """
+    h = xt.shape[1]
+    g = Bt.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(Bt, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Ct, rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dtt.astype(jnp.float32) * A)
+    upd = (dtt[..., None, None].astype(jnp.float32)
+           * xt[..., None].astype(jnp.float32) * Bh[:, :, None, :])
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y.astype(xt.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, cfg: SSDConfig, dtype) -> core.Params:
+    ks = jax.random.split(key, 5)
+    di, h = cfg.d_inner, cfg.n_heads
+    proj_out = 2 * di + 2 * cfg.n_groups * cfg.d_state + h
+    dt = jnp.exp(jax.random.uniform(ks[2], (h,)) *
+                 (math.log(cfg.dt_max) - math.log(cfg.dt_min)) +
+                 math.log(cfg.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return {
+        "in_proj": core.dense_init(ks[0], (cfg.d_model, proj_out), dtype),
+        "conv_w": core.trunc_normal(ks[1], (cfg.d_conv, 1, cfg.conv_dim), dtype,
+                                    1.0 / math.sqrt(cfg.d_conv)),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype),
+        "A_log": jnp.log(jnp.ones((h,)) * 1.0 +
+                         jax.random.uniform(ks[3], (h,)) * 15.0),
+        "D": jnp.ones((h,)),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": core.rmsnorm_init(di, dtype),
+        "out_proj": core.dense_init(ks[4], (di, cfg.d_model), dtype, fan_in=di),
+    }
+
+
+def _split_proj(cfg: SSDConfig, zxbcdt):
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + cfg.conv_dim], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv1d.  xBC: (B,S,C); w: (K,1,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    y = jax.lax.conv_general_dilated(
+        pad, w.astype(xBC.dtype), window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xBC.shape[-1])
+    return jax.nn.silu(y + b.astype(xBC.dtype))
+
+
+def mamba2_apply(params, cfg: SSDConfig, x, *, chunk=None,
+                 ssd_fn=None):
+    """x: (B,S,D) -> (B,S,D)."""
+    Bsz, S, D = x.shape
+    di, g, n, h, p = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads, cfg.head_dim
+    dt_ = x.dtype
+    zxbcdt = x @ params["in_proj"].astype(dt_)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs, B_, C_ = jnp.split(xBC, [di, di + g * n], axis=-1)
+    xs = xs.reshape(Bsz, S, h, p)
+    B_ = B_.reshape(Bsz, S, g, n)
+    C_ = C_.reshape(Bsz, S, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    if ssd_fn is None:
+        ssd_fn = lambda *a: ssd_chunked(*a, chunk=(chunk or cfg.chunk))
+    y, _ = ssd_fn(xs, dt, A, B_, C_)
+    y = y + xs * params["D"][None, None, :, None].astype(dt_)
+    y = y.reshape(Bsz, S, di)
+    y = core.rmsnorm_apply(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"].astype(dt_)
+
+
+def mamba2_init_cache(cfg: SSDConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        "ssd": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                         jnp.float32),
+    }
+
+
+def mamba2_step(params, cfg: SSDConfig, x_t, cache):
+    """Single token decode.  x_t: (B,D) -> (y_t, cache)."""
+    Bsz, D = x_t.shape
+    di, g, n, h, p = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads, cfg.head_dim
+    dt_ = x_t.dtype
+    zxbcdt = x_t @ params["in_proj"].astype(dt_)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # rolling conv buffer
+    hist = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)
+    new_conv = hist[:, 1:, :]
+    w = params["conv_w"][:, 0, :].astype(dt_)                  # (K,C)
+    xBC = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w) +
+                      params["conv_b"].astype(dt_))
+    xs, B_, C_ = jnp.split(xBC, [di, di + g * n], axis=-1)
+    xs = xs.reshape(Bsz, h, p)
+    B_ = B_.reshape(Bsz, g, n)
+    C_ = C_.reshape(Bsz, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, new_ssd = ssd_step(cache["ssd"], xs, dt, A, B_, C_)
+    y = y + xs * params["D"][None, :, None].astype(dt_)
+    y = y.reshape(Bsz, di)
+    y = core.rmsnorm_apply(params["norm"], y * jax.nn.silu(z))
+    y = y @ params["out_proj"].astype(dt_)
+    return y, {"conv": new_conv, "ssd": new_ssd}

@@ -1,0 +1,95 @@
+"""Elastic scaling + fault-tolerance utilities.
+
+Failure model at 1000+ nodes: a pod loses chips (or a whole pod drops) and
+the job must resume on a *smaller or larger* mesh from the last checkpoint.
+Checkpoints are mesh-agnostic (host numpy per leaf — checkpoint.py), so
+elasticity is: build a new mesh from the surviving device count, re-derive
+shardings from the same logical rules, and device_put the restored tree.
+
+Straggler mitigation: synchronous data parallelism is gang-scheduled, so
+the defense is (a) step-time watchdog that flags slow hosts, (b) checkpoint
++ restart excluding them (this module), (c) at the input level the data
+pipeline skips to the correct step deterministically (data/pipeline.py
+seeds by step), so restarts never replay or skip data.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from ..nn.sharding import AxisEnv, param_shardings
+
+
+def best_mesh_shape(n_devices: int, model_parallel: int) -> tuple[int, int]:
+    """Largest (data, model) grid with the requested TP degree that fits."""
+    model = math.gcd(model_parallel, n_devices)
+    while model > 1 and n_devices % model:
+        model -= 1
+    return max(n_devices // model, 1), max(model, 1)
+
+
+def make_elastic_mesh(model_parallel: int = 16):
+    n = len(jax.devices())
+    data, model = best_mesh_shape(n, model_parallel)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def reshard(tree: Any, env: AxisEnv) -> Any:
+    """Re-place a host (or differently-sharded) tree onto env's mesh."""
+    sh = param_shardings(tree, env)
+    return jax.tree.map(lambda a, s: jax.device_put(np.asarray(a), s),
+                        tree, sh)
+
+
+@dataclass
+class StepWatchdog:
+    """Flags straggling steps: anything slower than `factor` x the median
+    of the trailing window is reported (at cluster scale -> candidate for
+    node exclusion + restart)."""
+    factor: float = 3.0
+    window: int = 50
+    times: list = field(default_factory=list)
+    slow_steps: list = field(default_factory=list)
+    _t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int) -> bool:
+        dt = time.monotonic() - self._t0
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        med = sorted(hist)[len(hist) // 2]
+        slow = len(hist) >= 5 and dt > self.factor * med
+        if slow:
+            self.slow_steps.append((step, dt, med))
+        return slow
+
+
+def run_with_restarts(step_fn: Callable[[int], Any], start_step: int,
+                      n_steps: int, max_restarts: int = 3,
+                      on_failure: Callable[[int, Exception], int] = None):
+    """Driver loop: a step that raises triggers restore-and-continue.
+
+    `on_failure(step, exc) -> resume_step` performs restore (typically from
+    the last checkpoint) and returns where to resume.
+    """
+    step = start_step
+    restarts = 0
+    while step < n_steps:
+        try:
+            step_fn(step)
+            step += 1
+        except Exception as exc:  # noqa: BLE001 — node failure surface
+            restarts += 1
+            if restarts > max_restarts or on_failure is None:
+                raise
+            step = on_failure(step, exc)
+    return step, restarts

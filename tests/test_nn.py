@@ -1,0 +1,228 @@
+"""Unit + property tests for the NN substrate (attention/SSD/MoE/losses)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.nn import attention, core, moe, ssd
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [None, 16, 48])
+@pytest.mark.parametrize("chunks", [(16, 16), (32, 64), (64, 32)])
+def test_chunked_matches_sdpa(window, chunks):
+    B, S, H, KvH, Dh = 2, 128, 4, 2, 16
+    q, k, v = rand(0, B, S, H, Dh), rand(1, B, S, KvH, Dh), rand(2, B, S, KvH, Dh)
+    o1 = attention.sdpa(q, k, v, causal=True, window=window)
+    o2 = attention.chunked_attention(q, k, v, causal=True, window=window,
+                                     chunk_q=chunks[0], chunk_k=chunks[1])
+    np.testing.assert_allclose(o1, o2, atol=2e-5)
+
+
+def test_chunked_ragged_kv():
+    """Non-multiple Sk (whisper cross-attn 1500 frames) pads+masks."""
+    q, k, v = rand(0, 1, 64, 4, 16), rand(1, 1, 50, 4, 16), rand(2, 1, 50, 4, 16)
+    o1 = attention.sdpa(q, k, v, causal=False, bidirectional=True)
+    o2 = attention.chunked_attention(q, k, v, bidirectional=True,
+                                     chunk_q=32, chunk_k=32)
+    np.testing.assert_allclose(o1, o2, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(min_value=0, max_value=31))
+def test_attention_causality(t):
+    """Output at position t is independent of tokens after t."""
+    B, S, H, Dh = 1, 32, 2, 8
+    q, k, v = rand(0, B, S, H, Dh), rand(1, B, S, H, Dh), rand(2, B, S, H, Dh)
+    o1 = attention.sdpa(q, k, v, causal=True)
+    k2 = k.at[:, t + 1:].set(99.0)
+    v2 = v.at[:, t + 1:].set(-99.0)
+    o2 = attention.sdpa(q, k2, v2, causal=True)
+    np.testing.assert_allclose(o1[:, : t + 1], o2[:, : t + 1], atol=1e-5)
+
+
+def test_decode_matches_last_position():
+    B, S, H, KvH, Dh = 2, 64, 4, 4, 16
+    q, k, v = rand(0, B, S, H, Dh), rand(1, B, S, KvH, Dh), rand(2, B, S, KvH, Dh)
+    full = attention.sdpa(q, k, v, causal=True)
+    dec = attention.decode_attention(q[:, -1], k, v, cur_len=S)
+    np.testing.assert_allclose(dec, full[:, -1], atol=1e-5)
+
+
+def test_sharded_decode_matches_unsharded():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    B, S, H, Dh = 2, 32, 4, 8
+    q, k, v = rand(0, B, H, Dh), rand(1, B, S, H, Dh), rand(2, B, S, H, Dh)
+    o1 = attention.decode_attention(q, k, v, cur_len=S)
+    o2 = attention.sharded_decode_attention(mesh, q, k, v, jnp.asarray(S),
+                                            kv_axes=("model",))
+    np.testing.assert_allclose(o1, o2, atol=1e-5)
+
+
+def test_sharded_decode_update_semantics():
+    """Fused cache-update+attend == write-then-attend."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    B, S, H, Dh = 2, 16, 2, 8
+    q = rand(0, B, H, Dh)
+    k, v = rand(1, B, S, H, Dh), rand(2, B, S, H, Dh)
+    kn, vn = rand(3, B, H, Dh), rand(4, B, H, Dh)
+    t = 7
+    o, k2, v2 = attention.sharded_decode_attention(
+        mesh, q, k, v, jnp.asarray(t), kv_axes=("model",), k_new=kn, v_new=vn)
+    k_ref = k.at[:, t].set(kn)
+    v_ref = v.at[:, t].set(vn)
+    o_ref = attention.decode_attention(q, k_ref, v_ref, cur_len=t + 1)
+    np.testing.assert_allclose(o, o_ref, atol=1e-5)
+    np.testing.assert_allclose(k2, k_ref, atol=0)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE attention scores depend only on relative positions."""
+    Dh = 16
+    q, k = rand(0, 1, 1, 1, Dh), rand(1, 1, 1, 1, Dh)
+    def score(qp, kp):
+        qr = attention.rope(q, jnp.array([[qp]]), 10_000.0)
+        kr = attention.rope(k, jnp.array([[kp]]), 10_000.0)
+        return float(jnp.sum(qr * kr))
+    assert abs(score(5, 3) - score(105, 103)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# SSD / mamba2
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_chunked_matches_reference(chunk):
+    b, s, h, p, g, n = 2, 64, 4, 8, 2, 16
+    x = rand(0, b, s, h, p, scale=0.5)
+    dt = jax.nn.softplus(rand(1, b, s, h))
+    A = -jnp.exp(rand(2, h) * 0.3)
+    B = rand(3, b, s, g, n, scale=0.3)
+    C = rand(4, b, s, g, n, scale=0.3)
+    y1, s1 = ssd.ssd_reference(x, dt, A, B, C)
+    y2, s2 = ssd.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(y1, y2, atol=5e-4)
+    np.testing.assert_allclose(s1, s2, atol=5e-4)
+
+
+def test_ssd_state_decay_property():
+    """With very negative A, the state forgets: output ~ local-only."""
+    b, s, h, p, g, n = 1, 32, 2, 4, 1, 8
+    x = rand(0, b, s, h, p)
+    dt = jnp.ones((b, s, h)) * 5.0
+    A = jnp.full((h,), -100.0)
+    B = rand(3, b, s, g, n)
+    C = rand(4, b, s, g, n)
+    y, _ = ssd.ssd_reference(x, dt, A, B, C)
+    # token t output only depends on token t (state fully decayed)
+    x2 = x.at[:, 0].set(7.0)
+    y2, _ = ssd.ssd_reference(x2, dt, A, B, C)
+    np.testing.assert_allclose(y[:, 1:], y2[:, 1:], atol=1e-4)
+
+
+def test_mamba2_step_matches_scan():
+    cfg = ssd.SSDConfig(d_model=32, d_state=16, head_dim=8, expand=2,
+                        n_groups=1, chunk=8)
+    params = ssd.mamba2_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = rand(5, 2, 16, 32)
+    y_full = ssd.mamba2_apply(params, cfg, x, chunk=8)
+    cache = ssd.mamba2_init_cache(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(16):
+        yt, cache = ssd.mamba2_step(params, cfg, x[:, t], cache)
+        outs.append(yt)
+    np.testing.assert_allclose(y_full, jnp.stack(outs, 1), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def test_moe_sharded_matches_dense_oracle():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    params = moe.moe_init(jax.random.PRNGKey(0), 32, 64, 8, jnp.float32)
+    x = rand(1, 2, 16, 32)
+    yd, auxd = moe.moe_apply_dense(params, x, top_k=2)
+    ys, auxs = moe.moe_apply_sharded(params, x, mesh=mesh, top_k=2,
+                                     n_experts=8, batch_axes=("data",),
+                                     capacity_factor=8.0)
+    np.testing.assert_allclose(yd, ys, atol=1e-5)
+    np.testing.assert_allclose(auxd, auxs, atol=1e-5)
+
+
+def test_moe_router_weights_normalized():
+    xf = rand(0, 64, 32).reshape(64, 32)
+    w = rand(1, 32, 8)
+    top_p, top_i, probs = moe._route(xf, w, 3)
+    np.testing.assert_allclose(jnp.sum(top_p, -1), 1.0, atol=1e-5)
+    assert int(jnp.max(top_i)) < 8 and int(jnp.min(top_i)) >= 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_moe_dispatch_positions_unique(seed):
+    """Sort-based dispatch: (expert, position) pairs never collide."""
+    top_i = jax.random.randint(jax.random.PRNGKey(seed), (32, 2), 0, 4)
+    pos = moe._dispatch_indices(top_i, 4, capacity=64)
+    pairs = np.stack([np.asarray(top_i).ravel(), np.asarray(pos).ravel()], 1)
+    assert len(np.unique(pairs, axis=0)) == pairs.shape[0]
+
+
+def test_moe_load_balance_loss_bounds():
+    """Aux loss is ~1 for uniform routing, larger when probs+assignments
+    skew to one expert."""
+    probs_u = jnp.ones((128, 8)) / 8
+    top_u = jnp.tile(jnp.arange(8), 32).reshape(128, 2)
+    uniform = float(moe.load_balance_loss(probs_u, top_u, 8))
+    probs_s = jnp.full((128, 8), 0.02).at[:, 0].set(0.86)
+    top_s = jnp.zeros((128, 2), jnp.int32)
+    skewed = float(moe.load_balance_loss(probs_s, top_s, 8))
+    assert abs(uniform - 1.0) < 0.05
+    assert skewed > 2.0 * uniform
+
+
+# ---------------------------------------------------------------------------
+# losses / norms
+# ---------------------------------------------------------------------------
+
+def test_chunked_xent_matches_direct():
+    V, B, S, D = 64, 2, 16, 8
+    table = rand(0, V, D)
+    h = rand(1, B, S, D)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, V)
+    direct = -jnp.mean(jnp.take_along_axis(
+        jax.nn.log_softmax(h @ table.T, -1), labels[..., None], -1))
+    chunked = core.chunked_softmax_xent(table, h, labels, chunk=4)
+    np.testing.assert_allclose(direct, chunked, rtol=1e-5)
+
+
+def test_nonparametric_layernorm_stats():
+    x = rand(0, 4, 32) * 7 + 3
+    y = core.nonparametric_layernorm(x)
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.var(y, -1), 1.0, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(0.1, 10.0))
+def test_rmsnorm_scale_equivariance(scale):
+    """rmsnorm(a*x) == rmsnorm(x) for any positive scalar a."""
+    x = rand(0, 2, 16)
+    p = core.rmsnorm_init(16, jnp.float32)
+    np.testing.assert_allclose(core.rmsnorm_apply(p, x),
+                               core.rmsnorm_apply(p, scale * x), atol=1e-4)

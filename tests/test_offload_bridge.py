@@ -1,0 +1,40 @@
+"""Wearable->backend offload bridge (core/offload.py)."""
+import json
+
+import pytest
+
+from repro.core import aria2, offload
+from repro.core.aria2 import FULL_OFFLOAD, FULL_ON_DEVICE
+
+
+def test_backend_demand_follows_placement():
+    off = {d.stream: d.offloaded for d in offload.backend_demand(FULL_OFFLOAD)}
+    on = {d.stream: d.offloaded for d in offload.backend_demand(FULL_ON_DEVICE)}
+    assert off["audio"] is True          # backend transcribes
+    assert on["audio"] is False          # ASR on-device
+    assert off["rgb"] and on["rgb"]      # RGB always offloaded (SSV-B)
+
+
+def test_fleet_sizing_math(tmp_path):
+    # synthetic dry-run artifact: 1 s bound, prefill -> 32*32768 tok/s/pod
+    rec = {"ok": True, "terms": {"compute_s": 0.5, "memory_s": 1.0,
+                                 "collective_s": 0.2}}
+    for arch in ("whisper-medium", "phi-3-vision-4.2b", "granite-3-2b"):
+        (tmp_path / f"{arch}__prefill_32k__single.json").write_text(
+            json.dumps(rec))
+    (tmp_path / "mamba2-2.7b__train_4k__single.json").write_text(
+        json.dumps(rec))
+    rows = offload.size_fleet(FULL_OFFLOAD, n_users=1000, duty=1.0,
+                              results_dir=tmp_path)
+    audio = next(r for r in rows if r["stream"] == "audio")
+    assert audio["pod_tokens_per_s"] == pytest.approx(32 * 32768 / 1.0)
+    assert audio["tokens_per_s"] == pytest.approx(1000 * 50.0)
+    assert audio["pods"] == pytest.approx(
+        1000 * 50 / (32 * 32768), abs=0.1)
+
+
+def test_offload_summary_consistency():
+    s = offload.offload_summary(FULL_ON_DEVICE)
+    assert s["uplink_mbps"] < offload.offload_summary(
+        FULL_OFFLOAD)["uplink_mbps"]
+    assert s["device_mw"] > 200     # still above the always-on ceiling

@@ -1,0 +1,143 @@
+"""Property tests for the differentiable power layer + sharding rules."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import aria2
+from repro.core.power import Component, Rail, SystemModel, aggregate
+
+
+def small_model(duties):
+    comps = [Component(f"c{i}", "compute", "digital", idle_mw=1.0,
+                       active_mw=10.0, duty=d, rail="core")
+             for i, d in enumerate(duties)]
+    return SystemModel(comps, {"core": Rail("core", 0.8)})
+
+
+@settings(max_examples=30, deadline=None)
+@given(duties=st.lists(st.floats(0.0, 1.0), min_size=1, max_size=10))
+def test_power_aggregation_identity(duties):
+    """total == sum(loads) + losses; losses == load x (1/eff - 1)."""
+    m = small_model(duties)
+    loads, loss, total = aggregate(m.pack())
+    np.testing.assert_allclose(float(total),
+                               float(jnp.sum(loads)) + float(loss), rtol=1e-6)
+    np.testing.assert_allclose(float(loss),
+                               float(jnp.sum(loads)) * 0.25, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d1=st.floats(0.0, 0.9), d2=st.floats(0.0, 0.9))
+def test_power_monotone_in_duty(d1, d2):
+    lo, hi = sorted([d1, d2])
+    _, _, t_lo = aggregate(small_model([lo]).pack())
+    _, _, t_hi = aggregate(small_model([hi]).pack())
+    assert float(t_hi) >= float(t_lo) - 1e-9
+
+
+def test_power_grad_matches_finite_difference():
+    """d(total)/d(wifi energy/bit) via jax.grad == finite difference."""
+    sc = aria2.FULL_OFFLOAD
+    k = "wifi_mw_per_mbps"
+    v0 = float(aria2.THETA0[k])
+
+    def f(x):
+        return aria2.total_mw(sc, {k: x})
+
+    g = float(jax.grad(f)(jnp.asarray(v0)))
+    eps = 1e-3
+    fd = (float(f(v0 + eps)) - float(f(v0 - eps))) / (2 * eps)
+    assert g == pytest.approx(fd, rel=1e-3)
+    # elasticity: wireless term scales with offloaded Mbps / rail eff
+    mbps = float(aria2.offloaded_mbps(sc))
+    assert g == pytest.approx(mbps / (aria2.RAIL_EFF["rf"] *
+                                      aria2.THETA0["eff_scale"]), rel=1e-3)
+
+
+def test_vmap_over_design_points():
+    """The DSE layer vectorises: vmap(total) over theta grid == loop."""
+    vals = jnp.linspace(5.0, 15.0, 7)
+
+    def f(x):
+        return aria2.total_mw(aria2.FULL_OFFLOAD, {"wifi_mw_per_mbps": x})
+
+    batched = jax.vmap(f)(vals)
+    looped = jnp.stack([f(v) for v in vals])
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(looped),
+                               rtol=1e-6)
+
+
+def test_categories_cover_all_components():
+    m = aria2.build_system(aria2.FULL_ON_DEVICE)
+    rep = m.evaluate()
+    cats = rep.by_category()
+    np.testing.assert_allclose(sum(cats.values()), rep.total_mw, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_sharding_rules_cover_all_archs():
+    """Every parameter in every arch resolves to a legal PartitionSpec on
+    the production mesh geometry (divisibility-checked)."""
+    import numpy as _np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch import specs as specs_lib
+    from repro.models import registry
+    from repro.nn.sharding import AxisEnv, logical_for, param_specs
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    env = AxisEnv.__new__(AxisEnv)
+    env.mesh = FakeMesh()
+    env.table = {"batch": ("data",), "fsdp": ("data",),
+                 "tensor": ("model",)}
+    for arch in registry.arch_names():
+        cfg, model = registry.get(arch)
+        pstruct = specs_lib.param_struct(cfg, model)
+        specs = param_specs(pstruct, env)
+        leaves = jax.tree.leaves(pstruct)
+        spec_leaves = jax.tree.leaves(specs,
+                                      is_leaf=lambda x: isinstance(x, P))
+        assert len(leaves) == len(spec_leaves)
+        for leaf, spec in zip(leaves, spec_leaves):
+            for dim, ax in zip(leaf.shape, tuple(spec)):
+                if ax is None:
+                    continue
+                axes = (ax,) if isinstance(ax, str) else ax
+                size = int(_np.prod([env.mesh.shape[a] for a in axes]))
+                assert dim % size == 0, (arch, leaf.shape, spec)
+
+
+def test_big_params_are_sharded():
+    """No parameter > 64MB may stay fully replicated on the 16x16 mesh."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch import specs as specs_lib
+    from repro.models import registry
+    from repro.nn.sharding import AxisEnv, param_specs
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    env = AxisEnv.__new__(AxisEnv)
+    env.mesh = FakeMesh()
+    env.table = {"batch": ("data",), "fsdp": ("data",),
+                 "tensor": ("model",)}
+    for arch in ["yi-34b", "dbrx-132b", "gemma3-4b"]:
+        cfg, model = registry.get(arch)
+        pstruct = specs_lib.param_struct(cfg, model)
+        specs = param_specs(pstruct, env)
+        flat_p = jax.tree_util.tree_flatten_with_path(pstruct)[0]
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        for (path, leaf), spec in zip(flat_p, flat_s):
+            size_mb = int(np.prod(leaf.shape)) * 4 / 1e6
+            if size_mb > 64:
+                assert any(ax is not None for ax in tuple(spec)), \
+                    (arch, [str(p) for p in path], leaf.shape)

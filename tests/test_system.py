@@ -1,0 +1,165 @@
+"""End-to-end behaviour tests for the paper's system (PnPSim + calibration).
+
+Validates the reproduction against the paper's own published numbers:
+Fig 3 (on-device vs offload), Fig 4 (placement deltas), Table III
+(component distribution + Amdahl bound), SSVI-C (power delivery share),
+Fig 5/6 (scaling + compression trends).
+"""
+import math
+
+import pytest
+
+from repro.core import aria2, dse, scaling
+from repro.core.aria2 import (FULL_OFFLOAD, FULL_ON_DEVICE, PART_AGGREGATION,
+                              PRIMITIVES, Scenario)
+
+
+def total(placements=(), **kw):
+    return float(aria2.total_mw(Scenario("t", tuple(placements), **kw)))
+
+
+@pytest.fixture(scope="module")
+def p0():
+    return total()
+
+
+# ---------------------------------------------------------------------------
+# Fig 4 placement deltas vs paper
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("placement,paper_delta,tol", [
+    (("hand_tracking",), -14.0, 1.5),
+    (("eye_tracking",), 0.0, 1.5),
+    (("asr",), 7.0, 1.5),
+    (("vio",), 1.0, 1.5),
+    (("vio", "hand_tracking"), -22.0, 1.5),
+    (tuple(PRIMITIVES), -16.0, 1.5),
+])
+def test_fig4_placement_deltas(p0, placement, paper_delta, tol):
+    delta = 100 * (total(placement) - p0) / p0
+    assert abs(delta - paper_delta) < tol, (placement, delta)
+
+
+def test_fig3_on_device_is_cheaper(p0):
+    assert total(PRIMITIVES) < p0
+
+
+def test_shared_camera_coupling(p0):
+    """SSV-B: VIO+HT savings are super-additive (shared outward cameras)."""
+    d_ht = total(("hand_tracking",)) - p0
+    d_vio = total(("vio",)) - p0
+    d_both = total(("vio", "hand_tracking")) - p0
+    assert d_both < d_ht + d_vio
+
+
+def test_paper_bandwidth_sanity():
+    """SSV-B: audio ~128kbps; 512x512@30 8b 10:1 ~= 6.3 Mbps."""
+    assert abs(512 * 512 * 30 * 8 / 10 / 1e6 - 6.29) < 0.05
+    assert abs(aria2.RAW_MBPS["audio_opus"] - 0.256) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Table III component distribution
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def component_rows():
+    rep = aria2.build_system(FULL_ON_DEVICE).evaluate()
+    rev = {p: part for part, parts in PART_AGGREGATION.items()
+           for p in parts}
+    agg = {}
+    for n, p in rep.per_component():
+        agg[rev.get(n, n)] = agg.get(rev.get(n, n), 0.0) + p
+    return sorted(agg.values(), reverse=True)
+
+
+def test_table3_component_count(component_rows):
+    assert len(component_rows) == 145
+
+
+@pytest.mark.parametrize("threshold,paper_n,paper_share,n_tol,s_tol", [
+    (0.001, 82, 1.47, 3, 0.6), (0.005, 118, 9.47, 3, 1.5),
+    (0.01, 129, 17.49, 3, 2.5), (0.05, 140, 43.29, 3, 4.0),
+    (0.10, 143, 61.60, 3, 4.0),
+])
+def test_table3_buckets(component_rows, threshold, paper_n, paper_share,
+                        n_tol, s_tol):
+    tot = sum(component_rows)
+    sel = [p for p in component_rows if p <= threshold * tot]
+    assert abs(len(sel) - paper_n) <= n_tol
+    assert abs(100 * sum(sel) / tot - paper_share) <= s_tol
+
+
+def test_table3_amdahl_bound(component_rows):
+    """Top-2 parts ~38.4% => <=~1.6x headroom from optimizing them alone."""
+    tot = sum(component_rows)
+    top2 = sum(component_rows[:2]) / tot
+    assert 0.30 < top2 < 0.45
+    assert 1.4 < 1 / (1 - top2) < 1.9
+    # no single component dominates (<= 25%, Table III bucket cap)
+    assert component_rows[0] / tot <= 0.25
+
+
+def test_pd_share_is_about_20pct():
+    pd = float(aria2.pd_share(FULL_ON_DEVICE))
+    assert abs(pd - 0.20) < 0.03
+
+
+# ---------------------------------------------------------------------------
+# Fig 5 / Fig 6 trends
+# ---------------------------------------------------------------------------
+
+def test_fig5_analog_share_grows():
+    rows = scaling.project(aria2.build_system(FULL_ON_DEVICE), n_steps=4)
+
+    def analog_share(r):
+        return (r.get("analog_mw", 0) + r.get("rf_mw", 0)) / r["total_mw"]
+
+    assert rows[-1]["total_mw"] < rows[0]["total_mw"]      # scaling helps
+    assert analog_share(rows[-1]) > analog_share(rows[0])  # bottleneck drift
+
+
+def test_fig6_compression_asymptote():
+    rows = dse.compression_sweep(compressions=(1, 8, 64, 128),
+                                 fps_scales=(1,))
+    p = [r["total_mw"] for r in rows]
+    assert p[0] > p[1] > p[2] >= p[3] - 1e-6
+    # diminishing returns: the 64->128 step saves far less than 1->8
+    assert (p[2] - p[3]) < 0.1 * (p[0] - p[1])
+    # asymptote stays above the link-maintenance floor
+    assert p[3] > aria2.THETA0["wifi_link_mw"]
+
+
+def test_battery_math():
+    """SSIII-B: 3Wh / 15h => ~200mW ceiling; both scenarios exceed it."""
+    ceiling = 3000 / 15
+    assert abs(ceiling - 200) < 1e-9
+    assert total() > ceiling and total(PRIMITIVES) > ceiling
+
+
+# ---------------------------------------------------------------------------
+# event engine / taskgraph invariants
+# ---------------------------------------------------------------------------
+
+def test_taskgraph_no_deadline_misses():
+    from repro.core.workloads import duty_cycles
+    tel = duty_cycles({p: True for p in PRIMITIVES})
+    assert tel.deadline_misses == 0
+    assert all(0.0 <= d <= 1.0 for d in tel.duty.values())
+
+
+def test_contention_increases_waits():
+    """Scheduling more primitives on shared IPs cannot reduce NPU duty."""
+    from repro.core.workloads import duty_cycles
+    a = duty_cycles({})
+    b = duty_cycles({p: True for p in PRIMITIVES})
+    assert b.duty["npu"] > a.duty["npu"]
+    assert b.duty["isp"] >= a.duty["isp"] - 1e-9
+
+
+def test_offload_rate_monotone_in_placements():
+    """Every primitive moved on-device can only reduce the uplink rate."""
+    base = float(aria2.offloaded_mbps(Scenario("s", ())))
+    for p in PRIMITIVES:
+        one = float(aria2.offloaded_mbps(Scenario("s", (p,))))
+        assert one <= base + 0.07   # +signals overhead is tiny

@@ -1,0 +1,227 @@
+"""Training substrate: optimizer convergence, checkpoint atomicity/resume,
+gradient compression w/ error feedback, elasticity, data determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, lm_batch
+from repro.training import checkpoint as ckpt
+from repro.training import compression as comp
+from repro.training import optimizer as opt_lib
+from repro.training.elastic import (StepWatchdog, best_mesh_shape,
+                                    run_with_restarts)
+
+
+def quad_problem():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 4)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((8, 4))}
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    return params, loss, target
+
+
+def test_adamw_converges():
+    params, loss, target = quad_problem()
+    cfg = opt_lib.OptConfig(lr=5e-2, weight_decay=0.0, warmup_steps=5,
+                            total_steps=300)
+    state = opt_lib.init(params)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state, m = opt_lib.update(cfg, g, state, params)
+    assert float(loss(params)) < 1e-3
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    cfg = opt_lib.OptConfig(lr=1.0, clip_norm=1.0, warmup_steps=0,
+                            weight_decay=0.0, total_steps=10)
+    state = opt_lib.init(params)
+    huge = {"w": jnp.full((4,), 1e9)}
+    p1, _, m = opt_lib.update(cfg, huge, state, params)
+    assert float(m["grad_norm"]) > 1e8
+    assert float(jnp.max(jnp.abs(p1["w"]))) < 10.0    # clipped step
+
+
+def test_schedule_warmup_and_decay():
+    cfg = opt_lib.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    lrs = [float(opt_lib.schedule(cfg, jnp.asarray(s)))
+           for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0, abs=0.01)
+    assert lrs[2] > lrs[3] > lrs[4] >= 0.1 - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)}}
+    ckpt.save(tmp_path, tree, step=7)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step = ckpt.restore(tmp_path, like)
+    assert step == 7
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
+    tree = {"a": jnp.zeros((4,))}
+    ckpt.save(tmp_path, tree, step=1)
+    ckpt.save(tmp_path, tree, step=2)
+    assert ckpt.latest_step(tmp_path) == 2
+    # a stale temp dir must never be picked up as a checkpoint
+    (tmp_path / ".tmp_step_00000009").mkdir()
+    assert ckpt.latest_step(tmp_path) == 2
+
+
+def test_async_checkpointer_and_gc(tmp_path):
+    c = ckpt.AsyncCheckpointer(tmp_path, keep=2)
+    tree = {"a": jnp.ones((8,))}
+    for s in (1, 2, 3, 4):
+        c.submit(jax.tree.map(lambda a: a * s, tree), s)
+    c.wait()
+    c.close()
+    steps = sorted(int(d.name.split("_")[1]) for d in tmp_path.iterdir()
+                   if d.name.startswith("step_"))
+    assert steps == [3, 4]
+    restored, _ = ckpt.restore(tmp_path, tree, 4)
+    np.testing.assert_allclose(np.asarray(restored["a"]), 4.0)
+
+
+def test_train_resume_equivalence(tmp_path):
+    """Stop + restore + continue == uninterrupted run (exact)."""
+    params, loss, _ = quad_problem()
+    cfg = opt_lib.OptConfig(lr=1e-2, warmup_steps=0, total_steps=50,
+                            weight_decay=0.0)
+    state = opt_lib.init(params)
+    # uninterrupted
+    p_ref, s_ref = params, state
+    for _ in range(20):
+        g = jax.grad(loss)(p_ref)
+        p_ref, s_ref, _ = opt_lib.update(cfg, g, s_ref, p_ref)
+    # interrupted at step 10
+    p, s = params, state
+    for _ in range(10):
+        g = jax.grad(loss)(p)
+        p, s, _ = opt_lib.update(cfg, g, s, p)
+    ckpt.save(tmp_path, (p, s), 10)
+    (p2, s2), _ = ckpt.restore(tmp_path, (p, s))
+    for _ in range(10):
+        g = jax.grad(loss)(p2)
+        p2, s2, _ = opt_lib.update(cfg, g, s2, p2)
+    np.testing.assert_allclose(np.asarray(p2["w"]), np.asarray(p_ref["w"]),
+                               atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_error_feedback_preserves_signal():
+    """Sum of (dequantized + residual) == original gradient exactly."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)),
+                          jnp.float32)}
+    e = comp.init_error_state(g)
+    dq, e2 = comp.compress_grads(g, e)
+    np.testing.assert_allclose(np.asarray(dq["w"] + e2["w"]),
+                               np.asarray(g["w"]), atol=1e-6)
+
+
+def test_compression_int8_range():
+    g = jnp.linspace(-3, 3, 100)
+    q, scale = comp.quantize_leaf(g)
+    assert q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q))) <= 127
+    np.testing.assert_allclose(np.asarray(comp.dequantize_leaf(q, scale)),
+                               np.asarray(g), atol=float(scale) * 0.51)
+
+
+def test_compressed_training_still_converges():
+    params, loss, _ = quad_problem()
+    cfg = opt_lib.OptConfig(lr=5e-2, weight_decay=0.0, warmup_steps=5,
+                            total_steps=400)
+    state = opt_lib.init(params)
+    err = comp.init_error_state(params)
+    for _ in range(400):
+        g = jax.grad(loss)(params)
+        g, err = comp.compress_grads(g, err)
+        params, state, _ = opt_lib.update(cfg, g, state, params)
+    assert float(loss(params)) < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# elasticity / fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_best_mesh_shape():
+    assert best_mesh_shape(512, 16) == (32, 16)
+    assert best_mesh_shape(256, 16) == (16, 16)
+    assert best_mesh_shape(240, 16) == (15, 16)  # lost a node, keep TP=16
+    assert best_mesh_shape(250, 16) == (125, 2)  # odd counts degrade TP
+    assert best_mesh_shape(1, 16) == (1, 1)
+
+
+def test_run_with_restarts_recovers():
+    calls = {"n": 0, "failed": False}
+
+    def step(s):
+        calls["n"] += 1
+        if s == 3 and not calls["failed"]:
+            calls["failed"] = True
+            raise RuntimeError("simulated node failure")
+
+    def on_failure(step_, exc):
+        return 2   # restored from checkpoint at step 2
+
+    final, restarts = run_with_restarts(step, 0, 6, on_failure=on_failure)
+    assert final == 6 and restarts == 1
+
+
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(factor=3.0)
+    import time
+    for s in range(6):
+        wd.start()
+        time.sleep(0.002)
+        assert not wd.stop(s)
+    wd.start()
+    time.sleep(0.05)
+    assert wd.stop(99)
+    assert wd.slow_steps and wd.slow_steps[0][0] == 99
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_host_disjoint():
+    cfg0 = DataConfig(vocab=128, seq_len=16, global_batch=8, n_hosts=2,
+                      host_id=0)
+    cfg1 = DataConfig(vocab=128, seq_len=16, global_batch=8, n_hosts=2,
+                      host_id=1)
+    a = lm_batch(cfg0, 5)
+    b = lm_batch(cfg0, 5)
+    c = lm_batch(cfg1, 5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))
+    assert a["tokens"].shape == (4, 16)            # host shard of 8
+    assert int(jnp.max(a["tokens"])) < 128
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=2)
+    b = lm_batch(cfg, 0)
+    np.testing.assert_array_equal(np.asarray(b["labels"][:, :-1]),
+                                  np.asarray(b["tokens"][:, 1:]))
+    assert float(b["mask"][0, -1]) == 0.0

@@ -1,0 +1,93 @@
+"""SSPerf tuned() configs: numerical equivalence to the baseline model and
+structural sanity of the optimization knobs."""
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.nn import attention
+
+TUNED_MODULES = {
+    "yi-34b": "repro.configs.yi_34b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "mamba2-2.7b": "repro.configs.mamba2_2p7b",
+    "whisper-medium": "repro.configs.whisper_medium",
+}
+
+
+@pytest.mark.parametrize("arch", sorted(TUNED_MODULES))
+def test_tuned_config_exists_and_same_arch(arch):
+    mod = importlib.import_module(TUNED_MODULES[arch])
+    base, tuned = mod.config(), mod.tuned()
+    # optimization knobs must never change the architecture itself
+    for f in ("n_layers", "d_model", "n_heads", "n_kv_heads", "d_ff",
+              "vocab", "n_experts", "top_k"):
+        assert getattr(base, f) == getattr(tuned, f), (arch, f)
+
+
+def test_gemma3_static_local_equals_baseline():
+    """Grouped static-window scans == traced-window scan (forward+prefill)."""
+    cfg, model = registry.get("gemma3-4b", smoke=True)
+    cfg2 = dataclasses.replace(cfg, static_local_attn=True)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 60), 0, cfg.vocab)
+    h1, _ = model.forward(params, cfg, tokens, remat=False)
+    h2, _ = model.forward(params, cfg2, tokens, remat=False)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5)
+    l1, c1 = model.prefill(params, cfg, tokens)
+    l2, c2 = model.prefill(params, cfg2, tokens)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(c1["k"]), np.asarray(c2["k"]),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("window,chunk_q", [(16, 32), (48, 64), (8, 16)])
+def test_local_chunked_attention_oracle(window, chunk_q):
+    B, S, H, KvH, Dh = 2, 192, 4, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, Dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KvH, Dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KvH, Dh))
+    want = attention.sdpa(q, k, v, causal=True, window=window)
+    got = attention.local_chunked_attention(q, k, v, window=window,
+                                            chunk_q=chunk_q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_local_attention_complexity_is_subquadratic():
+    """Compiled FLOPs scale O(S*w): 4x seq -> ~4x flops (full attention
+    would be ~16x)."""
+    from repro.launch.hlo_analysis import analyze_hlo
+    B, H, Dh, W, CQ = 1, 2, 16, 32, 32
+
+    def flops(S):
+        sds = jax.ShapeDtypeStruct((B, S, H, Dh), jnp.float32)
+        c = jax.jit(lambda q, k, v: attention.local_chunked_attention(
+            q, k, v, window=W, chunk_q=CQ)).lower(sds, sds, sds).compile()
+        return analyze_hlo(c.as_text(), 1)[0].flops
+
+    f1, f4 = flops(128), flops(512)
+    assert f4 / f1 < 6.0, (f1, f4)     # linear-ish, not quadratic (16x)
+
+
+def test_pure_dp_sharding_table():
+    from repro.nn.sharding import AxisEnv
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    env = AxisEnv.__new__(AxisEnv)
+    AxisEnv.__init__(env, FakeMesh(), pure_dp=True)
+    assert env.table["batch"] == ("data", "model")
+    assert env.table["fsdp"] == ("data", "model")
+    assert env.table["tensor"] == ()
+    # tensor axes resolve to None (replicated) under pure DP; fsdp dims
+    # shard over the full 256-way mesh when divisible
+    spec = env.spec((512, 128), ("fsdp", "tensor"))
+    assert tuple(spec) == (("data", "model"), None)
+    # non-dividing dims fall back to replication
+    spec = env.spec((64, 128), ("fsdp", "tensor"))
+    assert tuple(spec) == (None, None)
