@@ -1,0 +1,82 @@
+"""DSE throughput benchmark: batched vmap grid vs legacy per-scenario loop.
+
+Times the full placement x compression x fps grid (16 x 8 x 6 = 768
+design points) through:
+  * batched  — ONE jitted `scenarios.evaluate` call (the redesigned API)
+  * loop     — the pre-redesign per-scenario path (`aria2.legacy_total_mw`,
+               Python dict building + per-call jnp ops + `float()` host
+               round-trips), measured on a subset and extrapolated.
+
+Emits results/benchmarks/BENCH_dse.json and returns (rows, derived) for
+benchmarks/run.py.
+
+    PYTHONPATH=src python benchmarks/dse_bench.py
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+LOOP_SAMPLE = 96        # legacy scenarios timed directly (rest extrapolated)
+
+
+def run(n_repeats: int = 5):
+    import numpy as np
+
+    from repro.core import aria2, scenarios
+    from repro.core.scenarios import ScenarioSet
+
+    plat = aria2.aria2_platform()
+    sset = ScenarioSet.grid()              # 16 x 8 x 6 = 768 points
+    n = len(sset)
+
+    # --- batched: one jitted vmap call --------------------------------------
+    scenarios.total_mw(plat, sset).block_until_ready()      # warm/compile
+    best_batched = min(
+        _timed(lambda: scenarios.total_mw(plat, sset).block_until_ready())
+        for _ in range(n_repeats))
+
+    # --- legacy loop: seed per-scenario implementation ----------------------
+    scs = [aria2.Scenario("b", sset.on_device(i),
+                          compression=float(sset.compression[i]),
+                          fps_scale=float(sset.fps_scale[i]))
+           for i in range(n)]
+    sample = scs[::max(1, n // LOOP_SAMPLE)][:LOOP_SAMPLE]
+    float(aria2.legacy_total_mw(sample[0]))                 # warm caches
+    t_loop_sample = _timed(
+        lambda: [float(aria2.legacy_total_mw(sc)) for sc in sample])
+    legacy_s = t_loop_sample * n / len(sample)
+
+    speedup = legacy_s / best_batched
+    result = {
+        "n_points": n,
+        "batched_ms": round(1e3 * best_batched, 3),
+        "legacy_loop_ms": round(1e3 * legacy_s, 1),
+        "legacy_sampled_points": len(sample),
+        "legacy_extrapolated": len(sample) < n,
+        "speedup": round(speedup, 1),
+        "points_per_s_batched": round(n / best_batched, 0),
+        "points_per_s_legacy": round(n / legacy_s, 1),
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "BENCH_dse.json").write_text(json.dumps(result, indent=1))
+    rows = [result]
+    return rows, (f"{n}pts batched={result['batched_ms']}ms "
+                  f"loop={result['legacy_loop_ms']}ms "
+                  f"speedup={result['speedup']}x")
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    rows, derived = run()
+    print(json.dumps(rows[0], indent=1))
+    print(derived)

@@ -8,10 +8,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import aria2, dse, scaling
+from repro.core import aria2, dse, scaling, scenarios
 from repro.core.aria2 import (FULL_OFFLOAD, FULL_ON_DEVICE, PART_AGGREGATION,
                               PRIMITIVES, RAW_MBPS, Scenario)
 from repro.core.calibrate import PAPER_DELTAS, report as calibration_report
+from repro.core.scenarios import ScenarioSet
 
 
 def table2_sensor_rates():
@@ -35,15 +36,19 @@ def table2_sensor_rates():
 
 
 def fig3_power_composition():
-    """Fig 3a/3b: category breakdown for full-offload vs full-on-device."""
+    """Fig 3a/3b: category breakdown for full-offload vs full-on-device —
+    both scenarios through one batched category_breakdown call."""
+    scs = (FULL_OFFLOAD, FULL_ON_DEVICE)
+    rep = scenarios.evaluate(aria2.aria2_platform(),
+                             ScenarioSet.from_scenarios(scs))
+    cats = {k: np.asarray(v) for k, v in rep.category_breakdown().items()}
+    totals = np.asarray(rep.total_mw)
     rows = []
-    for sc in (FULL_OFFLOAD, FULL_ON_DEVICE):
-        rep = aria2.build_system(sc).evaluate()
-        cats = rep.by_category()
-        t = rep.total_mw
+    for i, sc in enumerate(scs):
+        t = float(totals[i])
         rows.append({"scenario": sc.name, "total_mw": round(t, 1),
-                     **{k: round(100 * v / t, 1) for k, v in
-                        sorted(cats.items())}})
+                     **{k: round(100 * float(v[i]) / t, 1)
+                        for k, v in sorted(cats.items())}})
     p0, p1 = rows[0]["total_mw"], rows[1]["total_mw"]
     delta = 100 * (p1 - p0) / p0
     return rows, f"on_device_delta={delta:+.1f}%(paper -16%)"
@@ -118,6 +123,31 @@ def beyond_pareto():
     (power vs offloaded context bandwidth)."""
     pts, front = dse.pareto()
     return front, f"{len(front)} non-dominated of {len(pts)} configs"
+
+
+def beyond_platform_skus():
+    """Beyond-paper: the same scenario slate evaluated across every
+    registered Aria2 SKU; placements a SKU cannot run on-device
+    (dropped accelerators) report n/a instead of a bogus number."""
+    slate = [
+        {"name": "offload", "on_device": ()},
+        {"name": "on_device", "on_device": PRIMITIVES},
+        {"name": "gated", "on_device": (), "upload_duty": 0.35},
+        {"name": "bright", "on_device": (), "brightness": 0.8},
+    ]
+    rows = []
+    for plat in aria2.platforms():
+        sup = set(plat.supported_primitives())
+        ok = [r for r in slate if set(r["on_device"]) <= sup]
+        totals = np.asarray(scenarios.total_mw(plat, ScenarioSet.build(ok)))
+        by_name = {r["name"]: round(float(t), 1)
+                   for r, t in zip(ok, totals)}
+        rows.append({"platform": plat.name, "n_components": len(plat),
+                     **{r["name"]: by_name.get(r["name"], "n/a")
+                        for r in slate}})
+    spread = max(r["offload"] for r in rows) - \
+        min(r["offload"] for r in rows)
+    return rows, f"{len(rows)} SKUs; offload spread {spread:.0f}mW"
 
 
 def contention_telemetry():

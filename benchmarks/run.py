@@ -13,8 +13,9 @@ OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
 
 
 def main() -> None:
-    from . import kernel_benches, paper_benches, roofline
+    from . import dse_bench, kernel_benches, paper_benches, roofline
     benches = [
+        ("dse_batched_vs_loop", dse_bench.run),
         ("table2_sensor_rates", paper_benches.table2_sensor_rates),
         ("fig3_power_composition", paper_benches.fig3_power_composition),
         ("fig4_placement_dse", paper_benches.fig4_placement_dse),
@@ -24,6 +25,7 @@ def main() -> None:
         ("contention_telemetry", paper_benches.contention_telemetry),
         ("beyond_sensitivity", paper_benches.beyond_sensitivity),
         ("beyond_pareto", paper_benches.beyond_pareto),
+        ("beyond_platform_skus", paper_benches.beyond_platform_skus),
         ("kernel_flash_attention", kernel_benches.flash_attention_bench),
         ("kernel_ssd_scan", kernel_benches.ssd_scan_bench),
         ("roofline", roofline.run),

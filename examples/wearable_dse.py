@@ -1,10 +1,14 @@
-"""Design-space exploration driver (SSV-B): evaluate every on/off-device
-placement x compression point, print the Pareto front of (system power,
-offloaded context bandwidth), and project technology scaling.
+"""Design-space exploration driver (SSV-B) on the batched scenario engine:
+evaluate the full placement x compression grid in ONE vmapped device call,
+print the Pareto front of (system power, offloaded context bandwidth),
+compare platform SKUs, and project technology scaling.
 
     PYTHONPATH=src python examples/wearable_dse.py
 """
-from repro.core import aria2, dse, scaling
+import numpy as np
+
+from repro.core import aria2, dse, scaling, scenarios
+from repro.core.scenarios import ScenarioSet
 
 pts, front = dse.pareto(compressions=(4, 10, 20, 40))
 print(f"{len(pts)} design points; Pareto front (power vs context bandwidth):")
@@ -13,10 +17,35 @@ for p in front:
     print(f"{p['on_device']:42s} {p['compression']:5d} "
           f"{p['total_mw']:7.1f} {p['offload_mbps']:7.2f}")
 
-print("\nplacement sweep (all 16 subsets):")
+print("\nplacement sweep (all 16 subsets, one batched call):")
 for r in dse.placement_sweep():
     print(f"  {r['on_device']:42s} {r['total_mw']:7.1f} mW "
           f"({r['delta_pct']:+6.2f}%)  {r['offload_mbps']:6.1f} Mbps")
+
+print("\nfull grid through one jitted vmap call:")
+rep = dse.grid_sweep()                      # 16 x 8 x 6 = 768 points
+totals = np.asarray(rep.total_mw)
+best = int(np.argmin(totals))
+print(f"  {len(totals)} points; min {totals.min():.0f} mW "
+      f"({rep.sset.label(best)} @ {rep.sset.compression[best]:.0f}:1 / "
+      f"{rep.sset.fps_scale[best]:.0f}x fps), max {totals.max():.0f} mW")
+
+print("\nplatform SKUs (same scenario slate, different PlatformSpec;")
+print("n/a = placement needs an accelerator the SKU dropped):")
+slate = [
+    {"name": "offload", "on_device": ()},
+    {"name": "on_device", "on_device": aria2.PRIMITIVES},
+    {"name": "gated@0.35", "on_device": (), "upload_duty": 0.35},
+    {"name": "bright@0.8", "on_device": (), "brightness": 0.8},
+]
+for plat in aria2.platforms():
+    sup = set(plat.supported_primitives())
+    ok = [r for r in slate if set(r["on_device"]) <= sup]
+    t = np.asarray(scenarios.total_mw(plat, ScenarioSet.build(ok)))
+    by_name = {r["name"]: f"{v:7.1f}" for r, v in zip(ok, t)}
+    cells = "  ".join(f"{r['name']}={by_name.get(r['name'], '    n/a')}"
+                      for r in slate)
+    print(f"  {plat.name:20s} ({len(plat):3d} comps)  {cells}")
 
 print("\ntechnology scaling (Fig 5):")
 for row in scaling.project(aria2.build_system(aria2.FULL_ON_DEVICE)):

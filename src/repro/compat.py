@@ -1,0 +1,32 @@
+"""Small jax version-compat shims shared across the package.
+
+The repo targets a range of jax releases; APIs that moved or were
+renamed get one adapter here so the next rename is a one-line fix.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(*args, **kwargs):
+    """jax.shard_map moved out of jax.experimental only in newer jax;
+    the replication-check kwarg was also renamed check_rep -> check_vma."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(*args, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    if "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _sm(*args, **kwargs)
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with explicit-Auto axis types where supported.
+
+    `jax.sharding.AxisType` only exists in newer jax; older versions
+    default every axis to Auto, so omitting the argument is equivalent.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -1,3 +1,47 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Device-model core: declarative platforms + batched scenario evaluation.
+
+The paper's lesson is that power decisions only make sense in full-system
+context — which demands sweeping many scenarios across many knobs
+cheaply.  The core is organised around two abstractions:
+
+`platform.PlatformSpec` — a device inventory as **data**
+    Every component (sensor, compute IP, memory, radio, tail part) is a
+    `ComponentSpec` with a named `LoadRule` mapping the scenario knob
+    vector and physical coefficients theta to a mW load.  Platforms
+    serialize to JSON (`to_dict`/`from_dict`), register by name
+    (`platform.register`/`get`), and SKUs derive via
+    `PlatformSpec.variant` — see `aria2.aria2_platform()` (the paper's
+    145-component baseline), `aria2_display_platform()` (microLED SKU)
+    and `aria2_capture_only_platform()` (no on-device ML).
+
+`scenarios.ScenarioSet` — struct-of-arrays scenario batches
+    Knobs: placement mask over `platform.PRIMITIVES`, compression,
+    fps_scale, WiFi MCS tier, upload duty (VAD/saliency gating), display
+    brightness.  `scenarios.evaluate(platform, sset)` compiles the
+    platform into ONE jitted `jax.vmap` kernel and returns per-component
+    loads, totals, PD losses and uplink rates for the whole batch; it is
+    `jax.grad`-able in theta (calibration, sensitivity).
+
+Built on top:
+    dse.py        — placement/compression/grid sweeps, sensitivity,
+                    Pareto fronts; every sweep is one batched call.
+    calibrate.py  — fits theta to the paper's aggregates by Adam through
+                    the batched evaluator.
+    offload.py    — maps offloaded streams to backend pod fleets
+                    (`fleet_grid` sizes a whole ScenarioSet at once).
+    power.py      — component/rail primitives + `SystemModel` snapshots.
+    scaling.py    — technology-node projection over a SystemModel.
+    workloads.py / taskgraph.py / engine.py — event-driven taskgraph sim
+                    providing duty cycles (ISP table per placement mask).
+
+Migrating from the legacy single-`Scenario` API:
+    aria2.total_mw(sc) / component_loads(sc) / offloaded_mbps(sc) still
+    work — they are thin wrappers evaluating a size-1 `ScenarioSet`.
+    Replace per-scenario loops with `ScenarioSet.grid(...)` (or
+    `ScenarioSet.from_scenarios([...])`) plus one `scenarios.evaluate`;
+    the pre-redesign dict implementation survives as `aria2.legacy_*`
+    only as a parity oracle and benchmark baseline.
+"""
+from .platform import (PRIMITIVES, ComponentSpec, LoadRule,  # noqa: F401
+                       PlatformSpec)
+from .scenarios import BatchReport, ScenarioSet  # noqa: F401

@@ -1,31 +1,47 @@
 """Aria2 full-system architecture model (§IV-B) — 145-component inventory.
 
-Mechanistic components (sensors per Table II, the coprocessor complex, ML
-IPs, memories, WiFi combo, PMIC rails) are parameterized by a small set of
-physical coefficients THETA (energy/bit of the radio, pJ/FLOP per IP class,
-codec energy/pixel, ...) which calibrate.py fits against the paper's
-published aggregate numbers (Fig 3/4, Table III, §VI-C).  A long tail of
-small auxiliary parts (bridges, oscillators, load switches, telemetry —
-§V-A3's "129 components individually below 1%") completes the inventory.
+The inventory is **declarative platform data** (`platform.PlatformSpec`):
+every mechanistic component (sensors per Table II, the coprocessor
+complex, ML IPs, memories, WiFi combo, PMIC rails) is a `ComponentSpec`
+whose load is a named `LoadRule` of the scenario knob vector and the
+physical coefficient set THETA (energy/bit of the radio, pJ/FLOP per IP
+class, codec energy/pixel, ...) which calibrate.py fits against the
+paper's published aggregates (Fig 3/4, Table III, §VI-C).  A long tail
+of small auxiliary parts (bridges, oscillators, load switches — §V-A3's
+"129 components individually below 1%") completes the inventory.
 
-Scenario knobs (the paper's design space):
-  placements  — which egocentric primitives compute on-device,
-  compression — visual stream compression ratio (Fig 6),
-  fps_scale   — sensor frame-rate reduction (Fig 6).
+Three platforms are registered:
+  aria2               — the paper's baseline glasses,
+  aria2_display       — + microLED display subsystem (brightness knob),
+  aria2_capture_only  — low-power capture/offload SKU without ML IPs.
+
+Scenario knobs (the design space):
+  placements   — which egocentric primitives compute on-device,
+  compression  — visual stream compression ratio (Fig 6),
+  fps_scale    — sensor frame-rate reduction (Fig 6),
+  mcs_tier     — WiFi modulation tier (scenarios.MCS_TIERS),
+  upload_duty  — VAD/saliency-gated uplink duty cycle,
+  brightness   — display brightness (display SKUs).
+
+Batch evaluation goes through `scenarios.ScenarioSet` (one jitted vmap
+call for a whole DSE grid).  The single-`Scenario` functions below
+(`total_mw`, `component_loads`, `offloaded_mbps`, `build_system`) are
+thin wrappers over that engine, kept for compatibility; the pre-redesign
+dict-based implementation survives as `legacy_*` — the reference oracle
+for parity tests and the baseline for benchmarks/dse_bench.py.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import workloads
+from .platform import (PRIMITIVES, ComponentSpec, LoadRule, PlatformSpec,
+                       register)
 from .power import Component, Rail, SystemModel
-
-PRIMITIVES = ("vio", "eye_tracking", "asr", "hand_tracking")
 
 # raw sensor data rates, Mbps (Table II; RGB after 2x2 binning, §V-A)
 RAW_MBPS = {
@@ -79,6 +95,9 @@ class Scenario:
     on_device: tuple[str, ...] = ()      # subset of PRIMITIVES
     compression: float = 10.0
     fps_scale: float = 1.0
+    mcs_tier: int = 1                    # scenarios.MCS_TIERS index
+    upload_duty: float = 1.0             # VAD/saliency uplink gating
+    brightness: float = 0.0              # display SKUs only
 
     def placements(self) -> dict[str, bool]:
         return {p: p in self.on_device for p in PRIMITIVES}
@@ -88,119 +107,15 @@ FULL_OFFLOAD = Scenario("full_offload")
 FULL_ON_DEVICE = Scenario("full_on_device", tuple(PRIMITIVES))
 
 
-def offloaded_mbps(sc: Scenario):
-    """Wireless uplink rate for a scenario (the compute<->comm trade)."""
-    c, fs = sc.compression, sc.fps_scale
-    on = sc.placements()
-    mbps = RAW_MBPS["rgb"] / c / fs                 # RGB always offloaded
-    if on["hand_tracking"] and on["vio"]:
-        gs = 0.0                                    # cameras fully consumed
-    elif on["hand_tracking"]:
-        gs = RAW_MBPS["gs_vio_share"]               # VIO's 10fps subset
-    else:
-        gs = RAW_MBPS["gs"]                         # HT needs full 30fps
-    mbps += gs / c / fs
-    if not on["eye_tracking"]:
-        mbps += RAW_MBPS["et"] / c / fs
-    if not on["asr"]:
-        mbps += RAW_MBPS["audio_opus"]
-    mbps += RAW_MBPS["imu"] + RAW_MBPS["aux"]
-    mbps += RAW_MBPS["signals"] * sum(on.values())
-    return mbps
-
-
 @functools.lru_cache(maxsize=64)
 def _duties(on_device: tuple) -> dict:
     tel = workloads.duty_cycles(dict(on_device))
     return dict(tel.duty)
 
 
-def _npu_load(on, th):
-    """NPU load: per-primitive pJ/FLOP x its measured GFLOP/s."""
-    ht = workloads.flops_rates({"hand_tracking": True})["npu"] * th["pj_ht"] \
-        if on["hand_tracking"] else 0.0
-    et = workloads.flops_rates({"eye_tracking": True})["npu"] * th["pj_et"] \
-        if on["eye_tracking"] else 0.0
-    if on["hand_tracking"] or on["eye_tracking"]:
-        return th["ip_idle_mw"] + ht + et
-    return 0.4
-
-
-def component_loads(sc: Scenario, theta=None):
-    """All mechanistic component loads (mW) for a scenario.
-
-    Pure jnp in theta -> fully differentiable for calibration/sensitivity.
-    Duty cycles come from the event-driven taskgraph simulation.
-    """
-    th = dict(THETA0)
-    if theta:
-        th.update(theta)
-    on = sc.placements()
-    duties = _duties(tuple(sorted(on.items())))
-    rates = workloads.flops_rates(on)
-    fs = sc.fps_scale
-    mbps = offloaded_mbps(sc)
-    raw_visual = (RAW_MBPS["rgb"] + RAW_MBPS["gs"] + RAW_MBPS["et"]) / fs
-    # raw pixel rate entering the codec (compressed-for-offload streams +
-    # RGB which is always compressed)
-    codec_raw = RAW_MBPS["rgb"] / fs
-    if not (on["hand_tracking"] and on["vio"]):
-        codec_raw += (RAW_MBPS["gs"] if not on["hand_tracking"]
-                      else RAW_MBPS["gs_vio_share"]) / fs
-    if not on["eye_tracking"]:
-        codec_raw += RAW_MBPS["et"] / fs
-
-    fps_f = 0.35 + 0.65 / fs           # sensors have a static power floor
-
-    loads = {
-        # sensors (always on: capture path is scenario-independent, §V-A2)
-        "rgb_camera":       36.0 * fps_f,
-        **{f"gs_camera_{i}": 17.0 * fps_f for i in range(4)},
-        **{f"et_camera_{i}": 7.0 * fps_f for i in range(2)},
-        "et_ir_illuminator": 9.0,
-        **{f"imu_{i}": 1.6 for i in range(2)},
-        **{f"mic_{i}": 1.1 for i in range(5)},
-        "gnss": 11.0, "magnetometer": 1.4, "barometer": 0.9,
-        # compute complex
-        "coproc_soc_base": 72.0,
-        "isp": 40.0 * duties.get("isp", 1.0) / max(fs, 1.0) + 6.0,
-        "h265_codec": th["codec_mw_per_rawmbps"] * codec_raw + 5.0,
-        "sensor_hub_mcu": 10.0,
-        "dsp_audio": 3.0 + (rates["dsp"] * th["pj_asr"]
-                            if on["asr"] else 0.9),
-        "npu_ml": _npu_load(on, th),
-        "hwa_vio6dof": (th["ip_idle_mw"] + rates["hwa_vio"] * th["pj_vio"])
-                       if on["vio"] else 0.4,
-        # memory
-        "lpddr_dram": 28.0 + th["dram_mw_per_mbps"] * raw_visual / 8,
-        "ocm_sram": 11.0,
-        "nor_flash": 7.0,
-        # wireless
-        "wifi_combo": th["wifi_link_mw"] + th["wifi_mw_per_mbps"] * mbps,
-        "bt_radio": 6.0,
-        # outputs
-        "speaker_amp": 15.0,
-        "ui_led": 3.5,
-        # platform
-        "charger_ic": 2.2,
-        "usb_phy": 1.3,
-        "als_sensor": 0.7,
-        "privacy_led": 1.8,
-        "capacitive_touch": 1.2,
-        "hall_sensor": 0.3,
-        "wifi_fem": 7.5,
-        "audio_adc": 1.9,
-        "audio_hub_codec": 7.2,
-        "imu_aggregator_mcu": 6.8,
-        "pm_telemetry_hub": 6.5,
-        "status_display_drv": 7.8,
-        "storage_ctrl": 7.0,
-        "mic_bias_reg": 3.0,
-    }
-    return loads, th
-
-
-
+# ---------------------------------------------------------------------------
+# component metadata (category / process / rail / digital fraction)
+# ---------------------------------------------------------------------------
 
 COMPONENT_META = {
     # name-prefix -> (category, process, rail, digital_fraction)
@@ -227,6 +142,8 @@ COMPONENT_META = {
     "bt": ("wireless", "rf", "rf", 0.35),
     "speaker": ("output", "analog", "sys", 0.15),
     "ui_led": ("output", "analog", "sys", 0.0),
+    "microled": ("output", "digital", "sys", 0.7),
+    "display_pmic": ("output", "mixed", "sys", 0.3),
 }
 
 
@@ -268,22 +185,304 @@ def tail_components() -> list[Component]:
     return comps
 
 
-def build_system(sc: Scenario, theta=None) -> SystemModel:
-    loads, th = component_loads(sc, theta)
-    comps = []
-    for name, mw in loads.items():
-        cat, proc, rail, digf = _meta(name)
-        comps.append(Component(name, cat, proc, idle_mw=float(mw),
-                               rail=rail, digital_fraction=digf))
-    comps.extend(tail_components())
-    rails = {r: Rail(r, min(e * th["eff_scale"], 0.97))
-             for r, e in RAIL_EFF.items()}
-    return SystemModel(comps, rails)
+# ---------------------------------------------------------------------------
+# declarative platform construction
+# ---------------------------------------------------------------------------
+
+def _mech_rows() -> list:
+    """(name, load kind, params) for the 46 mechanistic components."""
+    return [
+        # sensors (always on: capture path is scenario-independent, §V-A2)
+        ("rgb_camera", "sensor_fps", {"mw": 36.0}),
+        *[(f"gs_camera_{i}", "sensor_fps", {"mw": 17.0}) for i in range(4)],
+        *[(f"et_camera_{i}", "sensor_fps", {"mw": 7.0}) for i in range(2)],
+        ("et_ir_illuminator", "const", {"mw": 9.0}),
+        *[(f"imu_{i}", "const", {"mw": 1.6}) for i in range(2)],
+        *[(f"mic_{i}", "const", {"mw": 1.1}) for i in range(5)],
+        ("gnss", "const", {"mw": 11.0}),
+        ("magnetometer", "const", {"mw": 1.4}),
+        ("barometer", "const", {"mw": 0.9}),
+        # compute complex
+        ("coproc_soc_base", "const", {"mw": 72.0}),
+        ("isp", "isp", {"active_mw": 40.0, "floor_mw": 6.0}),
+        ("h265_codec", "codec", {"floor_mw": 5.0}),
+        ("sensor_hub_mcu", "const", {"mw": 10.0}),
+        ("dsp_audio", "dsp_audio", {"base_mw": 3.0, "idle_mw": 0.9}),
+        ("npu_ml", "npu", {"off_mw": 0.4}),
+        ("hwa_vio6dof", "hwa_vio", {"off_mw": 0.4}),
+        # memory
+        ("lpddr_dram", "dram", {"base_mw": 28.0}),
+        ("ocm_sram", "const", {"mw": 11.0}),
+        ("nor_flash", "const", {"mw": 7.0}),
+        # wireless
+        ("wifi_combo", "wifi", {}),
+        ("bt_radio", "const", {"mw": 6.0}),
+        # outputs
+        ("speaker_amp", "const", {"mw": 15.0}),
+        ("ui_led", "const", {"mw": 3.5}),
+        # platform
+        ("charger_ic", "const", {"mw": 2.2}),
+        ("usb_phy", "const", {"mw": 1.3}),
+        ("als_sensor", "const", {"mw": 0.7}),
+        ("privacy_led", "const", {"mw": 1.8}),
+        ("capacitive_touch", "const", {"mw": 1.2}),
+        ("hall_sensor", "const", {"mw": 0.3}),
+        ("wifi_fem", "const", {"mw": 7.5}),
+        ("audio_adc", "const", {"mw": 1.9}),
+        ("audio_hub_codec", "const", {"mw": 7.2}),
+        ("imu_aggregator_mcu", "const", {"mw": 6.8}),
+        ("pm_telemetry_hub", "const", {"mw": 6.5}),
+        ("status_display_drv", "const", {"mw": 7.8}),
+        ("storage_ctrl", "const", {"mw": 7.0}),
+        ("mic_bias_reg", "const", {"mw": 3.0}),
+    ]
+
+
+def _spec_for(name: str, kind: str, params: dict,
+              group: str = "mech") -> ComponentSpec:
+    cat, proc, rail, digf = _meta(name)
+    return ComponentSpec(name, cat, proc, rail, digf,
+                         LoadRule(kind, tuple(sorted(params.items()))),
+                         group)
+
+
+@functools.lru_cache(maxsize=1)
+def _isp_duty_table() -> tuple:
+    """ISP duty per placement-mask index (event-driven taskgraph sim)."""
+    out = []
+    for idx in range(1 << len(PRIMITIVES)):
+        on = {p: bool(idx >> i & 1) for i, p in enumerate(PRIMITIVES)}
+        duties = _duties(tuple(sorted(on.items())))
+        out.append(float(duties.get("isp", 1.0)))
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=1)
+def _ip_rate_table() -> tuple:
+    """Per-primitive sustained GFLOP/s on its accelerator (measured nets)."""
+    return tuple(sorted([
+        ("npu_ht", workloads.flops_rates({"hand_tracking": True})["npu"]),
+        ("npu_et", workloads.flops_rates({"eye_tracking": True})["npu"]),
+        ("hwa_vio", workloads.flops_rates({"vio": True})["hwa_vio"]),
+        ("dsp_asr", workloads.flops_rates({"asr": True})["dsp"]),
+    ]))
+
+
+@functools.lru_cache(maxsize=1)
+def aria2_platform() -> PlatformSpec:
+    """The baseline Aria2 glasses as a declarative PlatformSpec."""
+    comps = [_spec_for(*row) for row in _mech_rows()]
+    comps.extend(
+        ComponentSpec(c.name, c.category, c.process, c.rail,
+                      c.digital_fraction,
+                      LoadRule("const", (("mw", c.idle_mw),)), "tail")
+        for c in tail_components())
+    spec = PlatformSpec(
+        name="aria2",
+        components=tuple(comps),
+        rails=tuple(sorted(RAIL_EFF.items())),
+        theta=tuple(sorted(THETA0.items())),
+        raw_mbps=tuple(sorted(RAW_MBPS.items())),
+        ip_rates=_ip_rate_table(),
+        isp_duty=_isp_duty_table(),
+    )
+    return register(spec)
+
+
+@functools.lru_cache(maxsize=1)
+def aria2_display_platform() -> PlatformSpec:
+    """SKU variant: microLED display subsystem driven by the brightness
+    knob (in-lens contextual UI instead of the status LED strip)."""
+    spec = aria2_platform().variant(
+        "aria2_display",
+        add=(_spec_for("microled_display", "display",
+                       {"base_mw": 14.0, "max_mw": 260.0}),
+             _spec_for("display_pmic", "const", {"mw": 6.0})))
+    return register(spec)
+
+
+@functools.lru_cache(maxsize=1)
+def aria2_capture_only_platform() -> PlatformSpec:
+    """SKU variant: capture-and-offload only — no on-device ML IPs, no
+    eye-tracking optics, no speaker.  Evaluate with empty placements."""
+    spec = aria2_platform().variant(
+        "aria2_capture_only",
+        drop=("npu_ml", "hwa_vio6dof", "et_camera_0", "et_camera_1",
+              "et_ir_illuminator", "speaker_amp"),
+        replace=(_spec_for("coproc_soc_base", "const", {"mw": 48.0}),))
+    return register(spec)
+
+
+def platforms() -> tuple:
+    """Build + register all built-in Aria2 platform variants."""
+    return (aria2_platform(), aria2_display_platform(),
+            aria2_capture_only_platform())
+
+
+# ---------------------------------------------------------------------------
+# single-Scenario wrappers over the batched engine (compatibility API)
+# ---------------------------------------------------------------------------
+
+def _single(sc: Scenario, theta=None, plat: PlatformSpec | None = None):
+    from . import scenarios as S
+    plat = plat or aria2_platform()
+    return plat, S.evaluate(plat, S.ScenarioSet.from_scenarios([sc]), theta)
+
+
+def offloaded_mbps(sc: Scenario):
+    """Wireless uplink rate for a scenario (the compute<->comm trade)."""
+    _, rep = _single(sc)
+    return rep.offloaded_mbps[0]
+
+
+def component_loads(sc: Scenario, theta=None):
+    """Mechanistic component loads (mW) for a scenario.
+
+    Pure jnp in theta -> fully differentiable for calibration/sensitivity.
+    Delegates to the batched engine (scenarios.py); returns (loads, theta)
+    like the pre-redesign API.
+    """
+    plat, rep = _single(sc, theta)
+    th = dict(THETA0)
+    if theta:
+        th.update(theta)
+    names = plat.component_names()
+    mech = {c.name for c in plat.mech_components()}
+    loads = {n: rep.loads_mw[0, i] for i, n in enumerate(names)
+             if n in mech}
+    return loads, th
 
 
 def total_mw(sc: Scenario, theta=None):
     """Differentiable scenario total (mechanistic + tail + PD losses)."""
-    loads, th = component_loads(sc, theta)
+    _, rep = _single(sc, theta)
+    return rep.total_mw[0]
+
+
+def pd_share(sc: Scenario, theta=None):
+    _, rep = _single(sc, theta)
+    return rep.pd_share()[0]
+
+
+def build_system(sc: Scenario, theta=None,
+                 plat: PlatformSpec | None = None) -> SystemModel:
+    """Materialize a power.SystemModel snapshot of one scenario."""
+    plat, rep = _single(sc, theta, plat)
+    row = np.asarray(rep.loads_mw[0])
+    comps = [Component(c.name, c.category, c.process, idle_mw=float(mw),
+                       rail=c.rail, digital_fraction=c.digital_fraction)
+             for c, mw in zip(plat.components, row)]
+    th = dict(THETA0)
+    if theta:
+        th.update(theta)
+    rails = {r: Rail(r, min(e * th["eff_scale"], 0.97))
+             for r, e in plat.rails}
+    return SystemModel(comps, rails)
+
+
+# ---------------------------------------------------------------------------
+# pre-redesign reference implementation (parity oracle + bench baseline)
+# ---------------------------------------------------------------------------
+
+def _npu_load(on, th):
+    """NPU load: per-primitive pJ/FLOP x its measured GFLOP/s."""
+    ht = workloads.flops_rates({"hand_tracking": True})["npu"] * th["pj_ht"] \
+        if on["hand_tracking"] else 0.0
+    et = workloads.flops_rates({"eye_tracking": True})["npu"] * th["pj_et"] \
+        if on["eye_tracking"] else 0.0
+    if on["hand_tracking"] or on["eye_tracking"]:
+        return th["ip_idle_mw"] + ht + et
+    return 0.4
+
+
+def legacy_offloaded_mbps(sc: Scenario):
+    c, fs = sc.compression, sc.fps_scale
+    on = sc.placements()
+    mbps = RAW_MBPS["rgb"] / c / fs                 # RGB always offloaded
+    if on["hand_tracking"] and on["vio"]:
+        gs = 0.0                                    # cameras fully consumed
+    elif on["hand_tracking"]:
+        gs = RAW_MBPS["gs_vio_share"]               # VIO's 10fps subset
+    else:
+        gs = RAW_MBPS["gs"]                         # HT needs full 30fps
+    mbps += gs / c / fs
+    if not on["eye_tracking"]:
+        mbps += RAW_MBPS["et"] / c / fs
+    if not on["asr"]:
+        mbps += RAW_MBPS["audio_opus"]
+    mbps += RAW_MBPS["imu"] + RAW_MBPS["aux"]
+    mbps += RAW_MBPS["signals"] * sum(on.values())
+    return mbps
+
+
+def legacy_component_loads(sc: Scenario, theta=None):
+    """The seed per-scenario dict implementation, kept verbatim as the
+    reference oracle for the batched engine (tests/dse_bench)."""
+    th = dict(THETA0)
+    if theta:
+        th.update(theta)
+    on = sc.placements()
+    duties = _duties(tuple(sorted(on.items())))
+    rates = workloads.flops_rates(on)
+    fs = sc.fps_scale
+    mbps = legacy_offloaded_mbps(sc)
+    raw_visual = (RAW_MBPS["rgb"] + RAW_MBPS["gs"] + RAW_MBPS["et"]) / fs
+    # raw pixel rate entering the codec (compressed-for-offload streams +
+    # RGB which is always compressed)
+    codec_raw = RAW_MBPS["rgb"] / fs
+    if not (on["hand_tracking"] and on["vio"]):
+        codec_raw += (RAW_MBPS["gs"] if not on["hand_tracking"]
+                      else RAW_MBPS["gs_vio_share"]) / fs
+    if not on["eye_tracking"]:
+        codec_raw += RAW_MBPS["et"] / fs
+
+    fps_f = 0.35 + 0.65 / fs           # sensors have a static power floor
+
+    loads = {
+        "rgb_camera":       36.0 * fps_f,
+        **{f"gs_camera_{i}": 17.0 * fps_f for i in range(4)},
+        **{f"et_camera_{i}": 7.0 * fps_f for i in range(2)},
+        "et_ir_illuminator": 9.0,
+        **{f"imu_{i}": 1.6 for i in range(2)},
+        **{f"mic_{i}": 1.1 for i in range(5)},
+        "gnss": 11.0, "magnetometer": 1.4, "barometer": 0.9,
+        "coproc_soc_base": 72.0,
+        "isp": 40.0 * duties.get("isp", 1.0) / max(fs, 1.0) + 6.0,
+        "h265_codec": th["codec_mw_per_rawmbps"] * codec_raw + 5.0,
+        "sensor_hub_mcu": 10.0,
+        "dsp_audio": 3.0 + (rates["dsp"] * th["pj_asr"]
+                            if on["asr"] else 0.9),
+        "npu_ml": _npu_load(on, th),
+        "hwa_vio6dof": (th["ip_idle_mw"] + rates["hwa_vio"] * th["pj_vio"])
+                       if on["vio"] else 0.4,
+        "lpddr_dram": 28.0 + th["dram_mw_per_mbps"] * raw_visual / 8,
+        "ocm_sram": 11.0,
+        "nor_flash": 7.0,
+        "wifi_combo": th["wifi_link_mw"] + th["wifi_mw_per_mbps"] * mbps,
+        "bt_radio": 6.0,
+        "speaker_amp": 15.0,
+        "ui_led": 3.5,
+        "charger_ic": 2.2,
+        "usb_phy": 1.3,
+        "als_sensor": 0.7,
+        "privacy_led": 1.8,
+        "capacitive_touch": 1.2,
+        "hall_sensor": 0.3,
+        "wifi_fem": 7.5,
+        "audio_adc": 1.9,
+        "audio_hub_codec": 7.2,
+        "imu_aggregator_mcu": 6.8,
+        "pm_telemetry_hub": 6.5,
+        "status_display_drv": 7.8,
+        "storage_ctrl": 7.0,
+        "mic_bias_reg": 3.0,
+    }
+    return loads, th
+
+
+def legacy_total_mw(sc: Scenario, theta=None):
+    """Seed per-scenario total: Python dict + per-call jnp ops."""
+    loads, th = legacy_component_loads(sc, theta)
     total = jnp.zeros(())
     for name, mw in loads.items():
         _, _, rail, _ = _meta(name)
@@ -292,10 +491,3 @@ def total_mw(sc: Scenario, theta=None):
     total = total + TAIL_TOTAL_MW / jnp.minimum(
         RAIL_EFF["sys"] * th["eff_scale"], 0.97)
     return total
-
-
-def pd_share(sc: Scenario, theta=None):
-    loads, th = component_loads(sc, theta)
-    load_sum = sum(loads.values()) + TAIL_TOTAL_MW
-    tot = total_mw(sc, theta)
-    return (tot - load_sum) / tot

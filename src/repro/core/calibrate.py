@@ -3,8 +3,10 @@
 The paper reports (Fig 4) per-primitive placement deltas, (Fig 3) a 16%
 full-on-device saving, and (§VI-C) ~20% power delivery share.  We fit the
 physical coefficients THETA (radio energy/bit, pJ/FLOP per IP, PD
-efficiency) by gradient descent — the power model is differentiable end to
-end (power.py), so this is a few hundred Adam steps, not a manual sweep.
+efficiency) by gradient descent — the batched scenario engine
+(scenarios.py) is differentiable end to end, so every Adam step evaluates
+ALL target scenarios in one vmapped forward/backward pass instead of a
+Python loop over placements.
 
 Fitted values land in calibrated.json (loaded by aria2 at import); the
 benchmark reports show model-vs-paper residuals.
@@ -16,9 +18,11 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from . import aria2
+from . import aria2, scenarios
 from .aria2 import PRIMITIVES, Scenario
+from .scenarios import ScenarioSet
 
 # paper targets: scenario -> delta vs full-offload (% of full-offload total)
 PAPER_DELTAS = {
@@ -45,6 +49,19 @@ BOUNDS = {
 
 CAL_PATH = Path(__file__).with_name("calibrated.json")
 
+# row 0 = full offload; rows 1.. = the paper's placement targets, with the
+# full-on-device row doubling as the PD-share probe
+_TARGET_PLACEMENTS = [(), *PAPER_DELTAS.keys()]
+_TARGETS = jnp.asarray(list(PAPER_DELTAS.values()), jnp.float32)
+_WEIGHTS = jnp.asarray([2.0 if len(p) >= 2 else 1.0
+                        for p in PAPER_DELTAS], jnp.float32)
+_ON_DEVICE_ROW = _TARGET_PLACEMENTS.index(tuple(PRIMITIVES))
+
+
+def _target_set() -> ScenarioSet:
+    return ScenarioSet.from_scenarios(
+        [Scenario("cal", p) for p in _TARGET_PLACEMENTS])
+
 
 def _unpack(z):
     th = {}
@@ -55,7 +72,6 @@ def _unpack(z):
 
 
 def _pack(theta):
-    import numpy as np
     z = []
     for k in FIT_KEYS:
         lo, hi = BOUNDS[k]
@@ -66,14 +82,13 @@ def _pack(theta):
 
 def loss_fn(z):
     th = _unpack(z)
-    p0 = aria2.total_mw(aria2.FULL_OFFLOAD, th)
-    loss = 0.0
-    for placement, target in PAPER_DELTAS.items():
-        p = aria2.total_mw(Scenario("s", placement), th)
-        delta = 100.0 * (p - p0) / p0
-        w = 2.0 if len(placement) >= 2 else 1.0
-        loss = loss + w * (delta - target) ** 2
-    pd = aria2.pd_share(aria2.FULL_ON_DEVICE, th)
+    plat = aria2.aria2_platform()
+    rep = scenarios.evaluate(plat, _target_set(), th)
+    totals = rep.total_mw
+    p0 = totals[0]
+    deltas = 100.0 * (totals[1:] - p0) / p0
+    loss = jnp.sum(_WEIGHTS * (deltas - _TARGETS) ** 2)
+    pd = rep.pd_share()[_ON_DEVICE_ROW]
     loss = loss + 3000.0 * (pd - PAPER_PD_SHARE) ** 2
     loss = loss + 0.1 * ((p0 - ANCHOR_TOTAL_MW) / 100.0) ** 2
     return loss
@@ -97,14 +112,16 @@ def fit(steps: int = 600, lr: float = 0.05, verbose: bool = True):
 
 
 def report(theta=None):
-    p0 = float(aria2.total_mw(aria2.FULL_OFFLOAD, theta))
+    plat = aria2.aria2_platform()
+    rep = scenarios.evaluate(plat, _target_set(), theta)
+    totals = np.asarray(rep.total_mw)
+    p0 = float(totals[0])
     rows = []
-    for placement, target in PAPER_DELTAS.items():
-        p = float(aria2.total_mw(Scenario("s", placement), theta))
-        d = 100.0 * (p - p0) / p0
+    for i, (placement, target) in enumerate(PAPER_DELTAS.items()):
+        d = 100.0 * (float(totals[1 + i]) - p0) / p0
         rows.append({"placement": "+".join(placement), "paper": target,
                      "model": round(d, 2), "residual": round(d - target, 2)})
-    pd = float(aria2.pd_share(aria2.FULL_ON_DEVICE, theta))
+    pd = float(np.asarray(rep.pd_share())[_ON_DEVICE_ROW])
     return {"full_offload_mw": round(p0, 1), "deltas": rows,
             "pd_share": round(pd, 4), "pd_target": PAPER_PD_SHARE}
 

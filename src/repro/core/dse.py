@@ -1,4 +1,8 @@
-"""Design-space exploration (§V-B, §VI-B) + beyond-paper extensions.
+"""Design-space exploration (§V-B, §VI-B) on the batched scenario engine.
+
+Every sweep below builds ONE `ScenarioSet` and evaluates it through a
+single jitted `jax.vmap` device call (scenarios.evaluate) — no Python
+per-point loops or `float()` host round-trips on the hot path.
 
 Paper sweeps:
   * placement_sweep      — all 2^4 on/off-device primitive placements
@@ -7,86 +11,133 @@ Paper sweeps:
                            full-offload configuration (Fig 6).
 
 Beyond-paper:
-  * sensitivity          — d(total power)/d(theta) via jax.grad: ranks
-                           which physical coefficient buys the most power
-                           per unit improvement, replacing manual sweeps.
+  * grid_sweep           — the full placement x compression x fps grid
+                           (>= 768 points) in one call, any platform.
+  * sensitivity          — d(total power)/d(theta) via jax.grad through
+                           the batched evaluator.
   * pareto               — placement x compression grid -> (power,
                            offload-bandwidth) Pareto front: bandwidth is a
                            proxy for backend context fidelity.
 """
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from . import aria2
+from . import aria2, scenarios
 from .aria2 import PRIMITIVES, Scenario
+from .platform import PlatformSpec
+from .scenarios import ScenarioSet, all_placements
 
 
-def placement_sweep():
-    p0 = float(aria2.total_mw(aria2.FULL_OFFLOAD))
-    rows = []
-    for r in range(len(PRIMITIVES) + 1):
-        for subset in itertools.combinations(PRIMITIVES, r):
-            p = float(aria2.total_mw(Scenario("dse", subset)))
-            rows.append({
-                "on_device": "+".join(subset) if subset else "(none)",
-                "total_mw": round(p, 1),
-                "delta_pct": round(100 * (p - p0) / p0, 2),
-                "offload_mbps": round(
-                    float(aria2.offloaded_mbps(Scenario("d", subset))), 2),
-            })
+def _plat(platform: PlatformSpec | str | None) -> PlatformSpec:
+    if platform is None:
+        return aria2.aria2_platform()
+    if isinstance(platform, str):
+        from . import platform as registry
+        aria2.platforms()          # ensure built-ins registered
+        return registry.get(platform)
+    return platform
+
+
+def grid_sweep(platform=None, placements=None,
+               compressions=scenarios.GRID_COMPRESSIONS,
+               fps_scales=scenarios.GRID_FPS_SCALES,
+               **knobs) -> scenarios.BatchReport:
+    """Full DSE grid (default 16 x 8 x 6 = 768 points) in one device call.
+
+    Default placements are every subset of the primitives the platform
+    can actually run on-device (reduced SKUs sweep a smaller grid)."""
+    plat = _plat(platform)
+    if placements is None:
+        placements = all_placements(plat.supported_primitives())
+    sset = ScenarioSet.grid(placements=placements,
+                            compressions=compressions,
+                            fps_scales=fps_scales,
+                            primitives=plat.primitives, **knobs)
+    return scenarios.evaluate(plat, sset)
+
+
+def placement_sweep(platform=None):
+    plat = _plat(platform)
+    subsets = all_placements(plat.supported_primitives())
+    sset = ScenarioSet.grid(placements=subsets, compressions=(10.0,),
+                            fps_scales=(1.0,), primitives=plat.primitives)
+    rep = scenarios.evaluate(plat, sset)
+    totals = np.asarray(rep.total_mw)
+    mbps = np.asarray(rep.offloaded_mbps)
+    p0 = totals[0]                     # empty subset == full offload
+    rows = [{
+        "on_device": "+".join(subset) if subset else "(none)",
+        "total_mw": round(float(p), 1),
+        "delta_pct": round(100 * float(p - p0) / float(p0), 2),
+        "offload_mbps": round(float(m), 2),
+    } for subset, p, m in zip(subsets, totals, mbps)]
     return sorted(rows, key=lambda r: r["total_mw"])
 
 
 def compression_sweep(compressions=(1, 2, 4, 8, 16, 32, 64, 128),
-                      fps_scales=(1, 2, 4, 8, 16, 32)):
+                      fps_scales=(1, 2, 4, 8, 16, 32), platform=None):
+    plat = _plat(platform)
+    sset = ScenarioSet.grid(placements=((),),
+                            compressions=[float(c) for c in compressions],
+                            fps_scales=[float(f) for f in fps_scales],
+                            primitives=plat.primitives)
+    rep = scenarios.evaluate(plat, sset)
+    totals = np.asarray(rep.total_mw)
+    mbps = np.asarray(rep.offloaded_mbps)
     rows = []
-    for c in compressions:
-        for f in fps_scales:
-            sc = Scenario("sweep", (), compression=float(c),
-                          fps_scale=float(f))
-            rows.append({
-                "compression": c, "fps_scale": f,
-                "offload_mbps": round(float(aria2.offloaded_mbps(sc)), 2),
-                "total_mw": round(float(aria2.total_mw(sc)), 1),
-            })
+    for i, (c, f) in enumerate((c, f) for c in compressions
+                               for f in fps_scales):
+        rows.append({
+            "compression": c, "fps_scale": f,
+            "offload_mbps": round(float(mbps[i]), 2),
+            "total_mw": round(float(totals[i]), 1),
+        })
     return rows
 
 
-def sensitivity(scenario: Scenario | None = None, keys=None):
-    """d(total)/d(theta_k): mW of system power per unit of coefficient."""
+def sensitivity(scenario: Scenario | None = None, keys=None, platform=None):
+    """d(total)/d(theta_k): mW of system power per unit of coefficient.
+
+    Gradients flow through the batched engine (one reverse pass for the
+    whole coefficient set)."""
+    plat = _plat(platform)
     sc = scenario or aria2.FULL_ON_DEVICE
     keys = keys or list(aria2.THETA0)
     th0 = {k: jnp.asarray(float(aria2.THETA0[k])) for k in keys}
+    sset = ScenarioSet.from_scenarios([sc])
 
     def f(th):
-        return aria2.total_mw(sc, th)
+        return scenarios.total_mw(plat, sset, th)[0]
 
     grads = jax.grad(f)(th0)
+    base = float(f(th0))
     rows = [{"theta": k, "value": float(th0[k]),
              "d_total_mw_d_theta": float(grads[k]),
-             "elasticity": float(grads[k] * th0[k] / f(th0))}
+             "elasticity": float(grads[k]) * float(th0[k]) / base}
             for k in keys]
     return sorted(rows, key=lambda r: -abs(r["elasticity"]))
 
 
-def pareto(compressions=(4, 10, 20, 40)):
+def pareto(compressions=(4, 10, 20, 40), platform=None):
     """Placement x compression -> non-dominated (power, bandwidth) points."""
-    pts = []
-    for r in range(len(PRIMITIVES) + 1):
-        for subset in itertools.combinations(PRIMITIVES, r):
-            for c in compressions:
-                sc = Scenario("p", subset, compression=float(c))
-                pts.append({
-                    "on_device": "+".join(subset) or "(none)",
-                    "compression": c,
-                    "total_mw": round(float(aria2.total_mw(sc)), 1),
-                    "offload_mbps": round(float(aria2.offloaded_mbps(sc)), 2),
-                })
+    plat = _plat(platform)
+    subsets = all_placements(plat.supported_primitives())
+    labels = [(s, c) for s in subsets for c in compressions]
+    sset = ScenarioSet.grid(placements=subsets,
+                            compressions=[float(c) for c in compressions],
+                            fps_scales=(1.0,), primitives=plat.primitives)
+    rep = scenarios.evaluate(plat, sset)
+    totals = np.asarray(rep.total_mw)
+    mbps = np.asarray(rep.offloaded_mbps)
+    pts = [{
+        "on_device": "+".join(s) or "(none)",
+        "compression": c,
+        "total_mw": round(float(totals[i]), 1),
+        "offload_mbps": round(float(mbps[i]), 2),
+    } for i, (s, c) in enumerate(labels)]
     front = []
     for p in sorted(pts, key=lambda x: x["total_mw"]):
         if all(p["offload_mbps"] > q["offload_mbps"] for q in front):

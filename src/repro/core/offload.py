@@ -7,16 +7,24 @@ request rate — and sizes a backend pod fleet from the dry-run/§Perf
 roofline numbers.  This closes the loop between the paper's device model
 and our 256-chip backend cells: the compute the device *doesn't* do
 (Fig 4's placement trade-off) reappears here as backend tokens/second.
+
+When no dry-run artifact exists for a cell, sizing falls back to a
+deterministic nominal capacity (FALLBACK_BOUND_S) and the row carries an
+explicit ``"missing_artifact"`` note — it never returns silent ``inf``
+pods.  `fleet_grid` sizes fleets for a whole `ScenarioSet` off one
+batched device evaluation.
 """
 from __future__ import annotations
 
-import glob
 import json
 from dataclasses import dataclass
 from pathlib import Path
 
-from . import aria2
+import numpy as np
+
+from . import aria2, scenarios
 from .aria2 import RAW_MBPS, Scenario
+from .scenarios import ScenarioSet
 
 RESULTS = Path(__file__).resolve().parents[3] / "results"
 
@@ -32,6 +40,11 @@ STREAM_SERVICE = {
     # long-horizon personal-context aggregation (months of signals)
     "context": ("mamba2-2.7b", "train_4k", 30.0),
 }
+
+# deterministic nominal step-time bounds (s) per shape class, used when no
+# dry-run artifact exists: conservative roofline-scale numbers for a
+# 256-chip pod so sizing stays finite and reproducible
+FALLBACK_BOUND_S = {"prefill": 2.0, "train": 6.0, "decode": 0.05}
 
 
 @dataclass(frozen=True)
@@ -59,23 +72,30 @@ def backend_demand(sc: Scenario) -> list[BackendDemand]:
     return rows
 
 
-def _cell_tokens_per_s(arch: str, shape: str, results_dir=None) -> float:
-    """Tokens/s/pod for a cell from its dry-run roofline bound."""
+def _shape_tokens(shape: str) -> float:
+    if shape.startswith("train"):
+        return 256 * 4096
+    if shape.startswith("prefill"):
+        return 32 * 32768
+    return 128
+
+
+def _cell_tokens_per_s(arch: str, shape: str,
+                       results_dir=None) -> tuple[float, str]:
+    """(tokens/s/pod, source) for a cell; source is "dryrun" when the
+    roofline artifact exists, else the deterministic "fallback" path."""
     d = Path(results_dir) if results_dir else RESULTS / "dryrun"
     f = d / f"{arch}__{shape}__single.json"
-    if not f.exists():
-        return 0.0
-    r = json.loads(f.read_text())
-    if not r.get("ok"):
-        return 0.0
-    bound_s = max(r["terms"].values())          # modeled step time
-    if shape.startswith("train"):
-        toks = 256 * 4096
-    elif shape.startswith("prefill"):
-        toks = 32 * 32768
-    else:
-        toks = 128
-    return toks / bound_s if bound_s else 0.0
+    bound_s = None
+    if f.exists():
+        r = json.loads(f.read_text())
+        if r.get("ok") and r.get("terms"):
+            bound_s = max(r["terms"].values())      # modeled step time
+    if bound_s:
+        return _shape_tokens(shape) / bound_s, "dryrun"
+    cls = shape.split("_")[0]
+    fb = FALLBACK_BOUND_S.get(cls, FALLBACK_BOUND_S["prefill"])
+    return _shape_tokens(shape) / fb, "fallback"
 
 
 def size_fleet(sc: Scenario, n_users: float = 1e6,
@@ -83,7 +103,8 @@ def size_fleet(sc: Scenario, n_users: float = 1e6,
     """Pods needed to serve n_users wearables in scenario `sc`.
 
     duty = fraction of the day streams are active (§II: always-on sensing,
-    VAD/saliency-gated upload).
+    VAD/saliency-gated upload).  Rows sized from the fallback capacity
+    carry note="missing_artifact" — pods are always finite.
     """
     rows = []
     for d in backend_demand(sc):
@@ -92,13 +113,16 @@ def size_fleet(sc: Scenario, n_users: float = 1e6,
                          "pods": 0.0, "note": "computed on-device"})
             continue
         demand = n_users * duty * d.tokens_per_user_s
-        cap = _cell_tokens_per_s(d.arch, d.cell, results_dir)
-        rows.append({
+        cap, source = _cell_tokens_per_s(d.arch, d.cell, results_dir)
+        row = {
             "stream": d.stream, "arch": d.arch, "cell": d.cell,
             "tokens_per_s": demand,
             "pod_tokens_per_s": round(cap, 1),
-            "pods": round(demand / cap, 1) if cap else float("inf"),
-        })
+            "pods": round(demand / cap, 1),
+        }
+        if source == "fallback":
+            row["note"] = "missing_artifact"    # sized from FALLBACK_BOUND_S
+        rows.append(row)
     return rows
 
 
@@ -110,3 +134,41 @@ def offload_summary(sc: Scenario) -> dict:
         "device_mw": round(float(aria2.total_mw(sc)), 1),
         "backend": [d.__dict__ for d in backend_demand(sc)],
     }
+
+
+def fleet_grid(sset: ScenarioSet, n_users: float = 1e6, duty: float = 0.35,
+               results_dir=None, platform=None) -> list[dict]:
+    """Fleet sizing for a whole ScenarioSet off ONE batched device eval.
+
+    Returns one row per scenario: device power, gated uplink, and total
+    backend pods (device<->datacenter joint design space in one sweep)."""
+    plat = platform or aria2.aria2_platform()
+    rep = scenarios.evaluate(plat, sset)
+    totals = np.asarray(rep.total_mw)
+    mbps = np.asarray(rep.offloaded_mbps)
+    asr_col = sset.primitives.index("asr")
+    caps = {s: _cell_tokens_per_s(arch, cell, results_dir)
+            for s, (arch, cell, _) in STREAM_SERVICE.items()}
+    out = []
+    for i in range(len(sset)):
+        pods = 0.0
+        missing = []
+        # the scenario's VAD/saliency gating throttles backend ingest the
+        # same way it throttles the uplink
+        eff_duty = duty * float(sset.upload_duty[i])
+        for stream, (arch, cell, tok) in STREAM_SERVICE.items():
+            if stream == "audio" and sset.placement[i, asr_col] > 0.5:
+                continue                     # ASR on-device
+            cap, source = caps[stream]
+            pods += n_users * eff_duty * tok / cap
+            if source == "fallback":
+                missing.append(stream)
+        out.append({
+            "scenario": sset.label(i),
+            "device_mw": round(float(totals[i]), 1),
+            "uplink_mbps": round(float(mbps[i]), 2),
+            "backend_pods": round(pods, 1),
+            **({"note": "missing_artifact:" + "+".join(missing)}
+               if missing else {}),
+        })
+    return out

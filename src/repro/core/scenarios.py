@@ -1,0 +1,391 @@
+"""`ScenarioSet` batch API + the jit/vmap evaluation engine.
+
+Scenarios are encoded struct-of-arrays: a placement mask over the
+platform's egocentric primitives plus per-scenario knobs (compression,
+fps_scale, WiFi MCS tier, upload duty / VAD gating, display brightness).
+A `PlatformSpec` compiles — once, cached — into a single jitted
+`jax.vmap` kernel that maps the whole batch to per-component loads,
+delivered totals (incl. power-delivery losses) and uplink rates.  A full
+16-placement x 8-compression x 6-fps DSE grid is then ONE device call
+instead of ~768 Python evaluations with `float()` host round-trips.
+
+    platform = aria2.aria2_platform()
+    sset = ScenarioSet.grid()                    # 768 design points
+    rep = evaluate(platform, sset)               # one vmap call
+    rep.total_mw                                 # (768,)
+    rep.category_breakdown()["wireless"]         # (768,)
+
+Everything stays differentiable in theta, so calibration and sensitivity
+run `jax.grad` straight through the batched evaluator.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from dataclasses import dataclass, field, replace as _dc_replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .platform import PRIMITIVES, PlatformSpec
+
+# WiFi MCS tiers: (name, energy-per-bit scale, link-maintenance scale)
+# relative to the MCS8 calibration point. Lower-order modulations spend
+# less energy per bit and idle cheaper; 256-QAM buys peak rate at a
+# link-power premium.
+MCS_TIERS = (
+    ("mcs2_qpsk", 0.62, 0.82),
+    ("mcs8_baseline", 1.00, 1.00),
+    ("mcs11_256qam", 1.38, 1.17),
+)
+DEFAULT_MCS = 1                         # mcs8: the paper's operating point
+
+_MCS_EBIT = np.array([t[1] for t in MCS_TIERS], np.float32)
+_MCS_LINK = np.array([t[2] for t in MCS_TIERS], np.float32)
+
+# default DSE grid axes (paper Fig 4 x Fig 6)
+GRID_COMPRESSIONS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0)
+GRID_FPS_SCALES = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0)
+
+
+def all_placements(primitives=PRIMITIVES) -> tuple:
+    """All 2^n on-device subsets, in the paper's sweep order (by size)."""
+    out = []
+    for r in range(len(primitives) + 1):
+        out.extend(itertools.combinations(primitives, r))
+    return tuple(out)
+
+
+@dataclass(frozen=True)
+class ScenarioSet:
+    """Struct-of-arrays scenario batch (all arrays share leading dim N)."""
+    placement: np.ndarray           # (N, n_primitives) 0/1 mask
+    compression: np.ndarray         # (N,)
+    fps_scale: np.ndarray           # (N,)
+    mcs_tier: np.ndarray            # (N,) int index into MCS_TIERS
+    upload_duty: np.ndarray         # (N,) fraction of time uplink streams
+    brightness: np.ndarray          # (N,) display brightness 0..1
+    names: tuple = ()
+    primitives: tuple = PRIMITIVES
+
+    def __len__(self) -> int:
+        return int(self.placement.shape[0])
+
+    def vec(self) -> dict:
+        """The engine's batched knob vector (pytree of jnp arrays)."""
+        return {
+            "placement": jnp.asarray(self.placement, jnp.float32),
+            "compression": jnp.asarray(self.compression, jnp.float32),
+            "fps_scale": jnp.asarray(self.fps_scale, jnp.float32),
+            "mcs_tier": jnp.asarray(self.mcs_tier, jnp.int32),
+            "upload_duty": jnp.asarray(self.upload_duty, jnp.float32),
+            "brightness": jnp.asarray(self.brightness, jnp.float32),
+        }
+
+    def on_device(self, i: int) -> tuple:
+        return tuple(p for j, p in enumerate(self.primitives)
+                     if self.placement[i, j] > 0.5)
+
+    def label(self, i: int) -> str:
+        if self.names and i < len(self.names) and self.names[i]:
+            return self.names[i]
+        return "+".join(self.on_device(i)) or "(none)"
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def build(cls, rows: list, primitives=PRIMITIVES) -> "ScenarioSet":
+        """rows: dicts with on_device/compression/fps_scale/... knobs."""
+        n = len(rows)
+        pl = np.zeros((n, len(primitives)), np.float32)
+        comp = np.ones(n, np.float32)
+        fps = np.ones(n, np.float32)
+        mcs = np.full(n, DEFAULT_MCS, np.int32)
+        duty = np.ones(n, np.float32)
+        bright = np.zeros(n, np.float32)
+        names = []
+        for i, r in enumerate(rows):
+            for p in r.get("on_device", ()):
+                if p not in primitives:
+                    raise ValueError(f"unknown primitive {p!r}; "
+                                     f"one of {primitives}")
+                pl[i, primitives.index(p)] = 1.0
+            comp[i] = r.get("compression", 10.0)
+            fps[i] = r.get("fps_scale", 1.0)
+            tier = int(r.get("mcs_tier", DEFAULT_MCS))
+            if not 0 <= tier < len(MCS_TIERS):
+                raise ValueError(f"mcs_tier {tier} out of range "
+                                 f"[0, {len(MCS_TIERS)})")
+            mcs[i] = tier
+            duty[i] = r.get("upload_duty", 1.0)
+            bright[i] = r.get("brightness", 0.0)
+            names.append(r.get("name", ""))
+        return cls(pl, comp, fps, mcs, duty, bright, tuple(names),
+                   primitives)
+
+    @classmethod
+    def from_scenarios(cls, scenarios, primitives=PRIMITIVES):
+        """From legacy `aria2.Scenario` objects (the migration path)."""
+        return cls.build([{
+            "name": s.name, "on_device": s.on_device,
+            "compression": s.compression, "fps_scale": s.fps_scale,
+            "mcs_tier": getattr(s, "mcs_tier", DEFAULT_MCS),
+            "upload_duty": getattr(s, "upload_duty", 1.0),
+            "brightness": getattr(s, "brightness", 0.0),
+        } for s in scenarios], primitives)
+
+    @classmethod
+    def grid(cls, placements=None, compressions=GRID_COMPRESSIONS,
+             fps_scales=GRID_FPS_SCALES, mcs_tiers=(DEFAULT_MCS,),
+             upload_duties=(1.0,), brightnesses=(0.0,),
+             primitives=PRIMITIVES) -> "ScenarioSet":
+        """Cartesian product over knob axes (placement outermost)."""
+        placements = (all_placements(primitives) if placements is None
+                      else tuple(placements))
+        rows = [{"on_device": p, "compression": float(c),
+                 "fps_scale": float(f), "mcs_tier": int(m),
+                 "upload_duty": float(u), "brightness": float(b)}
+                for p in placements for c in compressions
+                for f in fps_scales for m in mcs_tiers
+                for u in upload_duties for b in brightnesses]
+        return cls.build(rows, primitives)
+
+    def with_knob(self, **arrays) -> "ScenarioSet":
+        """Replace whole knob columns (broadcast scalars over N)."""
+        n = len(self)
+        if "mcs_tier" in arrays:
+            tiers = np.asarray(arrays["mcs_tier"])
+            if tiers.min() < 0 or tiers.max() >= len(MCS_TIERS):
+                raise ValueError(f"mcs_tier out of range "
+                                 f"[0, {len(MCS_TIERS)})")
+        upd = {k: np.broadcast_to(np.asarray(v, np.float32), (n,)).copy()
+               if k != "mcs_tier"
+               else np.broadcast_to(np.asarray(v, np.int32), (n,)).copy()
+               for k, v in arrays.items()}
+        return _dc_replace(self, **upd)
+
+
+# ---------------------------------------------------------------------------
+# derived per-scenario features feeding the load rules
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Features:
+    """jnp scalars derived from one scenario's knobs (vmapped axis 0)."""
+    vio: jnp.ndarray
+    et: jnp.ndarray
+    asr: jnp.ndarray
+    ht: jnp.ndarray
+    n_on: jnp.ndarray
+    compression: jnp.ndarray
+    fps_scale: jnp.ndarray
+    fps_f: jnp.ndarray              # sensor static-power factor
+    mbps: jnp.ndarray               # instantaneous uplink rate
+    mbps_eff: jnp.ndarray           # duty-gated average uplink rate
+    codec_raw: jnp.ndarray          # raw pixel rate entering the codec
+    raw_visual: jnp.ndarray         # raw visual traffic (DRAM)
+    isp_duty: jnp.ndarray
+    upload_duty: jnp.ndarray
+    brightness: jnp.ndarray
+    mcs_ebit_scale: jnp.ndarray
+    mcs_link_scale: jnp.ndarray
+    r_npu_ht: float                 # platform GFLOP/s x primitive constants
+    r_npu_et: float
+    r_hwa_vio: float
+    r_dsp_asr: float
+
+
+def _features(platform: PlatformSpec, vec: dict, th: dict) -> Features:
+    R = dict(platform.raw_mbps)
+    rates = dict(platform.ip_rates)
+    prim = platform.primitives
+    on = vec["placement"]
+    vio = on[prim.index("vio")]
+    et = on[prim.index("eye_tracking")]
+    asr = on[prim.index("asr")]
+    ht = on[prim.index("hand_tracking")]
+    c, fs = vec["compression"], vec["fps_scale"]
+    n_on = jnp.sum(on)
+    fps_f = 0.35 + 0.65 / fs
+
+    # outward GS cameras: consumed on-device by HT(+VIO), else offloaded
+    gs_off = (1.0 - ht) * R["gs"] + ht * (1.0 - vio) * R["gs_vio_share"]
+    visual_off = R["rgb"] + gs_off + (1.0 - et) * R["et"]
+    mbps = (visual_off / (c * fs) + (1.0 - asr) * R["audio_opus"]
+            + R["imu"] + R["aux"] + R["signals"] * n_on)
+    codec_raw = visual_off / fs
+    raw_visual = (R["rgb"] + R["gs"] + R["et"]) / fs
+
+    # placement-mask index -> ISP duty from the event-driven taskgraph sim
+    bits = jnp.asarray([1 << i for i in range(len(prim))], jnp.float32)
+    idx = jnp.round(jnp.sum(on * bits)).astype(jnp.int32)
+    isp_duty = jnp.take(jnp.asarray(platform.isp_duty, jnp.float32), idx)
+
+    mcs = vec["mcs_tier"]
+    duty = vec["upload_duty"]
+    return Features(
+        vio=vio, et=et, asr=asr, ht=ht, n_on=n_on, compression=c,
+        fps_scale=fs, fps_f=fps_f, mbps=mbps, mbps_eff=mbps * duty,
+        codec_raw=codec_raw, raw_visual=raw_visual, isp_duty=isp_duty,
+        upload_duty=duty, brightness=vec["brightness"],
+        mcs_ebit_scale=jnp.take(jnp.asarray(_MCS_EBIT), mcs),
+        mcs_link_scale=jnp.take(jnp.asarray(_MCS_LINK), mcs),
+        r_npu_ht=rates.get("npu_ht", 0.0), r_npu_et=rates.get("npu_et", 0.0),
+        r_hwa_vio=rates.get("hwa_vio", 0.0),
+        r_dsp_asr=rates.get("dsp_asr", 0.0))
+
+
+# ---------------------------------------------------------------------------
+# load-rule implementations (platform.LOAD_KIND_NAMES)
+# ---------------------------------------------------------------------------
+
+LOAD_KINDS = {
+    "const": lambda p, f, th: jnp.asarray(p["mw"], jnp.float32),
+    "sensor_fps": lambda p, f, th: p["mw"] * f.fps_f,
+    "isp": lambda p, f, th: (p["active_mw"] * f.isp_duty
+                             / jnp.maximum(f.fps_scale, 1.0)
+                             + p["floor_mw"]),
+    "codec": lambda p, f, th: (th["codec_mw_per_rawmbps"] * f.codec_raw
+                               + p["floor_mw"]),
+    "dsp_audio": lambda p, f, th: (p["base_mw"]
+                                   + f.asr * f.r_dsp_asr * th["pj_asr"]
+                                   + (1.0 - f.asr) * p["idle_mw"]),
+    "npu": lambda p, f, th: _npu(p, f, th),
+    "hwa_vio": lambda p, f, th: (f.vio * (th["ip_idle_mw"]
+                                          + f.r_hwa_vio * th["pj_vio"])
+                                 + (1.0 - f.vio) * p["off_mw"]),
+    "dram": lambda p, f, th: (p["base_mw"]
+                              + th["dram_mw_per_mbps"] * f.raw_visual / 8.0),
+    "wifi": lambda p, f, th: (th["wifi_link_mw"] * f.mcs_link_scale
+                              + th["wifi_mw_per_mbps"] * f.mcs_ebit_scale
+                              * f.mbps_eff),
+    "display": lambda p, f, th: p["base_mw"] + p["max_mw"] * f.brightness,
+}
+
+
+def _npu(p, f, th):
+    any_on = jnp.maximum(f.ht, f.et)
+    active = (th["ip_idle_mw"] + f.ht * f.r_npu_ht * th["pj_ht"]
+              + f.et * f.r_npu_et * th["pj_et"])
+    return any_on * active + (1.0 - any_on) * p["off_mw"]
+
+
+# ---------------------------------------------------------------------------
+# compiled batch engine (one per platform, cached)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _engine(platform: PlatformSpec):
+    comps = platform.components
+    rails = platform.rail_dict()
+    rail_eff = np.array([rails[c.rail] for c in comps], np.float32)
+    rules = [(LOAD_KINDS[c.load.kind], c.load.p()) for c in comps]
+
+    def single(vec, th):
+        f = _features(platform, vec, th)
+        loads = jnp.stack([fn(p, f, th) for fn, p in rules])
+        eff = jnp.minimum(jnp.asarray(rail_eff) * th["eff_scale"], 0.97)
+        delivered = loads / eff
+        return {"loads": loads, "pd_loss": jnp.sum(delivered - loads),
+                "total": jnp.sum(delivered), "mbps": f.mbps_eff}
+
+    axes = {"placement": 0, "compression": 0, "fps_scale": 0,
+            "mcs_tier": 0, "upload_duty": 0, "brightness": 0}
+    return jax.jit(jax.vmap(single, in_axes=(axes, None)))
+
+
+def _theta(platform: PlatformSpec, theta=None) -> dict:
+    th = platform.theta_dict()
+    if theta:
+        th.update(theta)
+    return {k: jnp.asarray(v, jnp.float32) for k, v in th.items()}
+
+
+@dataclass
+class BatchReport:
+    """Batched evaluation result; all arrays have leading dim N."""
+    platform: PlatformSpec
+    sset: ScenarioSet
+    loads_mw: jnp.ndarray           # (N, n_components)
+    total_mw: jnp.ndarray           # (N,)
+    pd_loss_mw: jnp.ndarray         # (N,)
+    offloaded_mbps: jnp.ndarray     # (N,)
+
+    def category_breakdown(self) -> dict:
+        """category -> (N,) mW; PD losses land under "power" (Fig 3)."""
+        out: dict[str, jnp.ndarray] = {}
+        cats = np.array([c.category for c in self.platform.components])
+        for cat in sorted(set(cats)):
+            mask = jnp.asarray((cats == cat).astype(np.float32))
+            out[cat] = self.loads_mw @ mask
+        out["power"] = out.get("power", 0.0) + self.pd_loss_mw
+        return out
+
+    def pd_share(self) -> jnp.ndarray:
+        return self.pd_loss_mw / self.total_mw
+
+    def component_loads(self, i: int) -> dict:
+        names = self.platform.component_names()
+        row = np.asarray(self.loads_mw[i])
+        return dict(zip(names, row.tolist()))
+
+    def rows(self) -> list:
+        """Host-side summary rows (one `float()` sync for the whole batch)."""
+        total = np.asarray(self.total_mw)
+        mbps = np.asarray(self.offloaded_mbps)
+        return [{"name": self.sset.label(i),
+                 "on_device": "+".join(self.sset.on_device(i)) or "(none)",
+                 "compression": float(self.sset.compression[i]),
+                 "fps_scale": float(self.sset.fps_scale[i]),
+                 "total_mw": float(total[i]),
+                 "offload_mbps": float(mbps[i])}
+                for i in range(len(self.sset))]
+
+
+def _validate(platform: PlatformSpec, sset: ScenarioSet) -> None:
+    if sset.primitives != platform.primitives:
+        raise ValueError(
+            f"ScenarioSet primitives {sset.primitives} do not match "
+            f"platform {platform.name!r} primitives {platform.primitives}")
+    supported = set(platform.supported_primitives())
+    for j, p in enumerate(platform.primitives):
+        if p not in supported and np.any(np.asarray(sset.placement)[:, j]):
+            raise ValueError(
+                f"platform {platform.name!r} cannot run {p!r} on-device "
+                f"(its accelerator was dropped from the component table); "
+                f"supported: {sorted(supported)}")
+
+
+def evaluate(platform: PlatformSpec, sset: ScenarioSet,
+             theta=None) -> BatchReport:
+    """Evaluate the whole scenario batch in one jitted vmap call."""
+    _validate(platform, sset)
+    out = _engine(platform)(sset.vec(), _theta(platform, theta))
+    return BatchReport(platform, sset, out["loads"], out["total"],
+                       out["pd_loss"], out["mbps"])
+
+
+def total_mw(platform: PlatformSpec, sset: ScenarioSet, theta=None):
+    """(N,) delivered system power; differentiable in theta."""
+    _validate(platform, sset)
+    out = _engine(platform)(sset.vec(), _theta(platform, theta))
+    return out["total"]
+
+
+def component_loads(platform: PlatformSpec, sset: ScenarioSet, theta=None):
+    """(N, n_components) component loads (pre-PD), names aligned."""
+    _validate(platform, sset)
+    out = _engine(platform)(sset.vec(), _theta(platform, theta))
+    return out["loads"]
+
+
+def offloaded_mbps(platform: PlatformSpec, sset: ScenarioSet, theta=None):
+    """(N,) duty-gated average uplink rate."""
+    _validate(platform, sset)
+    out = _engine(platform)(sset.vec(), _theta(platform, theta))
+    return out["mbps"]
+
+
+def category_breakdown(platform: PlatformSpec, sset: ScenarioSet,
+                       theta=None) -> dict:
+    return evaluate(platform, sset, theta).category_breakdown()

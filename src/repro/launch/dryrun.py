@@ -148,6 +148,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: Path,
         compiled = lowered.compile()
         t2 = time.time()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):        # per-device list in new jax
+            ca = ca[0] if ca else {}
         # trip-count-aware static profile of the partitioned module
         # (XLA's cost_analysis counts while bodies once — see hlo_analysis)
         cost, analyzer = analyze_hlo(compiled.as_text(), n_dev)

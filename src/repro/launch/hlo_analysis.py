@@ -122,8 +122,13 @@ def parse_module(text: str) -> tuple[dict[str, Computation], Optional[str]]:
         m = _OP_RE.match(raw)
         if not m:
             continue
-        args = [a.strip().lstrip("%") for a in m.group("args").split(",")
-                if a.strip()]
+        # newer jax prints operand types inline ("dot(f32[32,64]{1,0}
+        # %Arg_0.1, ...)"); strip shape/layout/tuple syntax so the commas
+        # inside them don't break operand splitting, then keep the name
+        argstr = re.sub(r"\[[^\]]*\]|\{[^}]*\}", "", m.group("args"))
+        argstr = re.sub(r"\([^()]*\)", "", argstr)
+        args = [a.strip().split()[-1].lstrip("%")
+                for a in argstr.split(",") if a.strip()]
         op = Op(m.group("name"), m.group("type"), m.group("op"), args,
                 m.group("attrs"), raw)
         cur.ops.append(op)

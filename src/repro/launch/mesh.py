@@ -8,19 +8,15 @@ only gradient all-reduce crosses the (slow) pod interconnect.
 """
 from __future__ import annotations
 
-import jax
+from ..compat import make_mesh as compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1x1 mesh on whatever single device exists (smoke tests)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+    return compat_make_mesh((1, 1), ("data", "model"))

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map as _compat_shard_map
 from . import core
 
 NEG_INF = -1e30  # large-but-finite; avoids NaN from (-inf) - (-inf)
@@ -340,7 +341,7 @@ def sharded_decode_attention(mesh, q, k, v, cur_len, *, kv_axes=("model",),
         def local(q_, k_, v_, cur_):
             return attend(q_, k_, v_, cur_, shard_off())
 
-        fn = jax.shard_map(local, mesh=mesh,
+        fn = _compat_shard_map(local, mesh=mesh,
                            in_specs=(q_spec, kv_spec, kv_spec, P()),
                            out_specs=q_spec, check_vma=False)
         return fn(q, k, v, cur_len)
@@ -360,7 +361,7 @@ def sharded_decode_attention(mesh, q, k, v, cur_len, *, kv_axes=("model",),
 
     if valid_len is None:
         valid_len = cur_len + 1
-    fn = jax.shard_map(
+    fn = _compat_shard_map(
         local_upd, mesh=mesh,
         in_specs=(q_spec, kv_spec, kv_spec, new_spec, new_spec, P(), P()),
         out_specs=(q_spec, kv_spec, kv_spec), check_vma=False)

@@ -159,7 +159,11 @@ def measured_flops() -> dict[str, float]:
     def flops(fn, *shapes):
         args = [jnp.zeros(s, jnp.float32) for s in shapes]
         c = jax.jit(lambda *a: fn(key, *a)).lower(*args).compile()
-        return float((c.cost_analysis() or {}).get("flops", 0.0))
+        ca = c.cost_analysis()
+        # jax returns either a dict or a per-device list of dicts
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        return float((ca or {}).get("flops", 0.0))
 
     return {
         "hand_tracker": flops(hand_tracker, (1, 2, 128, 128, 1)),

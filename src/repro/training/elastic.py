@@ -34,11 +34,10 @@ def best_mesh_shape(n_devices: int, model_parallel: int) -> tuple[int, int]:
 
 
 def make_elastic_mesh(model_parallel: int = 16):
+    from ..launch.mesh import compat_make_mesh
     n = len(jax.devices())
     data, model = best_mesh_shape(n, model_parallel)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 def reshard(tree: Any, env: AxisEnv) -> Any:

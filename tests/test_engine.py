@@ -1,7 +1,6 @@
 """Property tests for the discrete-event engine (PnPSim substrate)."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _proptest import given, settings, st
 
 from repro.core.engine import Environment, Resource
 from repro.core.taskgraph import Task, TaskGraph, simulate

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import compat_make_mesh
 from repro.training.pipeline import (bubble_fraction, pipeline_apply,
                                      reference_apply)
 
@@ -26,8 +27,7 @@ def _stage_params(n_stages, d, key=0):
 
 
 def test_pipeline_single_stage_degenerate():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     params = _stage_params(1, 8)
     x = jax.random.normal(jax.random.PRNGKey(1), (3, 2, 8))
     out = pipeline_apply(_layer, params, x, mesh=mesh, stage_axis="data")
@@ -47,6 +47,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 import sys
 sys.path.insert(0, "src")
+from repro.launch.mesh import compat_make_mesh
 from repro.training.pipeline import pipeline_apply, reference_apply
 
 def layer(p, x):
@@ -56,8 +57,7 @@ k = jax.random.PRNGKey(0)
 params = {"w": 0.3*jax.random.normal(k, (4, 8, 8)),
           "b": 0.01*jnp.arange(4.0)[:, None]*jnp.ones((4, 8))}
 x = jax.random.normal(jax.random.PRNGKey(1), (6, 2, 8))
-mesh = jax.make_mesh((4, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat_make_mesh((4, 1), ("data", "model"))
 out = pipeline_apply(layer, params, x, mesh=mesh, stage_axis="data")
 want = reference_apply(layer, params, x)
 np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)

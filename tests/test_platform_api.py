@@ -1,0 +1,200 @@
+"""PlatformSpec / ScenarioSet batch API: parity with the legacy oracle,
+registry round-trip, vmap-vs-loop equivalence, new knobs, SKU variants,
+and the offload fleet fallback path."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import aria2, offload, scenarios
+from repro.core import platform as platform_registry
+from repro.core.aria2 import PRIMITIVES, Scenario
+from repro.core.platform import PlatformSpec
+from repro.core.scenarios import ScenarioSet, all_placements
+
+
+@pytest.fixture(scope="module")
+def plat():
+    return aria2.aria2_platform()
+
+
+# ---------------------------------------------------------------------------
+# batch == legacy per-scenario implementation
+# ---------------------------------------------------------------------------
+
+def test_batch_matches_legacy_total_mw(plat):
+    """Batched vmap totals match the seed dict implementation to 1e-6."""
+    scs = [Scenario("t", s, compression=c, fps_scale=f)
+           for s in all_placements()
+           for c in (1.0, 10.0, 40.0) for f in (1.0, 4.0)]
+    sset = ScenarioSet.from_scenarios(scs)
+    batch = np.asarray(scenarios.total_mw(plat, sset))
+    legacy = np.array([float(aria2.legacy_total_mw(sc)) for sc in scs])
+    np.testing.assert_allclose(batch, legacy, rtol=1e-6)
+    mbatch = np.asarray(scenarios.offloaded_mbps(plat, sset))
+    mlegacy = np.array([aria2.legacy_offloaded_mbps(sc) for sc in scs])
+    np.testing.assert_allclose(mbatch, mlegacy, rtol=1e-6)
+
+
+def test_component_loads_match_legacy(plat):
+    """Per-component engine loads equal the seed dict, name by name."""
+    sc = Scenario("t", ("vio", "asr"), compression=8.0, fps_scale=2.0)
+    new, _ = aria2.component_loads(sc)
+    legacy, _ = aria2.legacy_component_loads(sc)
+    assert set(new) == set(legacy)
+    for name in legacy:
+        np.testing.assert_allclose(float(new[name]), float(legacy[name]),
+                                   rtol=1e-5, err_msg=name)
+
+
+def test_vmap_equals_loop_over_full_grid(plat):
+    """One batched call == per-scenario wrapper loop over the >=768-point
+    placement x compression x fps grid."""
+    sset = ScenarioSet.grid()
+    assert len(sset) >= 768
+    batch = np.asarray(scenarios.total_mw(plat, sset))
+    assert batch.shape == (len(sset),)
+    idx = list(range(0, len(sset), 37))       # loop a stratified subset
+    for i in idx:
+        sc = Scenario("t", sset.on_device(i),
+                      compression=float(sset.compression[i]),
+                      fps_scale=float(sset.fps_scale[i]))
+        np.testing.assert_allclose(batch[i], float(aria2.total_mw(sc)),
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# registry + serialization
+# ---------------------------------------------------------------------------
+
+def test_platform_roundtrip_serialization(plat):
+    rebuilt = PlatformSpec.from_dict(json.loads(json.dumps(plat.to_dict())))
+    assert rebuilt == plat
+    sset = ScenarioSet.grid(placements=((), tuple(PRIMITIVES)),
+                            compressions=(10.0,), fps_scales=(1.0,))
+    np.testing.assert_array_equal(
+        np.asarray(scenarios.total_mw(rebuilt, sset)),
+        np.asarray(scenarios.total_mw(plat, sset)))
+
+
+def test_registry_lookup():
+    aria2.platforms()
+    assert {"aria2", "aria2_display", "aria2_capture_only"} <= \
+        set(platform_registry.names())
+    assert platform_registry.get("aria2") is aria2.aria2_platform()
+    with pytest.raises(KeyError):
+        platform_registry.get("nonexistent_platform")
+
+
+def test_variant_validates_names(plat):
+    with pytest.raises(KeyError):
+        plat.variant("bad", drop=("not_a_component",))
+
+
+# ---------------------------------------------------------------------------
+# new knobs + SKU variants through the same API
+# ---------------------------------------------------------------------------
+
+def test_upload_duty_gating_reduces_power(plat):
+    base = ScenarioSet.build([{"on_device": ()}])
+    gated = base.with_knob(upload_duty=0.35)
+    p0, p1 = (float(scenarios.total_mw(plat, s)[0]) for s in (base, gated))
+    assert p1 < p0
+    # saving is bounded by the radio's throughput term
+    wifi_col = plat.component_names().index("wifi_combo")
+    loads = scenarios.component_loads(plat, base)
+    assert p0 - p1 < float(loads[0, wifi_col]) / dict(plat.rails)["rf"]
+
+
+def test_mcs_tier_scales_radio(plat):
+    rows = [{"on_device": (), "mcs_tier": m}
+            for m in range(len(scenarios.MCS_TIERS))]
+    totals = np.asarray(scenarios.total_mw(plat, ScenarioSet.build(rows)))
+    # energy/bit and link scales are monotone across the defined tiers
+    assert totals[0] < totals[1] < totals[2]
+
+
+def test_display_variant_brightness():
+    disp = aria2.aria2_display_platform()
+    rows = [{"on_device": (), "brightness": b} for b in (0.0, 0.5, 1.0)]
+    totals = np.asarray(scenarios.total_mw(disp, ScenarioSet.build(rows)))
+    assert totals[0] < totals[1] < totals[2]
+    # baseline aria2 has no display load: brightness is inert there
+    base = np.asarray(scenarios.total_mw(
+        aria2.aria2_platform(), ScenarioSet.build(rows)))
+    np.testing.assert_allclose(base[0], base[2], rtol=1e-7)
+
+
+def test_capture_only_sku_is_cheaper(plat):
+    cap = aria2.aria2_capture_only_platform()
+    assert len(cap) < len(plat)
+    sset = ScenarioSet.build([{"on_device": ()}])
+    assert float(scenarios.total_mw(cap, sset)[0]) < \
+        float(scenarios.total_mw(plat, sset)[0])
+
+
+def test_unsupported_placement_rejected(plat):
+    """A SKU without ML IPs cannot claim on-device vio/ht savings."""
+    cap = aria2.aria2_capture_only_platform()
+    assert set(cap.supported_primitives()) == {"asr"}
+    with pytest.raises(ValueError, match="cannot run"):
+        scenarios.total_mw(cap, ScenarioSet.build(
+            [{"on_device": ("hand_tracking",)}]))
+    # ASR kept its DSP, so it still evaluates
+    t = scenarios.total_mw(cap, ScenarioSet.build([{"on_device": ("asr",)}]))
+    assert np.isfinite(float(t[0]))
+    # mismatched primitive ordering is rejected, not silently misread
+    weird = ScenarioSet.build([{"on_device": ()}],
+                              primitives=tuple(reversed(PRIMITIVES)))
+    with pytest.raises(ValueError, match="do not match"):
+        scenarios.total_mw(plat, weird)
+
+
+def test_bad_knob_values_rejected():
+    with pytest.raises(ValueError, match="mcs_tier"):
+        ScenarioSet.build([{"mcs_tier": 99}])
+    with pytest.raises(ValueError, match="unknown primitive"):
+        ScenarioSet.build([{"on_device": ("telepathy",)}])
+
+
+def test_category_breakdown_sums_to_total(plat):
+    sset = ScenarioSet.grid(placements=((), tuple(PRIMITIVES)),
+                            compressions=(10.0,), fps_scales=(1.0,))
+    rep = scenarios.evaluate(plat, sset)
+    cats = rep.category_breakdown()
+    total = sum(np.asarray(v) for v in cats.values())
+    np.testing.assert_allclose(total, np.asarray(rep.total_mw), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# offload fleet sizing fallback (no dry-run artifacts)
+# ---------------------------------------------------------------------------
+
+def test_size_fleet_missing_artifact_fallback(tmp_path):
+    rows = offload.size_fleet(aria2.FULL_OFFLOAD, n_users=1000, duty=1.0,
+                              results_dir=tmp_path)
+    for r in rows:
+        assert np.isfinite(r["pods"])
+        if r.get("note") != "computed on-device":
+            assert r["note"] == "missing_artifact"
+            assert r["pods"] > 0
+
+
+def test_fleet_grid_one_batched_eval(tmp_path):
+    sset = ScenarioSet.grid(placements=((), tuple(PRIMITIVES)),
+                            compressions=(10.0,), fps_scales=(1.0,))
+    rows = offload.fleet_grid(sset, n_users=1e6, results_dir=tmp_path)
+    assert len(rows) == len(sset)
+    # on-device ASR drops the whisper stream from the backend fleet
+    assert rows[1]["backend_pods"] < rows[0]["backend_pods"]
+    assert all("missing_artifact" in r["note"] for r in rows)
+
+
+def test_fleet_grid_upload_duty_throttles_backend(tmp_path):
+    base = ScenarioSet.build([{"on_device": ()},
+                              {"on_device": (), "upload_duty": 0.5}])
+    rows = offload.fleet_grid(base, n_users=1e6, results_dir=tmp_path)
+    assert rows[1]["uplink_mbps"] == pytest.approx(
+        rows[0]["uplink_mbps"] * 0.5, rel=1e-3)
+    assert rows[1]["backend_pods"] == pytest.approx(
+        rows[0]["backend_pods"] * 0.5, rel=1e-3)

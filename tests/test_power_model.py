@@ -1,10 +1,9 @@
 """Property tests for the differentiable power layer + sharding rules."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _proptest import given, settings, st
 
 from repro.core import aria2
 from repro.core.power import Component, Rail, SystemModel, aggregate
@@ -48,7 +47,9 @@ def test_power_grad_matches_finite_difference():
         return aria2.total_mw(sc, {k: x})
 
     g = float(jax.grad(f)(jnp.asarray(v0)))
-    eps = 1e-3
+    # total is linear in the wifi coefficient, so a wide stencil is exact
+    # and keeps the float32 FD numerator well above rounding noise
+    eps = 0.1
     fd = (float(f(v0 + eps)) - float(f(v0 - eps))) / (2 * eps)
     assert g == pytest.approx(fd, rel=1e-3)
     # elasticity: wireless term scales with offloaded Mbps / rail eff
