@@ -1,0 +1,126 @@
+"""Joint device+backend co-optimization benchmark (dse.joint_pareto).
+
+Times the full placement x compression x fps x MCS grid (16 x 8 x 6 x 3
+= 2304 design points) through the joint engine: ONE jitted vmap device
+call, one vectorized fleet-sizing pass, one vectorized dominance pass.
+Emits results/benchmarks/BENCH_joint.json and returns (rows, derived)
+for benchmarks/run.py.
+
+BENCH_joint.json schema (one JSON object):
+  n_points              int   grid size evaluated (>= 768)
+  front_size            int   members of the 3-objective non-dominated
+                              front (device mW, uplink Mbps, backend pods)
+  joint_ms              float best wall time of one full joint_pareto
+                              pass, milliseconds (post-warmup)
+  points_per_s          float n_points / best pass time — the regression
+                              gate metric (benchmarks/run.py fails the
+                              run if this drops >20% vs the committed
+                              baseline)
+  missing_artifact_rows int   grid rows whose pod count used a fallback
+                              capacity; must be 0 on a checkout with the
+                              four STREAM_SERVICE dry-run artifacts
+  sources               {stream: "dryrun"|"fallback"} capacity source per
+                              backend stream
+  device_optimum        row   unconstrained min-device-power point
+  pod_budget_demo       {pod_budget, row} constrained optimum under a pod
+                              budget chosen between the global pod min
+                              and the device optimum's pod count — a
+                              different placement than device_optimum,
+                              i.e. the full-system Amdahl effect
+  row objects: {index, on_device, compression, fps_scale, mcs,
+                device_mw, uplink_mbps, backend_pods}
+
+    PYTHONPATH=src python benchmarks/joint_bench.py
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _missing_rows(rep) -> int:
+    """Grid rows whose pod count actually used a fallback capacity: the
+    audio stream only reaches the backend where ASR is off-device."""
+    import numpy as np
+    missing = set(rep.missing_streams())
+    if missing - {"audio"}:
+        return len(rep)
+    if "audio" in missing:
+        asr_col = rep.sset.primitives.index("asr")
+        asr_off = np.asarray(rep.sset.placement)[:, asr_col] < 0.5
+        return int(asr_off.sum())
+    return 0
+
+
+def run(n_repeats: int = 3):
+    from repro.core import dse
+
+    rep = dse.joint_pareto()            # warm: jit compile + duty tables
+    best = min(_timed(dse.joint_pareto) for _ in range(n_repeats))
+
+    n = len(rep)
+    missing = rep.missing_streams()
+    co = dse.co_optimize(rep)
+    opt = co["device_optimum"]
+    # a budget strictly between the global pod minimum and the device
+    # optimum's pod count forces a different (placement) answer
+    budget = 0.5 * (float(rep.backend_pods.min()) + opt["backend_pods"])
+    under = dse.co_optimize(rep, pod_budget=budget)[
+        "min_power_under_pod_budget"]
+
+    result = {
+        "n_points": n,
+        "front_size": int(rep.front_mask.sum()),
+        "joint_ms": round(1e3 * best, 3),
+        "points_per_s": round(n / best, 0),
+        "missing_artifact_rows": _missing_rows(rep),
+        "sources": rep.sources,
+        "device_optimum": opt,
+        "pod_budget_demo": {"pod_budget": round(budget, 1), "row": under},
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "BENCH_joint.json").write_text(json.dumps(result, indent=1))
+    flip = under is not None and under["index"] != opt["index"]
+    derived = (f"{n}pts front={result['front_size']} "
+               f"joint={result['joint_ms']}ms "
+               f"budget_flip={'yes' if flip else 'NO'} "
+               f"missing={len(missing)}")
+    # rows = the front itself (the summary object already self-emits to
+    # BENCH_joint.json; returning it too would commit a duplicate)
+    return rep.front_rows(), derived
+
+
+def smoke():
+    """16-point joint grid: exercises the whole bench path (batched eval
+    -> pods -> dominance -> constrained argmin) inside the tier-1 time
+    budget.  Writes nothing; returns (rows, derived)."""
+    from repro.core import dse
+
+    rep = dse.joint_pareto(placements=((), ("asr",)),
+                           compressions=(8.0, 64.0),
+                           fps_scales=(1.0, 8.0),
+                           mcs_tiers=(0, 1))
+    assert len(rep) == 16, len(rep)
+    front = int(rep.front_mask.sum())
+    assert front >= 1
+    co = dse.co_optimize(rep, pod_budget=float(rep.backend_pods.min()))
+    assert co["min_power_under_pod_budget"] is not None
+    rows = rep.front_rows()
+    return rows, f"16pts front={front} ok"
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    rows, derived = run()
+    print((OUT / "BENCH_joint.json").read_text())
+    print(derived)

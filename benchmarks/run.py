@@ -2,47 +2,121 @@
 
 Prints ``name,us_per_call,derived`` CSV (and writes JSON detail files under
 results/benchmarks/).
+
+Regression gate: benches that emit a ``BENCH_*.json`` detail file are
+compared against the committed baseline (the copy present before the run);
+if a gated metric regresses by more than ``REGRESSION_TOLERANCE`` the
+process exits non-zero, so CI catches perf regressions on the batched
+engines.  ``--smoke`` runs only a 16-point joint-grid pass (no baselines
+touched, no gate) so the bench path itself is exercised inside the tier-1
+time budget.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
 OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
 
+# BENCH file -> (metric key, sense); "higher" means a drop is a regression
+GATED_METRICS = {
+    "BENCH_dse.json": ("speedup", "higher"),
+    "BENCH_joint.json": ("points_per_s", "higher"),
+}
+REGRESSION_TOLERANCE = 0.20
 
-def main() -> None:
-    from . import dse_bench, kernel_benches, paper_benches, roofline
-    benches = [
-        ("dse_batched_vs_loop", dse_bench.run),
-        ("table2_sensor_rates", paper_benches.table2_sensor_rates),
-        ("fig3_power_composition", paper_benches.fig3_power_composition),
-        ("fig4_placement_dse", paper_benches.fig4_placement_dse),
-        ("table3_amdahl", paper_benches.table3_amdahl),
-        ("fig5_tech_scaling", paper_benches.fig5_tech_scaling),
-        ("fig6_compression", paper_benches.fig6_compression),
-        ("contention_telemetry", paper_benches.contention_telemetry),
-        ("beyond_sensitivity", paper_benches.beyond_sensitivity),
-        ("beyond_pareto", paper_benches.beyond_pareto),
-        ("beyond_platform_skus", paper_benches.beyond_platform_skus),
-        ("kernel_flash_attention", kernel_benches.flash_attention_bench),
-        ("kernel_ssd_scan", kernel_benches.ssd_scan_bench),
-        ("roofline", roofline.run),
-    ]
+
+def _load_baselines() -> dict:
+    """Committed BENCH_*.json contents, read before benches overwrite."""
+    out = {}
+    for fname in GATED_METRICS:
+        f = OUT / fname
+        if f.exists():
+            try:
+                out[fname] = json.loads(f.read_text())
+            except json.JSONDecodeError:
+                pass
+    return out
+
+
+def _check_regressions(baselines: dict) -> list[str]:
+    msgs = []
+    for fname, (key, sense) in GATED_METRICS.items():
+        base = baselines.get(fname, {}).get(key)
+        f = OUT / fname
+        if base is None or not f.exists():
+            continue
+        new = json.loads(f.read_text()).get(key)
+        if new is None or float(base) <= 0:
+            continue
+        ratio = float(new) / float(base)
+        regressed = (ratio < 1.0 - REGRESSION_TOLERANCE
+                     if sense == "higher"
+                     else ratio > 1.0 + REGRESSION_TOLERANCE)
+        if regressed:
+            msgs.append(f"{fname}:{key} {base} -> {new} "
+                        f"({100 * (ratio - 1):+.1f}%)")
+            # keep the pre-run baseline on disk so the regression cannot
+            # absorb itself into the next run's comparison point
+            f.write_text(json.dumps(baselines[fname], indent=1))
+    return msgs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="16-point joint grid only; no baselines, no gate")
+    args = ap.parse_args(argv)
+
+    from . import dse_bench, joint_bench, kernel_benches, paper_benches, \
+        roofline
+    if args.smoke:
+        benches = [("joint_smoke", joint_bench.smoke)]
+    else:
+        benches = [
+            ("dse_batched_vs_loop", dse_bench.run),
+            ("joint_pareto", joint_bench.run),
+            ("table2_sensor_rates", paper_benches.table2_sensor_rates),
+            ("fig3_power_composition", paper_benches.fig3_power_composition),
+            ("fig4_placement_dse", paper_benches.fig4_placement_dse),
+            ("table3_amdahl", paper_benches.table3_amdahl),
+            ("fig5_tech_scaling", paper_benches.fig5_tech_scaling),
+            ("fig6_compression", paper_benches.fig6_compression),
+            ("contention_telemetry", paper_benches.contention_telemetry),
+            ("beyond_sensitivity", paper_benches.beyond_sensitivity),
+            ("beyond_pareto", paper_benches.beyond_pareto),
+            ("beyond_platform_skus", paper_benches.beyond_platform_skus),
+            ("kernel_flash_attention", kernel_benches.flash_attention_bench),
+            ("kernel_ssd_scan", kernel_benches.ssd_scan_bench),
+            ("roofline", roofline.run),
+        ]
+    baselines = {} if args.smoke else _load_baselines()
     OUT.mkdir(parents=True, exist_ok=True)
+    failed = False
     print("name,us_per_call,derived")
     for name, fn in benches:
         t0 = time.perf_counter()
         try:
             rows, derived = fn()
             us = (time.perf_counter() - t0) * 1e6
-            (OUT / f"{name}.json").write_text(json.dumps(rows, indent=1))
+            if not args.smoke:
+                (OUT / f"{name}.json").write_text(json.dumps(rows, indent=1))
         except Exception as e:  # noqa: BLE001
             us = (time.perf_counter() - t0) * 1e6
             derived = f"ERROR:{type(e).__name__}:{e}"
+            failed = True
         print(f"{name},{us:.0f},{derived}")
+    if not args.smoke:
+        regressions = _check_regressions(baselines)
+        for msg in regressions:
+            print(f"REGRESSION(>{100 * REGRESSION_TOLERANCE:.0f}%): {msg}",
+                  file=sys.stderr)
+        failed = failed or bool(regressions)
+    return 1 if failed else 0
 
 
 if __name__ == '__main__':
-    main()
+    sys.exit(main())

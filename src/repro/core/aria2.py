@@ -66,6 +66,8 @@ THETA0 = {
     "ip_idle_mw": 4.0,            # per-enabled-IP idle/clock overhead
     "codec_mw_per_rawmbps": 0.085,  # H265 energy per raw pixel rate
     "dram_mw_per_mbps": 0.10,
+    "queue_mw_per_duty": 40.0,    # active-clock overhead per unit of
+                                  # sim duty (NPU/DSP/DRAM-bus contention)
     "eff_scale": 1.0,             # global PD-efficiency adjustment
 }
 
@@ -247,14 +249,18 @@ def _spec_for(name: str, kind: str, params: dict,
 
 
 @functools.lru_cache(maxsize=1)
-def _isp_duty_table() -> tuple:
-    """ISP duty per placement-mask index (event-driven taskgraph sim)."""
-    out = []
+def _duty_tables() -> tuple:
+    """Placement-indexed duty tables (event-driven taskgraph sim): one
+    2^n-entry table per shared resource the power model consumes — the
+    ISP duty rule plus the NPU/DSP/DRAM-bus contention terms."""
+    per_res = {r: [] for r in workloads.DUTY_RESOURCES}
     for idx in range(1 << len(PRIMITIVES)):
         on = {p: bool(idx >> i & 1) for i, p in enumerate(PRIMITIVES)}
         duties = _duties(tuple(sorted(on.items())))
-        out.append(float(duties.get("isp", 1.0)))
-    return tuple(out)
+        for r in workloads.DUTY_RESOURCES:
+            per_res[r].append(float(duties.get(
+                r, 1.0 if r == "isp" else 0.0)))
+    return tuple(sorted((r, tuple(tab)) for r, tab in per_res.items()))
 
 
 @functools.lru_cache(maxsize=1)
@@ -284,7 +290,7 @@ def aria2_platform() -> PlatformSpec:
         theta=tuple(sorted(THETA0.items())),
         raw_mbps=tuple(sorted(RAW_MBPS.items())),
         ip_rates=_ip_rate_table(),
-        isp_duty=_isp_duty_table(),
+        duty_tables=_duty_tables(),
     )
     return register(spec)
 
@@ -384,15 +390,17 @@ def build_system(sc: Scenario, theta=None,
 # pre-redesign reference implementation (parity oracle + bench baseline)
 # ---------------------------------------------------------------------------
 
-def _npu_load(on, th):
-    """NPU load: per-primitive pJ/FLOP x its measured GFLOP/s."""
+def _npu_load(on, th, duties, fs):
+    """NPU load: per-primitive pJ/FLOP x its measured GFLOP/s, plus the
+    sim-duty queueing overhead (shared HT+ET accelerator)."""
     ht = workloads.flops_rates({"hand_tracking": True})["npu"] * th["pj_ht"] \
         if on["hand_tracking"] else 0.0
     et = workloads.flops_rates({"eye_tracking": True})["npu"] * th["pj_et"] \
         if on["eye_tracking"] else 0.0
+    queue = th["queue_mw_per_duty"] * duties.get("npu", 0.0) / max(fs, 1.0)
     if on["hand_tracking"] or on["eye_tracking"]:
-        return th["ip_idle_mw"] + ht + et
-    return 0.4
+        return th["ip_idle_mw"] + ht + et + queue
+    return 0.4 + queue
 
 
 def legacy_offloaded_mbps(sc: Scenario):
@@ -451,11 +459,14 @@ def legacy_component_loads(sc: Scenario, theta=None):
         "h265_codec": th["codec_mw_per_rawmbps"] * codec_raw + 5.0,
         "sensor_hub_mcu": 10.0,
         "dsp_audio": 3.0 + (rates["dsp"] * th["pj_asr"]
-                            if on["asr"] else 0.9),
-        "npu_ml": _npu_load(on, th),
+                            if on["asr"] else 0.9)
+                    + th["queue_mw_per_duty"] * duties.get("dsp", 0.0),
+        "npu_ml": _npu_load(on, th, duties, fs),
         "hwa_vio6dof": (th["ip_idle_mw"] + rates["hwa_vio"] * th["pj_vio"])
                        if on["vio"] else 0.4,
-        "lpddr_dram": 28.0 + th["dram_mw_per_mbps"] * raw_visual / 8,
+        "lpddr_dram": 28.0 + th["dram_mw_per_mbps"] * raw_visual / 8
+                    + th["queue_mw_per_duty"] * duties.get("dram_bus", 0.0)
+                    / max(fs, 1.0),
         "ocm_sram": 11.0,
         "nor_flash": 7.0,
         "wifi_combo": th["wifi_link_mw"] + th["wifi_mw_per_mbps"] * mbps,

@@ -18,17 +18,34 @@ Beyond-paper:
   * pareto               — placement x compression grid -> (power,
                            offload-bandwidth) Pareto front: bandwidth is a
                            proxy for backend context fidelity.
+  * joint_pareto         — the paper's Amdahl lesson applied end to end:
+                           placement x compression x fps x MCS swept in
+                           ONE batched device call, each point's
+                           offloaded streams mapped to backend pod counts
+                           (offload.pods_vector), and the 3-objective
+                           (device mW, uplink Mbps, backend pods)
+                           non-dominated front extracted by a vectorized
+                           numpy dominance pass.
+  * co_optimize          — constrained argmins over the joint grid: min
+                           device power under a backend pod budget, and
+                           min pods under a device power budget.
+
+All dominance filtering goes through `non_dominated` — the correct
+Pareto test (<= in every objective, < in at least one), so points that
+tie on one objective at better cost in another are kept.
 """
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import aria2, scenarios
+from . import aria2, offload, scenarios
 from .aria2 import PRIMITIVES, Scenario
 from .platform import PlatformSpec
-from .scenarios import ScenarioSet, all_placements
+from .scenarios import MCS_TIERS, ScenarioSet, all_placements
 
 
 def _plat(platform: PlatformSpec | str | None) -> PlatformSpec:
@@ -121,25 +138,176 @@ def sensitivity(scenario: Scenario | None = None, keys=None, platform=None):
     return sorted(rows, key=lambda r: -abs(r["elasticity"]))
 
 
+def non_dominated(points, maximize: tuple = ()) -> np.ndarray:
+    """Boolean mask of Pareto-optimal rows of an (N, K) objective matrix.
+
+    All objectives are minimized; column indices in `maximize` are
+    negated first.  Uses the correct dominance test — q dominates p iff
+    q <= p in every objective AND q < p in at least one — so points that
+    tie on some objectives at better cost in another survive, and exact
+    duplicates are all kept (neither strictly dominates).  Fully
+    vectorized (one (N, N, K) broadcast, no Python pair loops).
+    """
+    pts = np.asarray(points, np.float64).copy()
+    if pts.ndim != 2:
+        raise ValueError(f"expected (N, K) objectives, got {pts.shape}")
+    for c in maximize:
+        pts[:, c] *= -1.0
+    le = (pts[:, None, :] <= pts[None, :, :]).all(-1)   # le[j,i]: q_j <= p_i
+    lt = (pts[:, None, :] < pts[None, :, :]).any(-1)    # lt[j,i]: strict
+    dominated = (le & lt).any(axis=0)
+    return ~dominated
+
+
 def pareto(compressions=(4, 10, 20, 40), platform=None):
-    """Placement x compression -> non-dominated (power, bandwidth) points."""
+    """Placement x compression -> non-dominated (power, bandwidth) points.
+
+    Row order of `pts` follows ScenarioSet.grid (placement outermost,
+    then compression), so labels stay in lockstep with the batch."""
     plat = _plat(platform)
     subsets = all_placements(plat.supported_primitives())
-    labels = [(s, c) for s in subsets for c in compressions]
     sset = ScenarioSet.grid(placements=subsets,
                             compressions=[float(c) for c in compressions],
                             fps_scales=(1.0,), primitives=plat.primitives)
+    labels = [(sset.on_device(i), float(sset.compression[i]))
+              for i in range(len(sset))]
     rep = scenarios.evaluate(plat, sset)
     totals = np.asarray(rep.total_mw)
     mbps = np.asarray(rep.offloaded_mbps)
     pts = [{
         "on_device": "+".join(s) or "(none)",
-        "compression": c,
+        "compression": int(c) if float(c).is_integer() else c,
         "total_mw": round(float(totals[i]), 1),
         "offload_mbps": round(float(mbps[i]), 2),
     } for i, (s, c) in enumerate(labels)]
-    front = []
-    for p in sorted(pts, key=lambda x: x["total_mw"]):
-        if all(p["offload_mbps"] > q["offload_mbps"] for q in front):
-            front.append(p)
+    keep = non_dominated(np.stack([totals, mbps], axis=1), maximize=(1,))
+    front = sorted((pts[i] for i in np.flatnonzero(keep)),
+                   key=lambda r: r["total_mw"])
     return pts, front
+
+
+# ---------------------------------------------------------------------------
+# joint device+backend co-optimization (the full-system Amdahl argument)
+# ---------------------------------------------------------------------------
+
+JOINT_MCS_TIERS = tuple(range(len(MCS_TIERS)))
+
+
+@dataclass
+class JointReport:
+    """Joint device+backend design-space evaluation.
+
+    Arrays share the ScenarioSet's leading dim N.  Objectives: device_mw
+    (minimize), uplink_mbps (maximize — context-fidelity proxy),
+    backend_pods (minimize).  front_mask marks the 3-objective
+    non-dominated set; sources records whether each backend stream's
+    capacity came from a dry-run artifact or the fallback bound.
+    """
+    sset: ScenarioSet
+    device_mw: np.ndarray           # (N,)
+    uplink_mbps: np.ndarray         # (N,)
+    backend_pods: np.ndarray        # (N,)
+    front_mask: np.ndarray          # (N,) bool
+    sources: dict                   # stream -> "dryrun" | "fallback"
+    n_users: float
+    duty: float
+
+    def __len__(self) -> int:
+        return len(self.sset)
+
+    def objectives(self) -> np.ndarray:
+        """(N, 3) matrix [device_mw, uplink_mbps, backend_pods]."""
+        return np.stack([self.device_mw, self.uplink_mbps,
+                         self.backend_pods], axis=1)
+
+    def front_indices(self) -> np.ndarray:
+        return np.flatnonzero(self.front_mask)
+
+    def missing_streams(self) -> list:
+        return offload.missing_streams(self.sources)
+
+    def row(self, i: int) -> dict:
+        s = self.sset
+        return {
+            "index": int(i),
+            "on_device": "+".join(s.on_device(i)) or "(none)",
+            "compression": float(s.compression[i]),
+            "fps_scale": float(s.fps_scale[i]),
+            "mcs": MCS_TIERS[int(s.mcs_tier[i])][0],
+            "device_mw": round(float(self.device_mw[i]), 1),
+            "uplink_mbps": round(float(self.uplink_mbps[i]), 2),
+            "backend_pods": round(float(self.backend_pods[i]), 1),
+        }
+
+    def front_rows(self) -> list:
+        rows = [self.row(i) for i in self.front_indices()]
+        return sorted(rows, key=lambda r: r["device_mw"])
+
+
+def joint_pareto(platform=None, placements=None,
+                 compressions=scenarios.GRID_COMPRESSIONS,
+                 fps_scales=scenarios.GRID_FPS_SCALES,
+                 mcs_tiers=JOINT_MCS_TIERS,
+                 n_users: float = 1e6, duty: float = 0.35,
+                 results_dir=None, theta=None) -> JointReport:
+    """Joint device+backend Pareto sweep in one batched pass.
+
+    Default grid: 16 placements x 8 compressions x 6 fps x 3 MCS tiers =
+    2304 design points.  The whole grid goes through ONE jitted vmap
+    device call (scenarios.evaluate), one vectorized fleet-sizing pass
+    (offload.pods_vector), and one vectorized dominance pass
+    (non_dominated) — no per-point Python loops anywhere on the path.
+    """
+    plat = _plat(platform)
+    if placements is None:
+        placements = all_placements(plat.supported_primitives())
+    sset = ScenarioSet.grid(placements=placements,
+                            compressions=[float(c) for c in compressions],
+                            fps_scales=[float(f) for f in fps_scales],
+                            mcs_tiers=[int(m) for m in mcs_tiers],
+                            primitives=plat.primitives)
+    rep = scenarios.evaluate(plat, sset, theta)
+    device_mw = np.asarray(rep.total_mw, np.float64)
+    uplink = np.asarray(rep.offloaded_mbps, np.float64)
+    pods, sources = offload.pods_vector(sset, n_users=n_users, duty=duty,
+                                        results_dir=results_dir)
+    objs = np.stack([device_mw, uplink, pods], axis=1)
+    mask = non_dominated(objs, maximize=(1,))
+    return JointReport(sset, device_mw, uplink, pods, mask, sources,
+                       n_users, duty)
+
+
+def _lex_argmin(keys: list, feasible: np.ndarray):
+    """Index minimizing keys lexicographically over a feasibility mask."""
+    idx = np.flatnonzero(feasible)
+    if idx.size == 0:
+        return None
+    order = np.lexsort(tuple(np.asarray(k)[idx] for k in reversed(keys)))
+    return int(idx[order[0]])
+
+
+def co_optimize(rep: JointReport, pod_budget: float | None = None,
+                power_budget_mw: float | None = None) -> dict:
+    """Constrained argmins over a joint grid (deterministic tie-breaks).
+
+    * device_optimum            — min device power, backend unconstrained
+      (ties broken toward fewer pods, then higher uplink).
+    * min_power_under_pod_budget — min device power s.t. pods <= budget.
+    * min_pods_under_power_budget — min pods s.t. device power <= budget
+      (ties toward lower power, then higher uplink).
+    Infeasible constraints yield None rows.
+    """
+    ones = np.ones(len(rep), bool)
+    out = {"device_optimum": rep.row(_lex_argmin(
+        [rep.device_mw, rep.backend_pods, -rep.uplink_mbps], ones))}
+    if pod_budget is not None:
+        i = _lex_argmin([rep.device_mw, rep.backend_pods, -rep.uplink_mbps],
+                        rep.backend_pods <= pod_budget)
+        out["pod_budget"] = pod_budget
+        out["min_power_under_pod_budget"] = None if i is None else rep.row(i)
+    if power_budget_mw is not None:
+        i = _lex_argmin([rep.backend_pods, rep.device_mw, -rep.uplink_mbps],
+                        rep.device_mw <= power_budget_mw)
+        out["power_budget_mw"] = power_budget_mw
+        out["min_pods_under_power_budget"] = None if i is None else rep.row(i)
+    return out

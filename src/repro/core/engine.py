@@ -17,12 +17,13 @@ from typing import Any, Callable, Generator, Optional
 class Event:
     """One-shot event; processes yield these to wait."""
 
-    __slots__ = ("env", "callbacks", "triggered", "value")
+    __slots__ = ("env", "callbacks", "triggered", "dispatched", "value")
 
     def __init__(self, env: "Environment"):
         self.env = env
         self.callbacks: list[Callable[["Event"], None]] = []
         self.triggered = False
+        self.dispatched = False     # callbacks already fired by the loop
         self.value: Any = None
 
     def succeed(self, value: Any = None) -> "Event":
@@ -61,6 +62,14 @@ class Process(Event):
             return
         if not isinstance(target, Event):
             raise TypeError(f"process yielded {type(target)}, not Event")
+        if target.dispatched:
+            # Waiting on an event whose callbacks already fired (e.g. a
+            # dependency that completed earlier in simulated time) must
+            # resume immediately, not hang: re-arm on a zero-delay timeout
+            # so FIFO ordering at the current instant is preserved.
+            bounce = Timeout(self.env, 0.0, target.value)
+            bounce.callbacks.append(lambda ev: self._resume(ev.value))
+            return
         target.callbacks.append(lambda ev: self._resume(ev.value))
 
 
@@ -89,11 +98,14 @@ class Environment:
             for cb in list(ev.callbacks):
                 cb(ev)
             ev.callbacks.clear()
+            ev.dispatched = True
         self.now = until
 
 
-@dataclass
 class _Request(Event):
+    """Resource claim; identity-compared (never value-compared) so queue
+    membership tests and cancellation target the exact request object."""
+
     def __init__(self, env, resource):
         Event.__init__(self, env)
         self.resource = resource
@@ -136,6 +148,12 @@ class Resource:
             self._busy_since = self.env.now
         req.succeed(self)
 
+    def cancel(self, req: Event) -> None:
+        """Withdraw a request that was never granted (process teardown)."""
+        if req in self.waiting:
+            self.waiting.remove(req)
+            self._req_times.pop(id(req), None)
+
     def release(self):
         self.in_use -= 1
         if self.in_use == 0 and self._busy_since is not None:
@@ -159,3 +177,4 @@ class Telemetry:
     mean_wait: dict[str, float] = field(default_factory=dict)
     bytes_moved: dict[str, float] = field(default_factory=dict)
     deadline_misses: int = 0
+    open_instances: int = 0     # task processes still in flight at teardown

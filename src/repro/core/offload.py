@@ -103,16 +103,21 @@ def size_fleet(sc: Scenario, n_users: float = 1e6,
     """Pods needed to serve n_users wearables in scenario `sc`.
 
     duty = fraction of the day streams are active (§II: always-on sensing,
-    VAD/saliency-gated upload).  Rows sized from the fallback capacity
-    carry note="missing_artifact" — pods are always finite.
+    VAD/saliency-gated upload); the scenario's own upload_duty gating
+    throttles ingest on top, exactly as in the vectorized pods_vector.
+    Rows sized from the fallback capacity carry note="missing_artifact" —
+    pods are always finite.
     """
     rows = []
+    eff_duty = duty * getattr(sc, "upload_duty", 1.0)
     for d in backend_demand(sc):
         if not d.offloaded:
             rows.append({"stream": d.stream, "arch": d.arch,
                          "pods": 0.0, "note": "computed on-device"})
             continue
-        demand = n_users * duty * d.tokens_per_user_s
+        demand = n_users * eff_duty * d.tokens_per_user_s
+        if d.stream == "rgb":           # frame-driven VLM ingest
+            demand /= max(sc.fps_scale, 1.0)
         cap, source = _cell_tokens_per_s(d.arch, d.cell, results_dir)
         row = {
             "stream": d.stream, "arch": d.arch, "cell": d.cell,
@@ -136,38 +141,71 @@ def offload_summary(sc: Scenario) -> dict:
     }
 
 
+def pods_vector(sset: ScenarioSet, n_users: float = 1e6, duty: float = 0.35,
+                results_dir=None) -> tuple[np.ndarray, dict]:
+    """(N,) backend pods for a whole ScenarioSet, fully vectorized.
+
+    The per-point math is pure numpy over the struct-of-arrays batch (no
+    Python loop over scenarios): each point's offloaded streams map to
+    the STREAM_SERVICE cells, the audio stream is masked out where ASR
+    runs on-device, and the scenario's VAD/saliency gating (upload_duty)
+    throttles backend ingest the same way it throttles the uplink.
+
+    Returns (pods, sources) where sources maps stream -> "dryrun" when
+    the cell capacity came from a roofline artifact, else "fallback"
+    (the deterministic FALLBACK_BOUND_S path -> "missing_artifact" rows
+    downstream).
+    """
+    caps = {s: _cell_tokens_per_s(arch, cell, results_dir)
+            for s, (arch, cell, _) in STREAM_SERVICE.items()}
+    sources = {s: src for s, (_, src) in caps.items()}
+    asr_on = np.asarray(sset.placement, np.float64)[
+        :, sset.primitives.index("asr")]
+    fps = np.maximum(np.asarray(sset.fps_scale, np.float64), 1.0)
+    # pods per (user x unit duty): frame-driven RGB->VLM ingest scales
+    # down with the sensor frame-rate knob; audio is masked where ASR
+    # runs on-device; signal/context streams are frame-rate independent
+    per_user = sum(tok / caps[s][0]
+                   for s, (_, _, tok) in STREAM_SERVICE.items()
+                   if s not in ("audio", "rgb"))
+    per_user = per_user \
+        + (STREAM_SERVICE["rgb"][2] / caps["rgb"][0]) / fps \
+        + (1.0 - asr_on) * (STREAM_SERVICE["audio"][2] / caps["audio"][0])
+    pods = n_users * duty * np.asarray(sset.upload_duty, np.float64) \
+        * per_user
+    return pods, sources
+
+
+def missing_streams(sources: dict) -> list[str]:
+    """Streams whose capacity came from the fallback path."""
+    return [s for s, src in sources.items() if src == "fallback"]
+
+
 def fleet_grid(sset: ScenarioSet, n_users: float = 1e6, duty: float = 0.35,
                results_dir=None, platform=None) -> list[dict]:
     """Fleet sizing for a whole ScenarioSet off ONE batched device eval.
 
     Returns one row per scenario: device power, gated uplink, and total
-    backend pods (device<->datacenter joint design space in one sweep)."""
+    backend pods (device<->datacenter joint design space in one sweep).
+    The pod math is the vectorized `pods_vector` pass; the loop below
+    only formats rows."""
     plat = platform or aria2.aria2_platform()
     rep = scenarios.evaluate(plat, sset)
     totals = np.asarray(rep.total_mw)
     mbps = np.asarray(rep.offloaded_mbps)
+    pods, sources = pods_vector(sset, n_users, duty, results_dir)
     asr_col = sset.primitives.index("asr")
-    caps = {s: _cell_tokens_per_s(arch, cell, results_dir)
-            for s, (arch, cell, _) in STREAM_SERVICE.items()}
+    fallback = set(missing_streams(sources))
     out = []
     for i in range(len(sset)):
-        pods = 0.0
-        missing = []
-        # the scenario's VAD/saliency gating throttles backend ingest the
-        # same way it throttles the uplink
-        eff_duty = duty * float(sset.upload_duty[i])
-        for stream, (arch, cell, tok) in STREAM_SERVICE.items():
-            if stream == "audio" and sset.placement[i, asr_col] > 0.5:
-                continue                     # ASR on-device
-            cap, source = caps[stream]
-            pods += n_users * eff_duty * tok / cap
-            if source == "fallback":
-                missing.append(stream)
+        missing = [s for s in STREAM_SERVICE if s in fallback
+                   and not (s == "audio"
+                            and sset.placement[i, asr_col] > 0.5)]
         out.append({
             "scenario": sset.label(i),
             "device_mw": round(float(totals[i]), 1),
             "uplink_mbps": round(float(mbps[i]), 2),
-            "backend_pods": round(pods, 1),
+            "backend_pods": round(float(pods[i]), 1),
             **({"note": "missing_artifact:" + "+".join(missing)}
                if missing else {}),
         })

@@ -98,8 +98,12 @@ class PlatformSpec:
                   on top at evaluation time)
       raw_mbps  — sensor raw data rates feeding the uplink/codec formulas
       ip_rates  — sustained GFLOP/s per accelerator per enabled primitive
-      isp_duty  — ISP duty cycle per placement-mask index (from the
-                  event-driven taskgraph sim; 2^len(primitives) entries)
+      duty_tables — placement-indexed duty tables from the event-driven
+                  taskgraph sim: ((resource, (duty per placement-mask
+                  index, ...)), ...) with 2^len(primitives) entries per
+                  resource.  "isp" drives the ISP duty-cycle load rule;
+                  "npu"/"dsp"/"dram_bus" feed the queue_mw_per_duty
+                  contention terms so batched scenarios see queueing.
     """
     name: str
     components: tuple
@@ -107,7 +111,7 @@ class PlatformSpec:
     theta: tuple                # ((coefficient, value), ...)
     raw_mbps: tuple             # ((stream, Mbps), ...)
     ip_rates: tuple             # ((rate key, GFLOP/s), ...)
-    isp_duty: tuple             # duty per placement index
+    duty_tables: tuple          # ((resource, (duty per placement idx,)),)
     primitives: tuple = PRIMITIVES
 
     # -- convenience views --------------------------------------------------
@@ -124,6 +128,19 @@ class PlatformSpec:
 
     def mech_components(self) -> tuple:
         return tuple(c for c in self.components if c.group == "mech")
+
+    def duty_table(self, resource: str, default: float = 0.0) -> tuple:
+        """Placement-indexed duty table for one sim resource; platforms
+        without a table for `resource` get a constant-`default` table."""
+        for name, tab in self.duty_tables:
+            if name == resource:
+                return tab
+        return (default,) * (1 << len(self.primitives))
+
+    @property
+    def isp_duty(self) -> tuple:
+        """Back-compat view of the ISP table (pre-duty_tables API)."""
+        return self.duty_table("isp", 1.0)
 
     def theta_dict(self) -> dict:
         return dict(self.theta)
@@ -162,7 +179,8 @@ class PlatformSpec:
             "theta": dict(self.theta),
             "raw_mbps": dict(self.raw_mbps),
             "ip_rates": dict(self.ip_rates),
-            "isp_duty": list(self.isp_duty),
+            "duty_tables": {name: list(tab) for name, tab in
+                            self.duty_tables},
             "components": [
                 {"name": c.name, "category": c.category,
                  "process": c.process, "rail": c.rail,
@@ -180,10 +198,16 @@ class PlatformSpec:
                                    _kv(c["load"]["params"])),
                           c.get("group", "mech"))
             for c in d["components"])
+        if "duty_tables" in d:
+            tables = tuple(sorted(
+                (name, tuple(float(x) for x in tab))
+                for name, tab in d["duty_tables"].items()))
+        else:                       # pre-duty_tables serialized platforms
+            tables = (("isp", tuple(float(x) for x in d["isp_duty"])),)
         return cls(name=d["name"], components=comps,
                    rails=_kv(d["rails"]), theta=_kv(d["theta"]),
                    raw_mbps=_kv(d["raw_mbps"]), ip_rates=_kv(d["ip_rates"]),
-                   isp_duty=tuple(float(x) for x in d["isp_duty"]),
+                   duty_tables=tables,
                    primitives=tuple(d["primitives"]))
 
 

@@ -185,6 +185,9 @@ class Features:
     codec_raw: jnp.ndarray          # raw pixel rate entering the codec
     raw_visual: jnp.ndarray         # raw visual traffic (DRAM)
     isp_duty: jnp.ndarray
+    duty_npu: jnp.ndarray           # placement-indexed sim duties feeding
+    duty_dsp: jnp.ndarray           # the queue_mw_per_duty contention
+    duty_dram: jnp.ndarray          # terms (queueing effects)
     upload_duty: jnp.ndarray
     brightness: jnp.ndarray
     mcs_ebit_scale: jnp.ndarray
@@ -216,17 +219,24 @@ def _features(platform: PlatformSpec, vec: dict, th: dict) -> Features:
     codec_raw = visual_off / fs
     raw_visual = (R["rgb"] + R["gs"] + R["et"]) / fs
 
-    # placement-mask index -> ISP duty from the event-driven taskgraph sim
+    # placement-mask index -> per-resource duty from the event-driven
+    # taskgraph sim (ISP duty rule + NPU/DSP/DRAM contention terms)
     bits = jnp.asarray([1 << i for i in range(len(prim))], jnp.float32)
     idx = jnp.round(jnp.sum(on * bits)).astype(jnp.int32)
-    isp_duty = jnp.take(jnp.asarray(platform.isp_duty, jnp.float32), idx)
+
+    def duty_of(resource, default):
+        tab = platform.duty_table(resource, default)
+        return jnp.take(jnp.asarray(tab, jnp.float32), idx)
 
     mcs = vec["mcs_tier"]
     duty = vec["upload_duty"]
     return Features(
         vio=vio, et=et, asr=asr, ht=ht, n_on=n_on, compression=c,
         fps_scale=fs, fps_f=fps_f, mbps=mbps, mbps_eff=mbps * duty,
-        codec_raw=codec_raw, raw_visual=raw_visual, isp_duty=isp_duty,
+        codec_raw=codec_raw, raw_visual=raw_visual,
+        isp_duty=duty_of("isp", 1.0),
+        duty_npu=duty_of("npu", 0.0), duty_dsp=duty_of("dsp", 0.0),
+        duty_dram=duty_of("dram_bus", 0.0),
         upload_duty=duty, brightness=vec["brightness"],
         mcs_ebit_scale=jnp.take(jnp.asarray(_MCS_EBIT), mcs),
         mcs_link_scale=jnp.take(jnp.asarray(_MCS_LINK), mcs),
@@ -249,13 +259,16 @@ LOAD_KINDS = {
                                + p["floor_mw"]),
     "dsp_audio": lambda p, f, th: (p["base_mw"]
                                    + f.asr * f.r_dsp_asr * th["pj_asr"]
-                                   + (1.0 - f.asr) * p["idle_mw"]),
+                                   + (1.0 - f.asr) * p["idle_mw"]
+                                   + th["queue_mw_per_duty"] * f.duty_dsp),
     "npu": lambda p, f, th: _npu(p, f, th),
     "hwa_vio": lambda p, f, th: (f.vio * (th["ip_idle_mw"]
                                           + f.r_hwa_vio * th["pj_vio"])
                                  + (1.0 - f.vio) * p["off_mw"]),
     "dram": lambda p, f, th: (p["base_mw"]
-                              + th["dram_mw_per_mbps"] * f.raw_visual / 8.0),
+                              + th["dram_mw_per_mbps"] * f.raw_visual / 8.0
+                              + th["queue_mw_per_duty"] * f.duty_dram
+                              / jnp.maximum(f.fps_scale, 1.0)),
     "wifi": lambda p, f, th: (th["wifi_link_mw"] * f.mcs_link_scale
                               + th["wifi_mw_per_mbps"] * f.mcs_ebit_scale
                               * f.mbps_eff),
@@ -267,7 +280,11 @@ def _npu(p, f, th):
     any_on = jnp.maximum(f.ht, f.et)
     active = (th["ip_idle_mw"] + f.ht * f.r_npu_ht * th["pj_ht"]
               + f.et * f.r_npu_et * th["pj_et"])
-    return any_on * active + (1.0 - any_on) * p["off_mw"]
+    # queueing overhead: frame-driven NPU duty from the taskgraph sim
+    # (shared by HT + ET nets), scaled down with the frame rate
+    queue = th["queue_mw_per_duty"] * f.duty_npu \
+        / jnp.maximum(f.fps_scale, 1.0)
+    return any_on * active + (1.0 - any_on) * p["off_mw"] + queue
 
 
 # ---------------------------------------------------------------------------

@@ -40,16 +40,42 @@ class TaskGraph:
 
 
 def simulate(graphs: list[TaskGraph], devices: dict[str, int],
-             horizon_s: float = 1.0) -> Telemetry:
+             horizon_s: float = 1.0,
+             bus_bw: dict[str, float] | None = None) -> Telemetry:
     """Schedule periodic taskgraphs against shared resources.
 
-    devices: resource name -> capacity.  Returns duty cycles per resource,
-    bytes moved, queueing stats, and deadline misses.
+    devices: resource name -> capacity.  bus_bw (optional): bytes/s per
+    transfer resource — a task's ``bytes_out`` then *occupies*
+    ``out_device`` for bytes/bw seconds (bus contention shows up as duty
+    and queueing), instead of only being byte-accounted.  Returns duty
+    cycles per resource, bytes moved, queueing stats, and deadline misses.
+
+    Deadline misses are attributed per graph *instance*: each periodic
+    instantiation gets its own completion barrier, and the barrier keeps
+    working when instances overlap or tasks finish out of graph order
+    (waiting on an already-completed task resumes immediately rather than
+    deadlocking the checker).  On return, every in-flight task generator
+    is closed and its device released/cancelled, so a truncated horizon
+    cannot leave resources held at teardown.
     """
     env = Environment()
     res = {name: Resource(env, name, cap) for name, cap in devices.items()}
     tel = Telemetry()
+    bus_bw = bus_bw or {}
     bytes_moved: dict[str, float] = {}
+    procs: list = []                    # every task/transfer process started
+
+    def transfer(dev: str, n_bytes: float):
+        r = res[dev]
+        req = r.request()
+        try:
+            yield req
+            yield env.timeout(n_bytes / bus_bw[dev])
+        finally:
+            if req.triggered:
+                r.release()
+            else:
+                r.cancel(req)
 
     def run_instance(graph: TaskGraph, t0: float):
         done: dict[str, object] = {}
@@ -58,15 +84,26 @@ def simulate(graphs: list[TaskGraph], devices: dict[str, int],
             for d in task.deps:
                 yield done[d]
             r = res[task.device]
-            yield r.request()
-            yield env.timeout(task.duration_s)
-            r.release()
+            req = r.request()
+            try:
+                yield req
+                yield env.timeout(task.duration_s)
+            finally:
+                # GeneratorExit at either yield still frees the device
+                if req.triggered:
+                    r.release()
+                else:
+                    r.cancel(req)
             if task.bytes_out and task.out_device:
                 bytes_moved[task.out_device] = \
                     bytes_moved.get(task.out_device, 0.0) + task.bytes_out
+                if task.out_device in bus_bw:
+                    procs.append(env.process(
+                        transfer(task.out_device, task.bytes_out)))
 
         for task in graph.tasks:
             done[task.name] = env.process(run_task(task))
+        procs.extend(done.values())
 
         if graph.deadline_s is not None:
             def check():
@@ -88,6 +125,18 @@ def simulate(graphs: list[TaskGraph], devices: dict[str, int],
         if g.rate_hz > 0:
             env.process(source(g))
     env.run(until=horizon_s)
+
+    # teardown: drain every queue first so releasing a holder cannot
+    # phantom-grant (and count a service for) work that never ran, then
+    # close in-flight generators so held devices are released at the
+    # horizon, not at GC time
+    for r in res.values():
+        for req in list(r.waiting):
+            r.cancel(req)
+    for p in procs:
+        if not p.triggered:
+            tel.open_instances += 1
+            p.gen.close()
 
     for name, r in res.items():
         tel.duty[name] = r.duty_cycle(horizon_s)

@@ -105,11 +105,21 @@ def primitive_taskgraphs(on_device: dict[str, bool]) -> list[TaskGraph]:
 DEVICES = {"isp": 1, "codec": 1, "npu": 1, "hwa_vio": 1, "dsp": 1,
            "dram_bus": 1}
 
+# effective streaming bandwidth of the shared memory bus (bytes/s) in the
+# low-power LPDDR state the capture path runs in: producers *occupy* the
+# bus for bytes/BUS_BW seconds, so dram_bus contention shows up as duty
+BUS_BW = {"dram_bus": 1.6e9}
+
+# resources whose sim duty feeds the batched power engine as a
+# placement-indexed table (platform.duty_tables); "isp" drives the ISP
+# duty-cycle rule, the rest feed the queue_mw_per_duty contention terms
+DUTY_RESOURCES = ("isp", "npu", "dsp", "dram_bus")
+
 
 def duty_cycles(on_device: dict[str, bool], horizon_s: float = 2.0):
     """Run the event simulation; returns Telemetry (duties, waits, misses)."""
     return simulate(primitive_taskgraphs(on_device), DEVICES,
-                    horizon_s=horizon_s)
+                    horizon_s=horizon_s, bus_bw=BUS_BW)
 
 
 def flops_rates(on_device: dict[str, bool]) -> dict[str, float]:

@@ -108,3 +108,69 @@ def test_bytes_accounting():
         Task("t", "dev", 0.001, bytes_out=100.0, out_device="bus"),))
     tel = simulate([g], {"dev": 1, "bus": 1}, horizon_s=1.0)
     assert tel.bytes_moved["bus"] == pytest.approx(1000.0, rel=0.2)
+
+
+def test_wait_on_already_dispatched_event_resumes():
+    """Yielding an event whose callbacks already fired must resume the
+    waiter immediately (seed bug: the waiter hung forever)."""
+    env = Environment()
+    log = []
+
+    def fast():
+        yield env.timeout(1.0)
+
+    p_fast = env.process(fast())
+
+    def late_waiter():
+        yield env.timeout(2.0)       # p_fast completed + dispatched at t=1
+        yield p_fast
+        log.append(env.now)
+
+    env.process(late_waiter())
+    env.run(until=10.0)
+    assert log == [2.0]
+
+
+def test_deadline_miss_counted_when_tasks_finish_out_of_order():
+    """Per-instance deadline barrier survives out-of-graph-order completion
+    (fast task on its own device finishes before the slow first task)."""
+    g = TaskGraph("g", rate_hz=10.0, deadline_s=0.001, tasks=(
+        Task("a", "slow", 0.020),
+        Task("b", "fast", 0.0001),
+    ))
+    tel = simulate([g], {"slow": 1, "fast": 1}, horizon_s=1.0)
+    assert tel.deadline_misses == 10        # every instance misses 1 ms
+
+
+def test_deadline_misses_per_instance_with_oversubscribed_resource():
+    """Overlapping instances queueing on one device each get their own
+    miss attribution: ~50 instances complete (0.02 s service, 1 s horizon)
+    and every one of them blows the 5 ms deadline."""
+    g = TaskGraph("hog", rate_hz=100.0, deadline_s=0.005, tasks=(
+        Task("t1", "dev", 0.015),
+        Task("t2", "aux", 0.001, deps=("t1",)),
+    ))
+    tel = simulate([g], {"dev": 1, "aux": 1}, horizon_s=1.0)
+    assert tel.duty["dev"] > 0.95
+    assert 40 <= tel.deadline_misses <= 70
+    assert tel.open_instances > 0           # the queued tail never finished
+
+
+def test_teardown_releases_held_resources():
+    """A task still holding its device at the horizon is closed and
+    released at teardown, and its partial service shows up as duty."""
+    g = TaskGraph("g", rate_hz=1.0, tasks=(Task("t", "dev", 10.0),))
+    tel = simulate([g], {"dev": 1}, horizon_s=1.0)
+    assert tel.open_instances >= 1
+    assert tel.duty["dev"] == pytest.approx(1.0)
+
+
+def test_bus_bw_transfer_occupancy():
+    """With bus_bw set, bytes_out occupies the out_device: 10 x 1 MB at
+    100 MB/s = 0.1 s busy on the bus."""
+    g = TaskGraph("g", rate_hz=10.0, tasks=(
+        Task("t", "dev", 0.001, bytes_out=1e6, out_device="bus"),))
+    tel = simulate([g], {"dev": 1, "bus": 1}, horizon_s=1.0,
+                   bus_bw={"bus": 1e8})
+    assert tel.duty["bus"] == pytest.approx(0.1, rel=0.2)
+    assert tel.bytes_moved["bus"] == pytest.approx(1e7, rel=0.2)

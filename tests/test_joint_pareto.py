@@ -1,0 +1,217 @@
+"""Joint device+backend Pareto engine (dse.joint_pareto / co_optimize),
+the shared dominance filter, and the dry-run-backed fleet capacities."""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+from _proptest import given, settings, st
+
+from repro.core import dse, offload
+from repro.core.dse import non_dominated
+from repro.core.offload import STREAM_SERVICE
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _brute_force_mask(pts: np.ndarray) -> np.ndarray:
+    """Reference O(N^2) Python dominance filter (minimize all columns)."""
+    n = len(pts)
+    keep = np.ones(n, bool)
+    for i in range(n):
+        for j in range(n):
+            if i != j and np.all(pts[j] <= pts[i]) \
+                    and np.any(pts[j] < pts[i]):
+                keep[i] = False
+                break
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# dominance filter: correctness incl. ties (the dse.pareto seed bug)
+# ---------------------------------------------------------------------------
+
+def test_non_dominated_keeps_ties_and_drops_dominated():
+    """Regression for the strict-> filter: a point that ties on bandwidth
+    at equal power must not shadow its duplicate, and a same-power,
+    lower-bandwidth point is dominated (the old filter admitted it when
+    it sorted first)."""
+    #          power  bandwidth(maximized)
+    pts = [[8.0, 6.0],      # optimal
+           [8.0, 5.0],      # dominated: same power, less bandwidth
+           [10.0, 5.0],     # dominated outright
+           [8.0, 6.0],      # exact duplicate of the optimum: kept
+           [7.0, 4.0]]      # optimal: cheapest
+    mask = non_dominated(np.asarray(pts), maximize=(1,))
+    np.testing.assert_array_equal(mask, [True, False, False, True, True])
+
+
+@settings(max_examples=40, deadline=None)
+@given(xs=st.lists(st.floats(0.0, 1.0), min_size=4, max_size=30))
+def test_non_dominated_matches_brute_force(xs):
+    """Vectorized mask == reference pair loop; quantized coords force
+    tied objectives onto the property path."""
+    pts = np.round(np.asarray(xs[:len(xs) // 2 * 2]).reshape(-1, 2), 1)
+    np.testing.assert_array_equal(non_dominated(pts),
+                                  _brute_force_mask(pts))
+
+
+def test_pareto_front_is_sound_and_complete():
+    """dse.pareto through the public API: front members are mutually
+    non-dominated, and every excluded point is dominated by a front
+    member (the seed filter violated both with ties).  The rows carry
+    rounded display values while the mask is computed on raw floats, so
+    both checks allow one rounding quantum (0.1 mW / 0.01 Mbps) of
+    slack."""
+    MW_EPS, BW_EPS = 0.051, 0.0051
+    pts, front = dse.pareto()
+    assert front
+    key = lambda r: (r["total_mw"], r["offload_mbps"])  # noqa: E731
+    fset = {key(r) for r in front}
+
+    def strictly_dominates(a, b):
+        """Dominance that survives rounding: at least one objective is
+        better by more than its rounding quantum, none worse."""
+        return (a["total_mw"] <= b["total_mw"]
+                and a["offload_mbps"] >= b["offload_mbps"]
+                and (a["total_mw"] < b["total_mw"] - MW_EPS
+                     or a["offload_mbps"] > b["offload_mbps"] + BW_EPS))
+
+    def weakly_dominates(a, b):
+        return (a["total_mw"] <= b["total_mw"] + MW_EPS
+                and a["offload_mbps"] >= b["offload_mbps"] - BW_EPS)
+
+    for f in front:
+        assert not any(strictly_dominates(g, f) for g in front), f
+    for p in pts:
+        if key(p) not in fset:
+            assert any(weakly_dominates(f, p) for f in front), p
+
+
+# ---------------------------------------------------------------------------
+# the joint grid
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def joint():
+    return dse.joint_pareto()
+
+
+def test_joint_grid_covers_full_design_space(joint):
+    """Full placement x compression x fps x MCS grid in one batch."""
+    assert len(joint) >= 768
+    assert len(joint) == 16 * 8 * 6 * 3
+    assert joint.device_mw.shape == joint.uplink_mbps.shape \
+        == joint.backend_pods.shape == (len(joint),)
+    assert np.all(np.isfinite(joint.objectives()))
+    assert np.all(joint.backend_pods > 0)
+
+
+def test_joint_front_has_zero_dominated_members(joint):
+    """Acceptance: the 3-objective front is exactly the non-dominated
+    set, checked against the reference pair loop on the front and
+    completeness against the full grid."""
+    objs = joint.objectives().copy()
+    objs[:, 1] *= -1.0                   # uplink is maximized
+    idx = joint.front_indices()
+    assert idx.size > 0
+    # no grid point dominates any front member
+    for i in idx:
+        le = (objs <= objs[i]).all(axis=1)
+        lt = (objs < objs[i]).any(axis=1)
+        assert not np.any(le & lt), i
+    # every non-front point is dominated by someone
+    non_front = np.setdiff1d(np.arange(len(joint)), idx)
+    for i in non_front[:: max(1, len(non_front) // 64)]:
+        le = (objs <= objs[i]).all(axis=1)
+        lt = (objs < objs[i]).any(axis=1)
+        assert np.any(le & lt), i
+
+
+def test_joint_matches_fleet_grid_rows(joint):
+    """The vectorized pods pass agrees with the row-formatted fleet_grid
+    on a stratified subset of the same ScenarioSet."""
+    idx = list(range(0, len(joint), 191))
+    sub = joint.sset
+    rows = offload.fleet_grid(
+        type(sub)(sub.placement[idx], sub.compression[idx],
+                  sub.fps_scale[idx], sub.mcs_tier[idx],
+                  sub.upload_duty[idx], sub.brightness[idx],
+                  primitives=sub.primitives),
+        n_users=joint.n_users, duty=joint.duty)
+    for k, i in enumerate(idx):
+        assert rows[k]["backend_pods"] == pytest.approx(
+            joint.backend_pods[i], abs=0.06)
+        assert rows[k]["device_mw"] == pytest.approx(
+            joint.device_mw[i], abs=0.06)
+        assert "note" not in rows[k], rows[k]
+
+
+def test_pod_budget_flips_the_optimum(joint):
+    """The full-system Amdahl effect: under a tight backend pod budget
+    the best design is NOT the unconstrained device-power optimum."""
+    co = dse.co_optimize(joint)
+    opt = co["device_optimum"]
+    budget = 0.5 * (float(joint.backend_pods.min()) + opt["backend_pods"])
+    under = dse.co_optimize(joint, pod_budget=budget)[
+        "min_power_under_pod_budget"]
+    assert under is not None
+    assert under["index"] != opt["index"]
+    assert under["on_device"] != opt["on_device"]
+    assert under["device_mw"] > opt["device_mw"]
+    assert under["backend_pods"] <= budget
+    # and the reverse constraint: min pods under a power budget
+    rev = dse.co_optimize(joint, power_budget_mw=opt["device_mw"] + 1.0)[
+        "min_pods_under_power_budget"]
+    assert rev is not None
+    assert rev["device_mw"] <= opt["device_mw"] + 1.0
+    # infeasible budgets yield None, not a bogus row
+    assert dse.co_optimize(joint, pod_budget=1.0)[
+        "min_power_under_pod_budget"] is None
+
+
+def test_joint_front_reflects_contention_tables(joint):
+    """The batched engine sees the taskgraph sim's NPU/DSP/DRAM duty
+    tables: zeroing the queueing coefficient changes the grid."""
+    base = joint.device_mw
+    off = np.asarray(dse.joint_pareto(theta={"queue_mw_per_duty": 0.0})
+                     .device_mw)
+    assert np.all(off <= base + 1e-6)
+    assert np.any(off < base - 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# backend capacities come from dry-run artifacts, not fallbacks
+# ---------------------------------------------------------------------------
+
+def test_stream_service_cells_resolve_from_artifacts():
+    """All four STREAM_SERVICE cells size from regenerated dry-run
+    artifacts (ROADMAP item): no FALLBACK_BOUND_S, no missing_artifact."""
+    for stream, (arch, cell, _) in STREAM_SERVICE.items():
+        cap, source = offload._cell_tokens_per_s(arch, cell)
+        assert source == "dryrun", (stream, arch, cell)
+        assert np.isfinite(cap) and cap > 0
+
+
+def test_joint_report_has_no_missing_artifacts(joint):
+    assert joint.missing_streams() == []
+    assert set(joint.sources.values()) == {"dryrun"}
+
+
+# ---------------------------------------------------------------------------
+# bench smoke path (CI tooling)
+# ---------------------------------------------------------------------------
+
+def test_bench_smoke_mode_runs_clean():
+    """`benchmarks/run.py --smoke` exercises the joint bench path end to
+    end (16-point grid) and exits zero inside the tier-1 budget."""
+    env = {"PYTHONPATH": str(REPO / "src")}
+    import os
+    env = {**os.environ, **env}
+    res = subprocess.run([sys.executable, "-m", "benchmarks.run", "--smoke"],
+                         cwd=REPO, env=env, capture_output=True, text=True,
+                         timeout=300)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "joint_smoke" in res.stdout
+    assert "ERROR" not in res.stdout

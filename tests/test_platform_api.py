@@ -157,6 +157,74 @@ def test_bad_knob_values_rejected():
         ScenarioSet.build([{"on_device": ("telepathy",)}])
 
 
+def test_capture_only_rejects_every_unsupported_placement():
+    """Every placement the capture-only SKU cannot run on-device raises
+    (only ASR kept its accelerator)."""
+    cap = aria2.aria2_capture_only_platform()
+    unsupported = [p for p in cap.primitives
+                   if p not in cap.supported_primitives()]
+    assert unsupported
+    for p in unsupported:
+        with pytest.raises(ValueError, match="cannot run"):
+            scenarios.evaluate(cap, ScenarioSet.build(
+                [{"on_device": (p,)}]))
+
+
+def test_reduced_sku_empty_grid_roundtrips_json():
+    """Empty-placement grids on reduced SKUs evaluate identically through
+    a JSON round-trip of the platform (duty tables included)."""
+    for plat in (aria2.aria2_capture_only_platform(),
+                 aria2.aria2_display_platform()):
+        rebuilt = PlatformSpec.from_dict(
+            json.loads(json.dumps(plat.to_dict())))
+        assert rebuilt == plat
+        assert rebuilt.duty_tables == plat.duty_tables
+        sset = ScenarioSet.grid(placements=((),),
+                                compressions=(4.0, 32.0),
+                                fps_scales=(1.0, 8.0))
+        np.testing.assert_array_equal(
+            np.asarray(scenarios.total_mw(rebuilt, sset)),
+            np.asarray(scenarios.total_mw(plat, sset)))
+
+
+def test_legacy_isp_duty_serialization_still_loads(plat):
+    """Pre-duty_tables JSON (bare "isp_duty" list) still deserializes."""
+    d = plat.to_dict()
+    d["isp_duty"] = d.pop("duty_tables")["isp"]
+    rebuilt = PlatformSpec.from_dict(json.loads(json.dumps(d)))
+    assert rebuilt.isp_duty == plat.isp_duty
+    # tables the old schema lacked fall back to constant defaults
+    assert rebuilt.duty_table("npu", 0.0) == (0.0,) * 16
+
+
+def test_sweep_row_labels_lockstep_with_grid(plat):
+    """compression_sweep and pareto row labels must match the
+    ScenarioSet.grid ordering they were evaluated under — a grid-order
+    change cannot silently mislabel rows."""
+    from repro.core import dse
+
+    comps = (1, 2, 4, 8, 16, 32, 64, 128)
+    fpss = (1, 2, 4, 8, 16, 32)
+    rows = dse.compression_sweep(compressions=comps, fps_scales=fpss)
+    ref = ScenarioSet.grid(placements=((),),
+                           compressions=[float(c) for c in comps],
+                           fps_scales=[float(f) for f in fpss])
+    assert len(rows) == len(ref)
+    for i, r in enumerate(rows):
+        assert float(r["compression"]) == float(ref.compression[i]), i
+        assert float(r["fps_scale"]) == float(ref.fps_scale[i]), i
+
+    pcomps = (4, 10, 20, 40)
+    pts, _ = dse.pareto(compressions=pcomps)
+    pref = ScenarioSet.grid(placements=all_placements(),
+                            compressions=[float(c) for c in pcomps],
+                            fps_scales=(1.0,))
+    assert len(pts) == len(pref)
+    for i, p in enumerate(pts):
+        assert p["on_device"] == ("+".join(pref.on_device(i)) or "(none)"), i
+        assert float(p["compression"]) == float(pref.compression[i]), i
+
+
 def test_category_breakdown_sums_to_total(plat):
     sset = ScenarioSet.grid(placements=((), tuple(PRIMITIVES)),
                             compressions=(10.0,), fps_scales=(1.0,))
