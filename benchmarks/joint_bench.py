@@ -18,7 +18,7 @@ BENCH_joint.json schema (one JSON object):
                               baseline)
   missing_artifact_rows int   grid rows whose pod count used a fallback
                               capacity; must be 0 on a checkout with the
-                              four STREAM_SERVICE dry-run artifacts
+                              committed 80-cell dry-run sweep
   sources               {stream: "dryrun"|"fallback"} capacity source per
                               backend stream
   device_optimum        row   unconstrained min-device-power point
@@ -28,7 +28,8 @@ BENCH_joint.json schema (one JSON object):
                               different placement than device_optimum,
                               i.e. the full-system Amdahl effect
   row objects: {index, on_device, compression, fps_scale, mcs,
-                device_mw, uplink_mbps, backend_pods}
+                device_mw, uplink_mbps, backend_pods,
+                pods_by_stream: {stream: pods}}
 
     PYTHONPATH=src python benchmarks/joint_bench.py
 """

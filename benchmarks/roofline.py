@@ -4,11 +4,34 @@ Per (arch x shape x mesh): the three terms (compute / memory / collective,
 seconds per step, per device), the dominant bottleneck, MODEL_FLOPS =
 6*N*D (train) or 2*N_active*D (inference) vs compiled HLO flops, and the
 roofline fraction.  EXPERIMENTS.md SSRoofline is generated from this.
+
+`backend_bench` times the batched analytical roofline grid
+(repro.launch.sweep) against its per-cell loop baseline and emits
+results/benchmarks/BENCH_backend.json — one JSON object:
+
+  n_cells        int   full grid size (arch x shape x mesh, incl. skips)
+  ok_cells       int   applicable cells the analytical pass evaluates
+  batched_us     float best single-pass wall time of the vectorized
+                       analytical grid over a prebuilt CellTable
+                       (microseconds, post-warmup)
+  loop_us        float best wall time of the per-cell loop
+                       (sweep.analytical_cell per grid cell)
+  speedup        float loop_us / batched_us — the regression-gate metric
+                       (benchmarks/run.py fails >20% drops vs the
+                       committed baseline)
+  dryrun_cells   int   cells whose terms come from a compiled dry-run
+                       artifact overriding the analytical estimate
+  analytical_cells int cells still on the analytical path
+  dominant_agreement  float fraction of artifact-backed cells whose
+                       analytical dominant bottleneck matches the
+                       compiled one (model-quality tracking, not gated)
 """
 from __future__ import annotations
 
 import glob
 import json
+import statistics
+import time
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
@@ -96,7 +119,9 @@ def run():
     ok = [r for r in rows if r["status"] == "ok"]
     if not ok:
         return rows, "no dry-run artifacts yet (run repro.launch.dryrun)"
-    med = sorted(r["roofline_frac"] for r in ok)[len(ok) // 2]
+    # real median: sorted(xs)[len//2] picked the upper-middle element on
+    # even-length cell lists (wrong once the full 80-cell sweep lands)
+    med = statistics.median(r["roofline_frac"] for r in ok)
     best = max(ok, key=lambda r: r["roofline_frac"])
     tuned = tuned_table()
     sp = max((t["speedup"] for t in tuned), default=0.0)
@@ -106,3 +131,82 @@ def run():
              f"{best['arch']}/{best['shape']}={best['roofline_frac']:.3f}); "
              f"{len(tuned)} tuned cells (best speedup {sp:.1f}x, "
              f"best rf {best_rf:.3f})"))
+
+
+# ---------------------------------------------------------------------------
+# batched backend roofline engine bench (BENCH_backend.json; schema above)
+# ---------------------------------------------------------------------------
+
+BENCH_OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+
+
+def _best_of(fn, n: int) -> float:
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def backend_bench(n_repeats: int = 5):
+    """Batched analytical grid vs the per-cell loop (the serving-side
+    analogue of BENCH_dse's vmap-vs-loop measurement)."""
+    from repro.launch import sweep
+
+    table = sweep.CellTable.build()         # struct-of-arrays, built once
+    cells = table.keys
+    sweep.analytical_terms(table)           # warm numpy / ufunc caches
+
+    batched = _best_of(lambda: sweep.analytical_terms(table), n_repeats)
+    loop = _best_of(lambda: [sweep.analytical_cell(a, s, m)
+                             for a, s, m in cells], 2)
+
+    merged = sweep.roofline_grid(table=table)
+    n_dry = sum(1 for r in merged if r["source"] == "dryrun")
+    n_ana = sum(1 for r in merged if r["source"] == "analytical")
+    terms = sweep.analytical_terms(table)
+    agree = [terms["dominant"][i] == r["dominant"]
+             for i, r in enumerate(merged) if r["source"] == "dryrun"]
+    result = {
+        "n_cells": len(cells),
+        "ok_cells": int(terms["applicable"].sum()),
+        "batched_us": round(1e6 * batched, 1),
+        "loop_us": round(1e6 * loop, 1),
+        "speedup": round(loop / batched, 1),
+        "dryrun_cells": n_dry,
+        "analytical_cells": n_ana,
+        "dominant_agreement": round(sum(agree) / len(agree), 3)
+        if agree else 0.0,
+    }
+    BENCH_OUT.mkdir(parents=True, exist_ok=True)
+    (BENCH_OUT / "BENCH_backend.json").write_text(
+        json.dumps(result, indent=1))
+    derived = (f"{len(cells)}cells batched={result['batched_us']}us "
+               f"loop={result['loop_us']}us speedup={result['speedup']}x "
+               f"dryrun={n_dry}")
+    return merged, derived
+
+
+def backend_smoke():
+    """Small analytical grid + capacity resolution: exercises the batched
+    backend path (CellTable -> terms -> artifact merge -> CapacityTable)
+    inside the tier-1 time budget.  Writes nothing."""
+    from repro.core import offload
+    from repro.launch import sweep
+
+    table = sweep.CellTable.build(
+        ["granite-3-2b", "mamba2-2.7b"], ["train_4k", "prefill_32k"],
+        ("single",))
+    terms = sweep.analytical_terms(table)
+    assert len(table) == 4
+    assert all(terms[k].shape == (4,)
+               for k in ("compute_s", "memory_s", "collective_s"))
+    assert all(terms["bound_s"] > 0)
+    merged = sweep.roofline_grid(table=table)
+    assert {r["source"] for r in merged} <= {"dryrun", "analytical"}
+    cap_table = offload.capacity_table()
+    arch, cell, cap, source = cap_table.resolve(
+        offload.STREAM_CANDIDATES["signals"])
+    assert cap > 0 and source in ("dryrun", "fallback")
+    return merged, f"4cells dominant={terms['dominant'][0]} ok"

@@ -7,9 +7,9 @@ Regression gate: benches that emit a ``BENCH_*.json`` detail file are
 compared against the committed baseline (the copy present before the run);
 if a gated metric regresses by more than ``REGRESSION_TOLERANCE`` the
 process exits non-zero, so CI catches perf regressions on the batched
-engines.  ``--smoke`` runs only a 16-point joint-grid pass (no baselines
-touched, no gate) so the bench path itself is exercised inside the tier-1
-time budget.
+engines.  ``--smoke`` runs only a 16-point joint-grid pass plus a small
+batched-backend roofline pass (no baselines touched, no gate) so the bench
+paths themselves are exercised inside the tier-1 time budget.
 """
 from __future__ import annotations
 
@@ -25,6 +25,7 @@ OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
 GATED_METRICS = {
     "BENCH_dse.json": ("speedup", "higher"),
     "BENCH_joint.json": ("points_per_s", "higher"),
+    "BENCH_backend.json": ("speedup", "higher"),
 }
 REGRESSION_TOLERANCE = 0.20
 
@@ -74,11 +75,13 @@ def main(argv=None) -> int:
     from . import dse_bench, joint_bench, kernel_benches, paper_benches, \
         roofline
     if args.smoke:
-        benches = [("joint_smoke", joint_bench.smoke)]
+        benches = [("joint_smoke", joint_bench.smoke),
+                   ("backend_smoke", roofline.backend_smoke)]
     else:
         benches = [
             ("dse_batched_vs_loop", dse_bench.run),
             ("joint_pareto", joint_bench.run),
+            ("backend_roofline", roofline.backend_bench),
             ("table2_sensor_rates", paper_benches.table2_sensor_rates),
             ("fig3_power_composition", paper_benches.fig3_power_composition),
             ("fig4_placement_dse", paper_benches.fig4_placement_dse),

@@ -21,11 +21,12 @@ Beyond-paper:
   * joint_pareto         — the paper's Amdahl lesson applied end to end:
                            placement x compression x fps x MCS swept in
                            ONE batched device call, each point's
-                           offloaded streams mapped to backend pod counts
-                           (offload.pods_vector), and the 3-objective
-                           (device mW, uplink Mbps, backend pods)
-                           non-dominated front extracted by a vectorized
-                           numpy dominance pass.
+                           offloaded streams mapped to per-stream backend
+                           pod counts (offload.pods_breakdown, capacities
+                           from the cached CapacityTable), and the
+                           3-objective (device mW, uplink Mbps, backend
+                           pods) non-dominated front extracted by the
+                           blockwise numpy dominance pass.
   * co_optimize          — constrained argmins over the joint grid: min
                            device power under a backend pod budget, and
                            min pods under a device power budget.
@@ -138,25 +139,60 @@ def sensitivity(scenario: Scenario | None = None, keys=None, platform=None):
     return sorted(rows, key=lambda r: -abs(r["elasticity"]))
 
 
-def non_dominated(points, maximize: tuple = ()) -> np.ndarray:
+def _non_dominated_dense(pts: np.ndarray) -> np.ndarray:
+    """Reference dense dominance filter: ONE (N, N, K) broadcast.
+
+    Exact but O(N^2 K) memory — a 20k-point 3-objective grid allocates
+    multi-GB boolean cubes.  Kept as the parity oracle for the blockwise
+    `non_dominated` (tests assert mask equality on random grids); all
+    production callers go through `non_dominated`."""
+    le = (pts[:, None, :] <= pts[None, :, :]).all(-1)   # le[j,i]: q_j <= p_i
+    lt = (pts[:, None, :] < pts[None, :, :]).any(-1)    # lt[j,i]: strict
+    return ~(le & lt).any(axis=0)
+
+
+def non_dominated(points, maximize: tuple = (), block: int = 2048
+                  ) -> np.ndarray:
     """Boolean mask of Pareto-optimal rows of an (N, K) objective matrix.
 
     All objectives are minimized; column indices in `maximize` are
     negated first.  Uses the correct dominance test — q dominates p iff
     q <= p in every objective AND q < p in at least one — so points that
     tie on some objectives at better cost in another survive, and exact
-    duplicates are all kept (neither strictly dominates).  Fully
-    vectorized (one (N, N, K) broadcast, no Python pair loops).
+    duplicates are all kept (neither strictly dominates).
+
+    Sort-pruned and block-wise: rows are processed in lexicographic order
+    (a dominator is componentwise <= with one strict <, so it always
+    sorts strictly earlier), each block compared only against the
+    already-kept prefix — every dominated point has a *non-dominated*
+    dominator by transitivity, so pruning dominated candidates is exact.
+    Peak memory is O((front + block) * block * K) instead of the dense
+    O(N^2 K) cube, which OOMed on 20k-point joint grids (~10 GB); tie
+    semantics are bit-identical to `_non_dominated_dense`.
     """
     pts = np.asarray(points, np.float64).copy()
     if pts.ndim != 2:
         raise ValueError(f"expected (N, K) objectives, got {pts.shape}")
     for c in maximize:
         pts[:, c] *= -1.0
-    le = (pts[:, None, :] <= pts[None, :, :]).all(-1)   # le[j,i]: q_j <= p_i
-    lt = (pts[:, None, :] < pts[None, :, :]).any(-1)    # lt[j,i]: strict
-    dominated = (le & lt).any(axis=0)
-    return ~dominated
+    n = pts.shape[0]
+    if n == 0:
+        return np.zeros(0, bool)
+    order = np.lexsort(pts.T[::-1])         # ascending by col 0, 1, ...
+    spts = pts[order]
+    keep = np.ones(n, bool)
+    for start in range(0, n, block):
+        end = min(start + block, n)
+        blk = spts[start:end]
+        # candidates: surviving strict predecessors + the block itself
+        # (intra-block dominators also sort earlier, so one pass suffices)
+        cand = np.concatenate([spts[:start][keep[:start]], blk])
+        le = (cand[:, None, :] <= blk[None, :, :]).all(-1)
+        lt = (cand[:, None, :] < blk[None, :, :]).any(-1)
+        keep[start:end] = ~(le & lt).any(axis=0)
+    mask = np.empty(n, bool)
+    mask[order] = keep
+    return mask
 
 
 def pareto(compressions=(4, 10, 20, 40), platform=None):
@@ -201,7 +237,9 @@ class JointReport:
     (minimize), uplink_mbps (maximize — context-fidelity proxy),
     backend_pods (minimize).  front_mask marks the 3-objective
     non-dominated set; sources records whether each backend stream's
-    capacity came from a dry-run artifact or the fallback bound.
+    capacity came from a dry-run artifact or the fallback bound, and
+    `breakdown` carries the per-stream pod components + chosen serving
+    archs (offload.PodsBreakdown).
     """
     sset: ScenarioSet
     device_mw: np.ndarray           # (N,)
@@ -211,6 +249,7 @@ class JointReport:
     sources: dict                   # stream -> "dryrun" | "fallback"
     n_users: float
     duty: float
+    breakdown: offload.PodsBreakdown | None = None
 
     def __len__(self) -> int:
         return len(self.sset)
@@ -224,11 +263,25 @@ class JointReport:
         return np.flatnonzero(self.front_mask)
 
     def missing_streams(self) -> list:
+        """Fallback-sized streams that actually reach the backend.
+
+        Activity-guarded per design point (a fallback "audio" capacity is
+        NOT missing on a grid where every point runs ASR on-device — the
+        old whole-set check flagged it spuriously)."""
+        if self.breakdown is not None:
+            return self.breakdown.missing_streams()
         return offload.missing_streams(self.sources)
+
+    def stream_archs(self) -> dict:
+        """stream -> serving arch chosen by min-pods (STREAM_CANDIDATES)."""
+        if self.breakdown is not None:
+            return dict(self.breakdown.archs)
+        return {s: arch for s, (arch, _, _) in
+                offload.STREAM_SERVICE.items()}
 
     def row(self, i: int) -> dict:
         s = self.sset
-        return {
+        out = {
             "index": int(i),
             "on_device": "+".join(s.on_device(i)) or "(none)",
             "compression": float(s.compression[i]),
@@ -238,6 +291,9 @@ class JointReport:
             "uplink_mbps": round(float(self.uplink_mbps[i]), 2),
             "backend_pods": round(float(self.backend_pods[i]), 1),
         }
+        if self.breakdown is not None:
+            out["pods_by_stream"] = self.breakdown.row(i)
+        return out
 
     def front_rows(self) -> list:
         rows = [self.row(i) for i in self.front_indices()]
@@ -255,7 +311,8 @@ def joint_pareto(platform=None, placements=None,
     Default grid: 16 placements x 8 compressions x 6 fps x 3 MCS tiers =
     2304 design points.  The whole grid goes through ONE jitted vmap
     device call (scenarios.evaluate), one vectorized fleet-sizing pass
-    (offload.pods_vector), and one vectorized dominance pass
+    (offload.pods_breakdown — capacities come from the cached
+    CapacityTable, zero disk reads), and one blockwise dominance pass
     (non_dominated) — no per-point Python loops anywhere on the path.
     """
     plat = _plat(platform)
@@ -269,12 +326,12 @@ def joint_pareto(platform=None, placements=None,
     rep = scenarios.evaluate(plat, sset, theta)
     device_mw = np.asarray(rep.total_mw, np.float64)
     uplink = np.asarray(rep.offloaded_mbps, np.float64)
-    pods, sources = offload.pods_vector(sset, n_users=n_users, duty=duty,
-                                        results_dir=results_dir)
-    objs = np.stack([device_mw, uplink, pods], axis=1)
+    bd = offload.pods_breakdown(sset, n_users=n_users, duty=duty,
+                                results_dir=results_dir)
+    objs = np.stack([device_mw, uplink, bd.pods], axis=1)
     mask = non_dominated(objs, maximize=(1,))
-    return JointReport(sset, device_mw, uplink, pods, mask, sources,
-                       n_users, duty)
+    return JointReport(sset, device_mw, uplink, bd.pods, mask, bd.sources,
+                       n_users, duty, breakdown=bd)
 
 
 def _lex_argmin(keys: list, feasible: np.ndarray):

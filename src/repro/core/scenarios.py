@@ -49,6 +49,18 @@ GRID_COMPRESSIONS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0)
 GRID_FPS_SCALES = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0)
 
 
+def _unit_knob(name: str, value):
+    """Validate a [0, 1] fraction knob (scalar or array).
+
+    upload_duty / brightness are physical fractions; a negative duty
+    silently produced negative WiFi power before this guard."""
+    arr = np.asarray(value, np.float64)
+    if arr.size and (np.any(arr < 0.0) or np.any(arr > 1.0)):
+        raise ValueError(f"{name} must be within [0, 1], got "
+                         f"{float(arr.min())}..{float(arr.max())}")
+    return value
+
+
 def all_placements(primitives=PRIMITIVES) -> tuple:
     """All 2^n on-device subsets, in the paper's sweep order (by size)."""
     out = []
@@ -117,8 +129,8 @@ class ScenarioSet:
                 raise ValueError(f"mcs_tier {tier} out of range "
                                  f"[0, {len(MCS_TIERS)})")
             mcs[i] = tier
-            duty[i] = r.get("upload_duty", 1.0)
-            bright[i] = r.get("brightness", 0.0)
+            duty[i] = _unit_knob("upload_duty", r.get("upload_duty", 1.0))
+            bright[i] = _unit_knob("brightness", r.get("brightness", 0.0))
             names.append(r.get("name", ""))
         return cls(pl, comp, fps, mcs, duty, bright, tuple(names),
                    primitives)
@@ -158,6 +170,9 @@ class ScenarioSet:
             if tiers.min() < 0 or tiers.max() >= len(MCS_TIERS):
                 raise ValueError(f"mcs_tier out of range "
                                  f"[0, {len(MCS_TIERS)})")
+        for knob in ("upload_duty", "brightness"):
+            if knob in arrays:
+                _unit_knob(knob, arrays[knob])
         upd = {k: np.broadcast_to(np.asarray(v, np.float32), (n,)).copy()
                if k != "mcs_tier"
                else np.broadcast_to(np.asarray(v, np.int32), (n,)).copy()

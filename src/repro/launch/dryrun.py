@@ -30,10 +30,9 @@ from . import steps as steps_lib
 from .hlo_analysis import analyze_hlo
 from .mesh import make_production_mesh
 
-# TPU v5e-class hardware constants (per chip)
-PEAK_FLOPS = 197e12          # bf16
-HBM_BW = 819e9               # bytes/s
-ICI_BW = 50e9                # bytes/s/link
+# TPU v5e-class hardware constants (per chip) — source of truth lives in
+# sweep.py (importable without jax); re-exported here for the compiled path
+from .sweep import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -1,0 +1,306 @@
+"""Batched backend roofline engine (repro.launch.sweep), CapacityTable
+resolution, the blockwise dominance filter, and the sweep-runner resume
+semantics (ISSUE 3 tentpole + satellites)."""
+import json
+import tracemalloc
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import dse, offload
+from repro.core.dse import _non_dominated_dense, non_dominated
+from repro.core.scenarios import ScenarioSet
+from repro.launch import sweep
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _artifact(bound_terms) -> str:
+    return json.dumps({"ok": True, "terms": bound_terms})
+
+
+# ---------------------------------------------------------------------------
+# CapacityTable: artifact-vs-fallback resolution, caching, candidates
+# ---------------------------------------------------------------------------
+
+def test_capacity_table_artifact_vs_fallback(tmp_path):
+    (tmp_path / "granite-3-2b__prefill_32k__single.json").write_text(
+        _artifact({"compute_s": 4.0, "memory_s": 1.0, "collective_s": 0.5}))
+    (tmp_path / "yi-34b__prefill_32k__single.json").write_text(
+        json.dumps({"ok": False, "error": "boom"}))       # failed cell
+    (tmp_path / "olmo-1b__train_4k__single.json").write_text("{not json")
+    (tmp_path / "README.txt").write_text("not an artifact")
+
+    t = offload.CapacityTable(tmp_path)
+    cap, source = t.tokens_per_s("granite-3-2b", "prefill_32k")
+    assert source == "dryrun"
+    assert cap == pytest.approx(32 * 32768 / 4.0)
+    # failed, corrupt, and absent artifacts all land on the deterministic
+    # fallback path — finite, reproducible capacities
+    for arch, shape, cls in (("yi-34b", "prefill_32k", "prefill"),
+                             ("olmo-1b", "train_4k", "train"),
+                             ("gemma3-4b", "decode_32k", "decode")):
+        cap, source = t.tokens_per_s(arch, shape)
+        assert source == "fallback", (arch, shape)
+        assert cap == pytest.approx(
+            offload._shape_tokens(shape) / offload.FALLBACK_BOUND_S[cls])
+
+
+def test_capacity_table_resolve_prefers_artifacts_then_min_pods(tmp_path):
+    # granite has a REAL (slow) artifact; zamba2 is missing, so its
+    # fallback capacity is *larger* — the fallback must not win
+    (tmp_path / "granite-3-2b__prefill_32k__single.json").write_text(
+        _artifact({"compute_s": 4.0, "memory_s": 0.1, "collective_s": 0.1}))
+    t = offload.CapacityTable(tmp_path)
+    arch, cell, cap, source = t.resolve(offload.STREAM_CANDIDATES["signals"])
+    assert (arch, source) == ("granite-3-2b", "dryrun")
+    # both artifact-backed: the faster cell (min pods) wins
+    (tmp_path / "zamba2-1.2b__prefill_32k__single.json").write_text(
+        _artifact({"compute_s": 2.0, "memory_s": 0.1, "collective_s": 0.1}))
+    t2 = offload.CapacityTable(tmp_path)
+    arch2, _, cap2, source2 = t2.resolve(
+        offload.STREAM_CANDIDATES["signals"])
+    assert (arch2, source2) == ("zamba2-1.2b", "dryrun")
+    assert cap2 > cap
+
+
+def test_capacity_table_cached_per_directory(tmp_path):
+    t1 = offload.capacity_table(tmp_path)
+    assert offload.capacity_table(tmp_path) is t1        # one scan per dir
+    (tmp_path / "granite-3-2b__prefill_32k__single.json").write_text(
+        _artifact({"compute_s": 1.0, "memory_s": 0.1, "collective_s": 0.1}))
+    # cached table does not see the new artifact until refresh
+    assert t1.tokens_per_s("granite-3-2b", "prefill_32k")[1] == "fallback"
+    t2 = offload.capacity_table(tmp_path, refresh=True)
+    assert t2 is not t1
+    assert t2.tokens_per_s("granite-3-2b", "prefill_32k")[1] == "dryrun"
+
+
+def test_default_stream_service_cells_resolve_from_artifacts():
+    """With the committed 80-cell sweep, every stream candidate set
+    resolves to an artifact-backed capacity (acceptance criterion)."""
+    t = offload.capacity_table()
+    for stream, candidates in offload.STREAM_CANDIDATES.items():
+        arch, cell, cap, source = t.resolve(candidates)
+        assert source == "dryrun", (stream, arch)
+        assert np.isfinite(cap) and cap > 0
+
+
+# ---------------------------------------------------------------------------
+# per-stream breakdown + the audio fallback-flag bugfix
+# ---------------------------------------------------------------------------
+
+def test_audio_not_flagged_missing_when_asr_on_device(tmp_path):
+    """Empty artifact dir -> every capacity is a fallback; but on a grid
+    where EVERY point runs ASR on-device the audio stream never reaches
+    the backend, so it must not be reported missing (the old whole-set
+    sources check flagged it spuriously)."""
+    rep = dse.joint_pareto(placements=(("asr",),), compressions=(8.0,),
+                           fps_scales=(1.0,), mcs_tiers=(1,),
+                           results_dir=tmp_path)
+    assert rep.sources["audio"] == "fallback"
+    assert "audio" not in rep.missing_streams()
+    assert set(rep.missing_streams()) == {"rgb", "signals", "context"}
+    assert np.all(rep.breakdown.by_stream["audio"] == 0.0)
+    # ... and once any point offloads ASR, audio is legitimately missing
+    rep2 = dse.joint_pareto(placements=((), ("asr",)), compressions=(8.0,),
+                            fps_scales=(1.0,), mcs_tiers=(1,),
+                            results_dir=tmp_path)
+    assert "audio" in rep2.missing_streams()
+    assert rep2.breakdown.missing_row(0) != rep2.breakdown.missing_row(1)
+
+
+def test_joint_rows_carry_per_stream_pod_breakdown():
+    rep = dse.joint_pareto(placements=((), ("asr",)), compressions=(8.0,),
+                           fps_scales=(1.0, 4.0), mcs_tiers=(1,))
+    row = rep.row(0)
+    assert set(row["pods_by_stream"]) == set(offload.STREAM_SERVICE)
+    total = sum(rep.breakdown.by_stream[s][0]
+                for s in offload.STREAM_SERVICE)
+    assert row["backend_pods"] == pytest.approx(total, abs=0.06)
+    # frame-driven RGB ingest shrinks with fps_scale; archs resolved
+    rgb = rep.breakdown.by_stream["rgb"]
+    assert rgb[1] < rgb[0]
+    assert rep.stream_archs()["audio"] == "whisper-medium"
+
+
+def test_fleet_grid_rows_match_breakdown():
+    sset = ScenarioSet.grid(placements=((), ("asr",)), compressions=(8.0,),
+                            fps_scales=(1.0,))
+    rows = offload.fleet_grid(sset)
+    bd = offload.pods_breakdown(sset)
+    for i, r in enumerate(rows):
+        assert "note" not in r, r
+        assert r["backend_pods"] == pytest.approx(bd.pods[i], abs=0.06)
+        assert r["pods_by_stream"] == bd.row(i)
+
+
+# ---------------------------------------------------------------------------
+# blockwise dominance filter: parity + bounded memory
+# ---------------------------------------------------------------------------
+
+def test_blockwise_dominance_parity_with_dense():
+    """Blockwise mask is bit-identical to the dense (N, N, K) reference on
+    random grids — quantized coords + duplicated rows force ties, tiny
+    block sizes force the multi-block path."""
+    rng = np.random.default_rng(7)
+    for trial in range(12):
+        n = int(rng.integers(2, 200))
+        k = int(rng.integers(1, 5))
+        pts = np.round(rng.random((n, k)) * 4, 1)
+        pts = np.concatenate([pts, pts[: max(1, n // 4)]])   # duplicates
+        maximize = tuple(c for c in range(k) if rng.random() < 0.3)
+        neg = pts.copy()
+        for c in maximize:
+            neg[:, c] *= -1.0
+        expect = _non_dominated_dense(neg)
+        for block in (3, 64, 4096):
+            got = non_dominated(pts, maximize=maximize, block=block)
+            np.testing.assert_array_equal(got, expect,
+                                          err_msg=f"{trial=} {block=}")
+
+
+def test_dominance_20k_points_under_1gb():
+    """Acceptance: a 20k-point 3-objective grid (the roadmap's
+    upload_duty/brightness joint axes) filters under 1 GB peak memory —
+    the dense broadcast needed ~2.4 GB of boolean cubes alone."""
+    rng = np.random.default_rng(0)
+    pts = rng.random((20_000, 3))
+    tracemalloc.start()
+    try:
+        mask = non_dominated(pts, maximize=(1,))
+        peak = tracemalloc.get_traced_memory()[1]
+    finally:
+        tracemalloc.stop()
+    assert peak < 1 << 30, f"peak {peak / 1e9:.2f} GB"
+    assert 0 < mask.sum() < len(pts)
+    # spot-check the front against the reference on a subsample
+    sub = np.concatenate([pts[mask], pts[~mask][:500]])
+    neg = sub.copy()
+    neg[:, 1] *= -1.0
+    ref = _non_dominated_dense(neg)
+    assert ref[: int(mask.sum())].all()          # front is self-consistent
+    assert not ref[int(mask.sum()):].any()       # dominated points stay out
+
+
+# ---------------------------------------------------------------------------
+# sweep runner: resume semantics
+# ---------------------------------------------------------------------------
+
+def test_cell_status_and_pending_cells(tmp_path):
+    cells = [("olmo-1b", "train_4k", "single"),
+             ("olmo-1b", "train_4k", "multi"),
+             ("yi-34b", "long_500k", "single"),
+             ("yi-34b", "prefill_32k", "single"),
+             ("gemma3-4b", "decode_32k", "multi")]
+    (tmp_path / "olmo-1b__train_4k__single.json").write_text(
+        _artifact({"compute_s": 1.0}))                     # ok
+    (tmp_path / "olmo-1b__train_4k__multi.json").write_text("{oops")
+    (tmp_path / "yi-34b__long_500k__single.json").write_text(
+        json.dumps({"skipped": True, "reason": "sub-quadratic"}))
+    (tmp_path / "yi-34b__prefill_32k__single.json").write_text(
+        json.dumps({"ok": False, "error": "OOM"}))
+    assert [sweep.cell_status(tmp_path, *c) for c in cells] == \
+        ["ok", "corrupt", "skipped", "failed", "missing"]
+    # done cells (ok/skipped) are never redone; corrupt+missing always are
+    pend = sweep.pending_cells(cells, tmp_path)
+    assert pend == [("olmo-1b", "train_4k", "multi"),
+                    ("yi-34b", "prefill_32k", "single"),
+                    ("gemma3-4b", "decode_32k", "multi")]
+    # failed cells are retried by default, kept with retry_failed=False
+    assert ("yi-34b", "prefill_32k", "single") not in \
+        sweep.pending_cells(cells, tmp_path, retry_failed=False)
+
+
+def test_run_sweep_resumes_without_rework(tmp_path):
+    """A real (spawned-worker) run on an applicability-skip cell, then a
+    resume: the second run schedules nothing and spawns no workers."""
+    kw = dict(out_dir=tmp_path, workers=1, archs=["olmo-1b"],
+              shapes=["long_500k"], meshes=("single",))
+    first = sweep.run_sweep(**kw)
+    assert first["scheduled"] == 1 and first["skipped"] == 1
+    rec = json.loads(
+        (tmp_path / "olmo-1b__long_500k__single.json").read_text())
+    assert rec["skipped"] and "sub-quadratic" in rec["reason"]
+    mtime = (tmp_path / "olmo-1b__long_500k__single.json").stat().st_mtime
+    second = sweep.run_sweep(**kw)
+    assert second["scheduled"] == 0 and second["statuses"] == {}
+    assert (tmp_path / "olmo-1b__long_500k__single.json").stat().st_mtime \
+        == mtime
+
+
+# ---------------------------------------------------------------------------
+# analytical roofline grid (tier-1 smoke of the batched path)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cell_table():
+    return sweep.CellTable.build()
+
+
+def test_analytical_grid_covers_all_80_cells(cell_table):
+    assert len(cell_table) == 80
+    terms = sweep.analytical_terms(cell_table)
+    app = terms["applicable"]
+    # applicability matches the config rules: long_500k only on
+    # sub-quadratic archs
+    for i, (arch, shape, mesh) in enumerate(cell_table.keys):
+        if shape == "long_500k":
+            expect = arch in ("gemma3-4b", "zamba2-1.2b", "mamba2-2.7b")
+            assert app[i] == expect, (arch, shape)
+        else:
+            assert app[i], (arch, shape)
+    for k in ("compute_s", "memory_s", "collective_s", "bound_s"):
+        assert terms[k].shape == (80,)
+        assert np.all(terms[k][app] > 0), k
+        assert np.all(np.isnan(terms[k][~app])), k
+
+
+def test_analytical_multi_pod_halves_per_device_compute(cell_table):
+    terms = sweep.analytical_terms(cell_table)
+    idx = {k: i for i, k in enumerate(cell_table.keys)}
+    for arch in ("olmo-1b", "yi-34b", "dbrx-132b"):
+        s = terms["compute_s"][idx[(arch, "train_4k", "single")]]
+        m = terms["compute_s"][idx[(arch, "train_4k", "multi")]]
+        assert m / s == pytest.approx(0.5)
+
+
+def test_analytical_cell_matches_batched_grid(cell_table):
+    """The per-cell loop path (the BENCH_backend baseline) computes the
+    exact same terms as the one-pass batched grid."""
+    terms = sweep.analytical_terms(cell_table)
+    for key in [("yi-34b", "train_4k", "multi"),
+                ("whisper-medium", "prefill_32k", "single"),
+                ("mamba2-2.7b", "long_500k", "single")]:
+        i = cell_table.keys.index(key)
+        one = sweep.analytical_cell(*key)
+        for k in ("compute_s", "memory_s", "collective_s"):
+            assert one[k] == pytest.approx(terms[k][i], rel=1e-12), key
+        assert one["dominant"] == terms["dominant"][i]
+
+
+def test_roofline_grid_artifacts_override_analytical(tmp_path, cell_table):
+    # empty dir: everything analytical or skip
+    rows = sweep.roofline_grid(results_dir=tmp_path, table=cell_table)
+    assert {r["source"] for r in rows} == {"analytical", "skip"}
+    # one committed-style artifact overrides its cell only
+    (tmp_path / "granite-3-2b__prefill_32k__single.json").write_text(
+        _artifact({"compute_s": 0.5, "memory_s": 1.5, "collective_s": 0.2}))
+    rows = sweep.roofline_grid(results_dir=tmp_path, table=cell_table)
+    by_key = {(r["arch"], r["shape"], r["mesh"]): r for r in rows}
+    r = by_key[("granite-3-2b", "prefill_32k", "single")]
+    assert r["source"] == "dryrun"
+    assert r["bound_s"] == pytest.approx(1.5)
+    assert r["dominant"] == "memory_s"
+    assert by_key[("granite-3-2b", "prefill_32k", "multi")]["source"] \
+        == "analytical"
+
+
+def test_roofline_grid_default_dir_uses_committed_sweep(cell_table):
+    """With the committed 80-cell sweep every applicable cell is
+    artifact-backed (acceptance criterion)."""
+    rows = sweep.roofline_grid(table=cell_table)
+    srcs = {(r["arch"], r["shape"], r["mesh"]): r["source"] for r in rows}
+    assert all(s in ("dryrun", "skip") for s in srcs.values())
+    assert sum(1 for s in srcs.values() if s == "dryrun") == 66

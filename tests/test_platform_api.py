@@ -157,6 +157,23 @@ def test_bad_knob_values_rejected():
         ScenarioSet.build([{"on_device": ("telepathy",)}])
 
 
+def test_unit_fraction_knobs_rejected_outside_01():
+    """upload_duty / brightness are [0, 1] fractions: a negative duty
+    silently produced negative WiFi power before the guard."""
+    for knob in ("upload_duty", "brightness"):
+        for bad in (-0.1, 1.5):
+            with pytest.raises(ValueError, match=knob):
+                ScenarioSet.build([{knob: bad}])
+            with pytest.raises(ValueError, match=knob):
+                ScenarioSet.build([{}]).with_knob(**{knob: bad})
+        # boundary values are legal, scalar or per-row array
+        ScenarioSet.build([{knob: 0.0}, {knob: 1.0}])
+        ScenarioSet.build([{}, {}]).with_knob(**{knob: np.array([0.0, 1.0])})
+    with pytest.raises(ValueError, match="upload_duty"):
+        ScenarioSet.grid(placements=((),), compressions=(1.0,),
+                         fps_scales=(1.0,), upload_duties=(-0.5,))
+
+
 def test_capture_only_rejects_every_unsupported_placement():
     """Every placement the capture-only SKU cannot run on-device raises
     (only ASR kept its accelerator)."""
