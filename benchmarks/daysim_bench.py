@@ -1,0 +1,190 @@
+"""Day-in-the-life simulator benchmark (core/daysim.py).
+
+Times the batched day engine — every (platform x design x schedule x
+policy) combo integrated through ONE vmapped `jax.lax.scan` — against
+`daysim.reference_integrate`, the pure-Python per-step oracle, and
+verifies the day-level decision content: throttling policies and
+battery/thermal dynamics change which design point wins the day, which
+no steady-state mW ranking can express.
+
+Emits results/benchmarks/BENCH_daysim.json and returns (rows, derived)
+for benchmarks/run.py.
+
+BENCH_daysim.json schema (one JSON object):
+  n_combos          int   design points integrated (platforms x designs x
+                          schedules x policies, unsupported skipped)
+  n_steps           int   scan length of the timed combo at dt_s
+  dt_s              float integrator step
+  scan_ms           float best wall time of the vmapped lax.scan over
+                          the FULL n_combos batch (post-warmup)
+  python_ms         float reference_integrate (per-step Python loop) on
+                          one combo's tables; every padded combo runs
+                          the same step count
+  speedup           float python_ms * n_combos / scan_ms — the scanned
+                          integrator vs the per-step loop at equal
+                          work; the regression gate metric (>20% drop
+                          fails benchmarks/run.py)
+  day_pareto_ms     float one full-grid dse.day_pareto pass, cold
+                          (includes jit compile + table building)
+  front_size        int   members of the (time-to-empty, peak skin,
+                          pod-hours) non-dominated front
+  throttle_flip     obj   a (platform, schedule) where the best
+                          time-to-empty design point runs a throttling
+                          policy and strictly beats every policy="none"
+                          point — throttling flips the winner
+  dynamics_flip     obj   a combo pair (same schedule+policy) where the
+                          steady-state mW winner has strictly WORSE
+                          time-to-empty — the day-level dynamics invert
+                          the steady-state ranking
+  survivors         int   combos that survive their whole day
+
+    PYTHONPATH=src python benchmarks/daysim_bench.py
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+
+BENCH_DT_S = 20.0
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _find_throttle_flip(rep) -> dict | None:
+    """Best-tte design point uses a policy and strictly beats every
+    "none" point of the same (platform, schedule)."""
+    best = None
+    for key in {(c["platform"], c["schedule"]) for c in rep.combos}:
+        idx = [i for i, c in enumerate(rep.combos)
+               if (c["platform"], c["schedule"]) == key]
+        none_tte = max(rep.time_to_empty_h[i] for i in idx
+                       if rep.combos[i]["policy"] == "none")
+        win = max(idx, key=lambda i: rep.time_to_empty_h[i])
+        gain = float(rep.time_to_empty_h[win] - none_tte)
+        if rep.combos[win]["policy"] != "none" and gain > 0.05:
+            if best is None or gain > best["gain_h"]:
+                best = {"platform": key[0], "schedule": key[1],
+                        "winner": rep.row(win),
+                        "best_unthrottled_tte_h": round(float(none_tte), 2),
+                        "gain_h": round(gain, 2)}
+    return best
+
+
+def _find_dynamics_flip(rep) -> dict | None:
+    """Pair (same schedule + policy): lower steady mW, strictly worse
+    time-to-empty — steady-state ranking inverted by the day dynamics."""
+    best = None
+    for i, ci in enumerate(rep.combos):
+        for j, cj in enumerate(rep.combos):
+            if (ci["schedule"], ci["policy"]) != \
+                    (cj["schedule"], cj["policy"]):
+                continue
+            if not (rep.steady_mw[i] < rep.steady_mw[j] - 1.0
+                    and rep.time_to_empty_h[i]
+                    < rep.time_to_empty_h[j] - 0.05):
+                continue
+            gap = float(rep.time_to_empty_h[j] - rep.time_to_empty_h[i])
+            if best is None or gap > best["tte_gap_h"]:
+                best = {"steady_winner": rep.row(i),
+                        "day_winner": rep.row(j),
+                        "tte_gap_h": round(gap, 2)}
+    return best
+
+
+def run(n_repeats: int = 5):
+    import numpy as np
+    from repro.core import daysim, dse
+    from repro.core.daysim import (compiled_tables, reference_integrate,
+                                   scan_integrate)
+
+    t0 = time.perf_counter()
+    rep = dse.day_pareto(dt_s=BENCH_DT_S)       # compiles + full grid
+    day_pareto_ms = (time.perf_counter() - t0) * 1e3
+    n = len(rep)
+
+    # integrator head-to-head at equal work: the vmapped lax.scan over
+    # the full combo batch vs the per-step Python loop per combo (timed
+    # on one representative combo, scaled by N — every combo runs the
+    # same step count after padding)
+    import jax
+    combos, _ = daysim.build_combos()
+    tables = daysim.batch_tables(combos, dt_s=BENCH_DT_S)
+    jax.block_until_ready(daysim._integrate_batch(tables))   # warm
+    scan_ms = min(
+        _timed(lambda: jax.block_until_ready(
+            daysim._integrate_batch(tables)))
+        for _ in range(n_repeats)) * 1e3
+    tb = compiled_tables("aria2_display", daysim.DEFAULT_DESIGNS[0],
+                         "commuter", "thermal_governor", dt_s=BENCH_DT_S)
+    t0 = time.perf_counter()
+    ref = reference_integrate(tb)
+    python_ms = (time.perf_counter() - t0) * 1e3
+
+    # parity sanity on the timed combo (the bench must not be comparing
+    # two different integrators)
+    ys = scan_integrate(tb)
+    assert np.allclose(ys["soc"], ref["soc"], rtol=1e-5, atol=1e-5)
+
+    speedup = python_ms * n / scan_ms
+    flip = _find_throttle_flip(rep)
+    dyn = _find_dynamics_flip(rep)
+    result = {
+        "n_combos": n,
+        "n_steps": tb["step_mw"].shape[0],
+        "dt_s": BENCH_DT_S,
+        "scan_ms": round(scan_ms, 3),
+        "python_ms": round(python_ms, 2),
+        "speedup": round(speedup, 1),
+        "day_pareto_ms": round(day_pareto_ms, 1),
+        "front_size": int(rep.front_mask.sum()),
+        "throttle_flip": flip,
+        "dynamics_flip": dyn,
+        "survivors": int(rep.survives().sum()),
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "BENCH_daysim.json").write_text(json.dumps(result, indent=1))
+    derived = (f"{n}combos speedup={result['speedup']}x "
+               f"front={result['front_size']} "
+               f"throttle_flip={'yes' if flip else 'NO'} "
+               f"dynamics_flip={'yes' if dyn else 'NO'}")
+    return rep.front_rows(), derived
+
+
+def smoke():
+    """Tiny day (2 designs x 1 schedule x 2 policies, coarse dt):
+    exercises compile -> scan -> summarize -> front inside the tier-1
+    time budget.  Writes nothing; returns (rows, derived)."""
+    import numpy as np
+    from repro.core import daysim, dse
+
+    sched = daysim.DaySchedule("smoke_day", (
+        daysim.DaySegment("warm", 0.5, ambient_c=35.0, active=1.0,
+                          upload_duty=0.8, brightness=0.5),
+        daysim.DaySegment("cool", 0.5, ambient_c=24.0, active=0.5,
+                          upload_duty=0.3, brightness=0.1),
+    ))
+    rep = dse.day_pareto(platforms=("aria2_display",),
+                         designs=daysim.DEFAULT_DESIGNS[:2],
+                         schedules=(sched,),
+                         policies=("none", "thermal_governor"),
+                         dt_s=60.0)
+    assert len(rep) == 4, len(rep)
+    assert np.all(np.isfinite(rep.objectives()))
+    assert int(rep.front_mask.sum()) >= 1
+    assert np.all(rep.time_to_empty_h <= rep.day_hours + 1e-9)
+    return rep.front_rows(), f"4combos front={int(rep.front_mask.sum())} ok"
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    rows, derived = run()
+    print((OUT / "BENCH_daysim.json").read_text())
+    print(derived)

@@ -25,10 +25,18 @@ cheaply.  The core is organised around two abstractions:
 Built on top:
     dse.py        — placement/compression/grid sweeps, sensitivity,
                     Pareto fronts; every sweep is one batched call.
+                    `day_pareto`/`survives_day` lift the day-level
+                    objectives into the same non-dominated machinery.
+    daysim.py     — day-in-the-life simulator: `DaySchedule` segments +
+                    `ThrottlePolicy` hysteresis integrated through one
+                    vmapped `jax.lax.scan` (nonlinear battery SoC,
+                    2-node thermal RC) -> time-to-empty, peak skin
+                    temperature, backend pod-hours.
     calibrate.py  — fits theta to the paper's aggregates by Adam through
                     the batched evaluator.
     offload.py    — maps offloaded streams to backend pod fleets
-                    (`fleet_grid` sizes a whole ScenarioSet at once).
+                    (`fleet_grid` sizes a whole ScenarioSet at once);
+                    `pod_cost` turns pod-hours into $ and kgCO2.
     power.py      — component/rail primitives + `SystemModel` snapshots.
     scaling.py    — technology-node projection over a SystemModel.
     workloads.py / taskgraph.py / engine.py — event-driven taskgraph sim

@@ -319,10 +319,52 @@ def aria2_capture_only_platform() -> PlatformSpec:
     return register(spec)
 
 
+@functools.lru_cache(maxsize=1)
+def rayban_cam_platform() -> PlatformSpec:
+    """Ray-Ban-class camera+audio SKU, pure data off the Aria2 table:
+    one RGB POV camera, mic array and IMU — no GS/ET optics, no
+    localization or hand/eye ML IPs (the audio DSP stays, so wake-word /
+    ASR can run on-device), no GNSS/mag/baro, and a leaner coprocessor,
+    ISP and DRAM sized for the single-camera pipe.  The dropped sensor
+    streams are zeroed in `raw_mbps`, so the uplink/codec formulas see a
+    camera-only device rather than phantom GS/ET traffic."""
+    spec = aria2_platform().variant(
+        "rayban_cam",
+        drop=("gs_camera_0", "gs_camera_1", "gs_camera_2", "gs_camera_3",
+              "et_camera_0", "et_camera_1", "et_ir_illuminator",
+              "npu_ml", "hwa_vio6dof", "gnss", "magnetometer",
+              "barometer", "imu_1", "imu_aggregator_mcu",
+              "status_display_drv"),
+        replace=(_spec_for("coproc_soc_base", "const", {"mw": 40.0}),
+                 _spec_for("isp", "isp",
+                           {"active_mw": 16.0, "floor_mw": 3.0}),
+                 _spec_for("lpddr_dram", "dram", {"base_mw": 15.0})),
+        raw_mbps={"gs": 0.0, "gs_vio_share": 0.0, "et": 0.0,
+                  "imu": RAW_MBPS["imu"] / 2,       # one IMU, not two
+                  "aux": 0.01})        # telemetry only: no GNSS/mag/baro
+    return register(spec)
+
+
+@functools.lru_cache(maxsize=1)
+def aria2_puck_split_platform() -> PlatformSpec:
+    """Glasses half of a puck-companion split: the ML IPs, WiFi front-end
+    and their thermal budget move to a pocket host, and the glasses keep
+    capture plus a short-range BT-class link (cheaper per bit and far
+    cheaper to idle than the WAN radio).  "Offloaded" streams here land
+    on the puck, which relays over its own (unconstrained) radio."""
+    spec = aria2_platform().variant(
+        "aria2_puck_split",
+        drop=("npu_ml", "hwa_vio6dof", "wifi_fem"),
+        replace=(_spec_for("coproc_soc_base", "const", {"mw": 52.0}),),
+        theta={"wifi_mw_per_mbps": 3.2, "wifi_link_mw": 24.0})
+    return register(spec)
+
+
 def platforms() -> tuple:
-    """Build + register all built-in Aria2 platform variants."""
+    """Build + register all built-in platform SKUs."""
     return (aria2_platform(), aria2_display_platform(),
-            aria2_capture_only_platform())
+            aria2_capture_only_platform(), rayban_cam_platform(),
+            aria2_puck_split_platform())
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,947 @@
+"""Day-in-the-life energy simulator: scanned battery/thermal dynamics.
+
+Every engine below `dse` is steady-state — one mW figure per design
+point.  This module turns the stack into a *dynamic* system model: a
+`DaySchedule` composes scenario rows into a timed day (commute, office,
+conversation, gym, ... — each segment binding knob overrides, a capture
+duty and an ambient temperature), and the simulator integrates
+
+  * a nonlinear battery state-of-charge model — capacity, a Li-ion
+    voltage curve with a low-SoC knee, and internal-resistance I^2R loss
+    that punishes current peaks harder as the cell sags, and
+  * a 2-node thermal RC model (SoC node -> skin node -> ambient)
+
+through ONE `jax.lax.scan` over time steps, `jax.vmap`-batched across
+candidate designs x schedules x throttle policies.  `ThrottlePolicy`
+closes the loop from state back into power: when skin temperature or SoC
+crosses a trip threshold (with hysteresis, so the controller cannot
+chatter at the boundary), the policy downshifts fps / brightness /
+upload duty / capture duty and can force placement to full offload.
+
+Because throttled knob settings are a *finite* set, each (platform,
+design, schedule, policy) combo pre-compiles its per-segment,
+per-throttle-level power and backend-pod tables through the existing
+batched engine (`scenarios.evaluate` + `offload.pods_breakdown`, one
+call per platform) — the scan itself only integrates state and indexes
+those tables, so a full day at 10 s resolution is a few thousand cheap
+steps.
+
+Outputs become first-class DSE objectives (`dse.day_pareto` /
+`dse.survives_day`):
+  time_to_empty_h   — hours until the cell hits 0 SoC (or the full day)
+  peak_skin_c       — worst skin-node temperature over the day
+  pod_hours         — time-resolved backend fleet demand (duty-cycled
+                      uplink through `offload.CapacityTable` capacities)
+  throttled_h       — capture-hours degraded by the policy (the
+                      deadline-hours-lost proxy)
+
+Schedules and policies are declarative data: JSON round-trip
+(`to_dict`/`from_dict`) and a name registry next to the platform one
+(`register_schedule` / `get_schedule`, `register_policy` /
+`get_policy`).  `reference_integrate` is the pure-Python per-step
+oracle — parity-tested against the scan and the baseline for
+`benchmarks/daysim_bench.py`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import offload, scenarios
+from .platform import PlatformSpec
+from .scenarios import DEFAULT_MCS, ScenarioSet
+
+DEFAULT_DT_S = 10.0             # integrator step (s)
+DEFAULT_STANDBY_MW = 45.0       # deep-idle draw between capture bursts
+
+
+# ---------------------------------------------------------------------------
+# battery: capacity + voltage curve + internal-resistance loss
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BatterySpec:
+    """Nonlinear cell model.
+
+    V(soc) = v_full - sag * (1 - soc) - knee_v * exp(-knee_sharpness*soc)
+    — a flat Li-ion plateau with a steep knee near empty.  Discharge
+    current is I = P / V(soc), so the I^2 R internal loss grows as the
+    cell sags: the same mW load drains *more* SoC per second late in the
+    day, which is exactly what a steady-state power number cannot see.
+    """
+    name: str
+    capacity_mwh: float
+    r_internal_ohm: float = 0.25
+    v_full: float = 4.35
+    sag_v: float = 0.75
+    knee_v: float = 0.30
+    knee_sharpness: float = 12.0
+
+    def __post_init__(self):
+        if self.capacity_mwh <= 0:
+            raise ValueError("capacity_mwh must be positive")
+        if self.v_full - self.sag_v - self.knee_v <= 0:
+            raise ValueError("voltage curve dips below zero at soc=0")
+
+    def voltage(self, soc):
+        """Open-circuit-ish terminal voltage at state of charge `soc`."""
+        return (self.v_full - self.sag_v * (1.0 - soc)
+                - self.knee_v * jnp.exp(-self.knee_sharpness * soc))
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "capacity_mwh": self.capacity_mwh,
+                "r_internal_ohm": self.r_internal_ohm,
+                "v_full": self.v_full, "sag_v": self.sag_v,
+                "knee_v": self.knee_v,
+                "knee_sharpness": self.knee_sharpness}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BatterySpec":
+        return cls(d["name"], float(d["capacity_mwh"]),
+                   float(d["r_internal_ohm"]), float(d["v_full"]),
+                   float(d["sag_v"]), float(d["knee_v"]),
+                   float(d["knee_sharpness"]))
+
+
+@dataclass(frozen=True)
+class ThermalSpec:
+    """2-node RC: device (SoC) node -> skin node -> ambient.
+
+    Steady state for P watts: T_soc = amb + P*(r_soc_skin + r_skin_amb),
+    T_skin = amb + P*r_skin_amb; time constants of minutes (SoC node) and
+    ~quarter hour (skin), so hour-long segments reach equilibrium and
+    short bursts do not."""
+    name: str
+    c_soc_j_per_k: float = 18.0
+    c_skin_j_per_k: float = 80.0
+    r_soc_skin_k_per_w: float = 7.0
+    r_skin_amb_k_per_w: float = 11.0
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "c_soc_j_per_k": self.c_soc_j_per_k,
+                "c_skin_j_per_k": self.c_skin_j_per_k,
+                "r_soc_skin_k_per_w": self.r_soc_skin_k_per_w,
+                "r_skin_amb_k_per_w": self.r_skin_amb_k_per_w}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ThermalSpec":
+        return cls(d["name"], float(d["c_soc_j_per_k"]),
+                   float(d["c_skin_j_per_k"]),
+                   float(d["r_soc_skin_k_per_w"]),
+                   float(d["r_skin_amb_k_per_w"]))
+
+
+# default packs per platform SKU (platform-name keyed, data not code):
+# frame cell + temple pack class capacities
+BATTERIES = {
+    "default": BatterySpec("temple_pack_2p2wh", 2200.0),
+    "aria2_display": BatterySpec("temple_pack_2p6wh", 2600.0),
+    "rayban_cam": BatterySpec("rayban_1p25wh", 1250.0,
+                              r_internal_ohm=0.38),
+    "aria2_puck_split": BatterySpec("glasses_1p4wh", 1400.0,
+                                    r_internal_ohm=0.30),
+}
+
+DEFAULT_THERMAL = ThermalSpec("glasses_2node")
+
+
+def battery_for(platform_name: str) -> BatterySpec:
+    return BATTERIES.get(platform_name, BATTERIES["default"])
+
+
+# ---------------------------------------------------------------------------
+# schedules: timed segments binding scenario knob overrides
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DaySegment:
+    """One contiguous slice of the day.
+
+    `active` is the capture duty inside the segment (fraction of time the
+    sensing pipeline runs vs deep standby); `upload_duty` is the
+    VAD/saliency uplink gating *while* capturing; `brightness` drives
+    display SKUs (inert elsewhere)."""
+    name: str
+    hours: float
+    ambient_c: float = 24.0
+    active: float = 1.0
+    upload_duty: float = 1.0
+    brightness: float = 0.0
+
+    def __post_init__(self):
+        if self.hours <= 0:
+            raise ValueError(f"segment {self.name!r}: hours must be > 0")
+        for k in ("active", "upload_duty", "brightness"):
+            v = getattr(self, k)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"segment {self.name!r}: {k}={v} "
+                                 f"outside [0, 1]")
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "hours": self.hours,
+                "ambient_c": self.ambient_c, "active": self.active,
+                "upload_duty": self.upload_duty,
+                "brightness": self.brightness}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DaySegment":
+        return cls(d["name"], float(d["hours"]), float(d["ambient_c"]),
+                   float(d["active"]), float(d["upload_duty"]),
+                   float(d["brightness"]))
+
+
+@dataclass(frozen=True)
+class DaySchedule:
+    name: str
+    segments: tuple
+
+    def __post_init__(self):
+        if not self.segments:
+            raise ValueError("schedule needs at least one segment")
+
+    @property
+    def hours(self) -> float:
+        return sum(s.hours for s in self.segments)
+
+    def n_steps(self, dt_s: float) -> int:
+        return sum(max(1, round(s.hours * 3600.0 / dt_s))
+                   for s in self.segments)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name,
+                "segments": [s.to_dict() for s in self.segments]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DaySchedule":
+        return cls(d["name"], tuple(DaySegment.from_dict(s)
+                                    for s in d["segments"]))
+
+
+# ---------------------------------------------------------------------------
+# throttle policies: state -> knob downshift, with hysteresis
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ThrottleAction:
+    """Knob downshift applied at one throttle level.
+
+    fps_mult >= 1 multiplies the design's fps_scale (fewer frames);
+    *_mult in [0, 1] scale the segment's duty/brightness/capture knobs;
+    offload=True forces placement to full offload (move the heat to the
+    datacenter)."""
+    fps_mult: float = 1.0
+    duty_mult: float = 1.0
+    brightness_mult: float = 1.0
+    active_mult: float = 1.0
+    offload: bool = False
+
+    def __post_init__(self):
+        if self.fps_mult < 1.0:
+            raise ValueError("fps_mult must be >= 1 (a downshift)")
+        for k in ("duty_mult", "brightness_mult", "active_mult"):
+            v = getattr(self, k)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{k}={v} outside [0, 1]")
+
+    def to_dict(self) -> dict:
+        return {"fps_mult": self.fps_mult, "duty_mult": self.duty_mult,
+                "brightness_mult": self.brightness_mult,
+                "active_mult": self.active_mult, "offload": self.offload}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ThrottleAction":
+        return cls(float(d["fps_mult"]), float(d["duty_mult"]),
+                   float(d["brightness_mult"]), float(d["active_mult"]),
+                   bool(d["offload"]))
+
+
+@dataclass(frozen=True)
+class ThrottlePolicy:
+    """Two-trigger throttle governor with hysteresis bands.
+
+    The thermal trigger trips when skin temperature exceeds
+    `temp_trip_c` and clears only below `temp_clear_c`; the SoC trigger
+    trips below `soc_trip` and clears above `soc_clear`.  The throttle
+    level is the number of tripped triggers, clamped to the available
+    `actions` (level 0 = no action).  The strict hysteresis bands are
+    what keeps the closed loop from oscillating when the state sits
+    exactly at a threshold — property-tested in tests/test_daysim.py.
+    """
+    name: str
+    temp_trip_c: float = 40.0
+    temp_clear_c: float = 37.5
+    soc_trip: float = 0.15
+    soc_clear: float = 0.25
+    actions: tuple = ()          # level 1..len(actions)
+
+    def __post_init__(self):
+        if self.actions:
+            if not self.temp_clear_c < self.temp_trip_c:
+                raise ValueError("need temp_clear_c < temp_trip_c "
+                                 "(hysteresis band)")
+            if not self.soc_trip < self.soc_clear:
+                raise ValueError("need soc_trip < soc_clear "
+                                 "(hysteresis band)")
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.actions) + 1
+
+    def action(self, level: int) -> ThrottleAction:
+        if level <= 0:
+            return ThrottleAction()
+        return self.actions[min(level, len(self.actions)) - 1]
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "temp_trip_c": self.temp_trip_c,
+                "temp_clear_c": self.temp_clear_c,
+                "soc_trip": self.soc_trip, "soc_clear": self.soc_clear,
+                "actions": [a.to_dict() for a in self.actions]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ThrottlePolicy":
+        return cls(d["name"], float(d["temp_trip_c"]),
+                   float(d["temp_clear_c"]), float(d["soc_trip"]),
+                   float(d["soc_clear"]),
+                   tuple(ThrottleAction.from_dict(a)
+                         for a in d["actions"]))
+
+
+# ---------------------------------------------------------------------------
+# registries (declarative, next to the platform one)
+# ---------------------------------------------------------------------------
+
+_SCHEDULES: dict[str, DaySchedule] = {}
+_POLICIES: dict[str, ThrottlePolicy] = {}
+
+
+def register_schedule(s: DaySchedule) -> DaySchedule:
+    _SCHEDULES[s.name] = s
+    return s
+
+
+def get_schedule(name: str) -> DaySchedule:
+    if name not in _SCHEDULES:
+        raise KeyError(f"unknown schedule {name!r}; "
+                       f"registered: {sorted(_SCHEDULES)}")
+    return _SCHEDULES[name]
+
+
+def schedule_names() -> list[str]:
+    return sorted(_SCHEDULES)
+
+
+def register_policy(p: ThrottlePolicy) -> ThrottlePolicy:
+    _POLICIES[p.name] = p
+    return p
+
+
+def get_policy(name: str) -> ThrottlePolicy:
+    if name not in _POLICIES:
+        raise KeyError(f"unknown policy {name!r}; "
+                       f"registered: {sorted(_POLICIES)}")
+    return _POLICIES[name]
+
+
+def policy_names() -> list[str]:
+    return sorted(_POLICIES)
+
+
+# -- built-in days (representative traces, §II "all-day" framing) -----------
+
+register_schedule(DaySchedule("commuter", (
+    DaySegment("commute_am", 1.0, ambient_c=28.0, active=0.9,
+               upload_duty=0.5, brightness=0.30),
+    DaySegment("office_am", 3.5, ambient_c=24.0, active=0.55,
+               upload_duty=0.30, brightness=0.15),
+    DaySegment("lunch_conversation", 1.0, ambient_c=26.0, active=1.0,
+               upload_duty=0.85, brightness=0.20),
+    DaySegment("office_pm", 3.0, ambient_c=24.0, active=0.55,
+               upload_duty=0.30, brightness=0.15),
+    DaySegment("commute_pm", 1.0, ambient_c=30.0, active=0.9,
+               upload_duty=0.5, brightness=0.30),
+    DaySegment("evening", 2.5, ambient_c=23.0, active=0.4,
+               upload_duty=0.30, brightness=0.40),
+)))
+
+register_schedule(DaySchedule("field_day", (
+    DaySegment("morning_site", 3.0, ambient_c=33.0, active=1.0,
+               upload_duty=0.8, brightness=0.55),
+    DaySegment("midday_sun", 2.0, ambient_c=36.5, active=1.0,
+               upload_duty=0.9, brightness=0.65),
+    DaySegment("afternoon_site", 3.0, ambient_c=34.0, active=0.9,
+               upload_duty=0.7, brightness=0.55),
+    DaySegment("debrief", 1.0, ambient_c=26.0, active=0.7,
+               upload_duty=0.5, brightness=0.25),
+)))
+
+register_schedule(DaySchedule("desk_day", (
+    DaySegment("focus_am", 4.0, ambient_c=23.0, active=0.35,
+               upload_duty=0.25, brightness=0.10),
+    DaySegment("meetings", 2.0, ambient_c=24.5, active=0.8,
+               upload_duty=0.6, brightness=0.20),
+    DaySegment("focus_pm", 2.0, ambient_c=23.0, active=0.35,
+               upload_duty=0.25, brightness=0.10),
+)))
+
+# -- built-in policies -------------------------------------------------------
+
+register_policy(ThrottlePolicy("none", actions=()))
+
+register_policy(ThrottlePolicy(
+    "thermal_governor", temp_trip_c=39.5, temp_clear_c=37.0,
+    soc_trip=0.12, soc_clear=0.20,
+    actions=(ThrottleAction(fps_mult=2.0, duty_mult=0.7,
+                            brightness_mult=0.5),
+             ThrottleAction(fps_mult=4.0, duty_mult=0.4,
+                            brightness_mult=0.15, active_mult=0.6,
+                            offload=True))))
+
+register_policy(ThrottlePolicy(
+    "battery_saver", temp_trip_c=41.0, temp_clear_c=38.5,
+    soc_trip=0.35, soc_clear=0.45,
+    actions=(ThrottleAction(fps_mult=2.0, duty_mult=0.5,
+                            brightness_mult=0.4),
+             ThrottleAction(fps_mult=8.0, duty_mult=0.25,
+                            brightness_mult=0.1, active_mult=0.5,
+                            offload=True))))
+
+
+# ---------------------------------------------------------------------------
+# designs: the per-day knob choices a SKU ships with
+# ---------------------------------------------------------------------------
+
+DEFAULT_DESIGNS = (
+    {"name": "offload_lean", "on_device": (), "compression": 32.0,
+     "fps_scale": 2.0, "mcs_tier": DEFAULT_MCS},
+    {"name": "balanced_asr", "on_device": ("asr",), "compression": 16.0,
+     "fps_scale": 1.0, "mcs_tier": DEFAULT_MCS},
+    {"name": "edge_heavy",
+     "on_device": ("vio", "eye_tracking", "asr", "hand_tracking"),
+     "compression": 8.0, "fps_scale": 1.0, "mcs_tier": 0},
+)
+
+
+def _design_row(design: dict, seg: DaySegment,
+                act: ThrottleAction) -> dict:
+    """Effective ScenarioSet row for (design, segment, throttle level)."""
+    return {
+        "on_device": () if act.offload else tuple(design["on_device"]),
+        "compression": float(design.get("compression", 10.0)),
+        "fps_scale": float(design.get("fps_scale", 1.0)) * act.fps_mult,
+        "mcs_tier": int(design.get("mcs_tier", DEFAULT_MCS)),
+        "upload_duty": min(1.0, seg.upload_duty * act.duty_mult),
+        "brightness": min(1.0, seg.brightness * act.brightness_mult),
+    }
+
+
+# ---------------------------------------------------------------------------
+# the scanned integrator
+# ---------------------------------------------------------------------------
+
+def _step_math(carry, x, const):
+    """One Euler step; shared (symbolically) by the jax scan and the
+    pure-Python reference below — keep the op order in lockstep with
+    `reference_integrate` or the parity test will catch you."""
+    soc, t_soc, t_skin, th_state, soc_state = carry
+    mw_row, pods_row, amult_row, amb, active, valid = x
+
+    # hysteresis triggers evaluate on the *previous* step's state
+    th_state = jnp.where(t_skin > const["temp_trip"], 1.0,
+                         jnp.where(t_skin < const["temp_clear"],
+                                   0.0, th_state))
+    soc_state = jnp.where(soc < const["soc_trip"], 1.0,
+                          jnp.where(soc > const["soc_clear"],
+                                    0.0, soc_state))
+    level = jnp.minimum(th_state + soc_state,
+                        const["max_level"]).astype(jnp.int32)
+
+    alive = jnp.where(soc > 0.0, 1.0, 0.0) * valid
+    act = active * jnp.take(amult_row, level)
+    p_mw = (act * jnp.take(mw_row, level)
+            + (1.0 - act) * const["standby_mw"]) * alive
+    v = (const["v_full"] - const["sag_v"] * (1.0 - soc)
+         - const["knee_v"] * jnp.exp(-const["knee_sharp"] * soc))
+    i_a = p_mw * jnp.float32(1e-3) / v
+    loss_mw = i_a * i_a * const["r_ohm"] * jnp.float32(1e3)
+    drain_mw = p_mw + loss_mw
+    soc_n = jnp.maximum(soc - drain_mw * const["dsoc_coeff"], 0.0)
+
+    heat_w = drain_mw * jnp.float32(1e-3)
+    flow = (t_soc - t_skin) * const["g_soc_skin"]
+    t_soc_n = t_soc + (heat_w - flow) * const["dt_c_soc"]
+    t_skin_n = t_skin + (flow - (t_skin - amb)
+                         * const["g_skin_amb"]) * const["dt_c_skin"]
+
+    pods = act * jnp.take(pods_row, level) * alive
+    new = (soc_n, t_soc_n, t_skin_n, th_state, soc_state)
+    out = {"soc": soc_n, "t_soc": t_soc_n, "t_skin": t_skin_n,
+           "level": level, "th_state": th_state, "soc_state": soc_state,
+           "p_mw": p_mw, "drain_mw": drain_mw, "pods": pods}
+    return new, out
+
+
+def _integrate_one(tb):
+    """Whole-day scan for one combo (vmapped across combos)."""
+    const = tb["const"]
+    amb0 = tb["ambient"][0]
+    init = (jnp.float32(1.0), amb0, amb0, jnp.float32(0.0),
+            jnp.float32(0.0))
+    xs = (tb["step_mw"], tb["step_pods"],
+          jnp.broadcast_to(tb["act_mult"],
+                           (tb["step_mw"].shape[0],)
+                           + tb["act_mult"].shape),
+          tb["ambient"], tb["active"], tb["valid"])
+
+    def step(carry, x):
+        return _step_math(carry, x, const)
+
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys
+
+
+@jax.jit
+def _integrate_batch(tables):
+    return jax.vmap(_integrate_one)(tables)
+
+
+def reference_integrate(tb: dict) -> dict:
+    """Pure-Python per-step oracle: identical math to the scan, float32
+    scalar ops in the same order.  O(steps) Python — the daysim bench
+    baseline and the parity test's reference."""
+    f = np.float32
+    c = {k: f(v) for k, v in tb["const"].items()}
+    mw, pods_t = np.asarray(tb["step_mw"]), np.asarray(tb["step_pods"])
+    amult = np.asarray(tb["act_mult"])
+    amb_t = np.asarray(tb["ambient"])
+    active_t, valid_t = np.asarray(tb["active"]), np.asarray(tb["valid"])
+    soc, th_state, soc_state = f(1.0), f(0.0), f(0.0)
+    t_soc = t_skin = f(amb_t[0])
+    out = {k: [] for k in ("soc", "t_soc", "t_skin", "level", "th_state",
+                           "soc_state", "p_mw", "drain_mw", "pods")}
+    for t in range(mw.shape[0]):
+        if t_skin > c["temp_trip"]:
+            th_state = f(1.0)
+        elif t_skin < c["temp_clear"]:
+            th_state = f(0.0)
+        if soc < c["soc_trip"]:
+            soc_state = f(1.0)
+        elif soc > c["soc_clear"]:
+            soc_state = f(0.0)
+        level = int(min(th_state + soc_state, c["max_level"]))
+        alive = (f(1.0) if soc > 0.0 else f(0.0)) * f(valid_t[t])
+        act = f(active_t[t]) * f(amult[level])
+        p_mw = (act * f(mw[t, level])
+                + (f(1.0) - act) * c["standby_mw"]) * alive
+        v = (c["v_full"] - c["sag_v"] * (f(1.0) - soc)
+             - c["knee_v"] * np.exp(-c["knee_sharp"] * soc))
+        i_a = p_mw * f(1e-3) / v
+        loss_mw = i_a * i_a * c["r_ohm"] * f(1e3)
+        drain_mw = p_mw + loss_mw
+        soc = max(soc - drain_mw * c["dsoc_coeff"], f(0.0))
+        heat_w = drain_mw * f(1e-3)
+        flow = (t_soc - t_skin) * c["g_soc_skin"]
+        t_soc_new = t_soc + (heat_w - flow) * c["dt_c_soc"]
+        t_skin = t_skin + (flow - (t_skin - f(amb_t[t]))
+                           * c["g_skin_amb"]) * c["dt_c_skin"]
+        t_soc = t_soc_new
+        row = {"soc": soc, "t_soc": t_soc, "t_skin": t_skin,
+               "level": level, "th_state": th_state,
+               "soc_state": soc_state, "p_mw": p_mw,
+               "drain_mw": drain_mw,
+               "pods": act * f(pods_t[t, level]) * alive}
+        for k, vv in row.items():
+            out[k].append(vv)
+    return {k: np.asarray(v, np.int32 if k == "level" else np.float32)
+            for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# combo compilation: knob tables through the batched steady-state engine
+# ---------------------------------------------------------------------------
+
+def _resolve(thing, registry_get, cls):
+    if isinstance(thing, str):
+        return registry_get(thing)
+    if not isinstance(thing, cls):
+        raise TypeError(f"expected {cls.__name__} or name, "
+                        f"got {type(thing).__name__}")
+    return thing
+
+
+def _plat(p):
+    if isinstance(p, PlatformSpec):
+        return p
+    from . import aria2
+    from . import platform as registry
+    aria2.platforms()
+    return registry.get(p)
+
+
+@dataclass
+class _Combo:
+    platform: PlatformSpec
+    design: dict
+    schedule: DaySchedule
+    policy: ThrottlePolicy
+    battery: BatterySpec
+    thermal: ThermalSpec
+    mw_levels: np.ndarray = None        # (L, n_seg) filled by compile
+    pods_levels: np.ndarray = None      # (L, n_seg)
+    steady_mw: float = 0.0
+
+    def label(self) -> dict:
+        return {"platform": self.platform.name,
+                "design": self.design.get("name", ""),
+                "on_device": "+".join(self.design["on_device"]) or "(none)",
+                "schedule": self.schedule.name,
+                "policy": self.policy.name,
+                "battery": self.battery.name}
+
+
+def _compile_platform(plat: PlatformSpec, combos: list, n_users: float,
+                      theta=None, results_dir=None) -> None:
+    """Fill mw/pods level tables for every combo of one platform with ONE
+    batched `scenarios.evaluate` + ONE vectorized pods pass."""
+    if not combos:
+        return
+    rows, slices = [], []
+    for cb in combos:
+        start = len(rows)
+        for level in range(cb.policy.n_levels):
+            act = cb.policy.action(level)
+            rows.extend(_design_row(cb.design, seg, act)
+                        for seg in cb.schedule.segments)
+        # steady-state reference row: the design at nominal always-on
+        # knobs (duty 1, display off) — the number the old engines report
+        rows.append(_design_row(cb.design, DaySegment("steady", 1.0),
+                                ThrottleAction()))
+        slices.append((start, len(rows) - 1))
+    sset = ScenarioSet.build(rows, primitives=plat.primitives)
+    rep = scenarios.evaluate(plat, sset, theta)
+    totals = np.asarray(rep.total_mw, np.float64)
+    bd = offload.pods_breakdown(sset, n_users=n_users, duty=1.0,
+                                results_dir=results_dir)
+    for cb, (start, steady_i) in zip(combos, slices):
+        n_seg, n_lvl = len(cb.schedule.segments), cb.policy.n_levels
+        cb.mw_levels = totals[start:steady_i].reshape(n_lvl, n_seg)
+        cb.pods_levels = bd.pods[start:steady_i].reshape(n_lvl, n_seg)
+        cb.steady_mw = float(totals[steady_i])
+
+
+def _combo_tables(cb: _Combo, dt_s: float, n_steps: int,
+                  max_levels: int, standby_mw: float) -> dict:
+    """Per-step numpy tables for one combo, padded to the batch shape."""
+    seg_steps = [max(1, round(s.hours * 3600.0 / dt_s))
+                 for s in cb.schedule.segments]
+    seg_idx = np.repeat(np.arange(len(seg_steps)), seg_steps)
+    t = len(seg_idx)
+    mw = cb.mw_levels                       # (L, n_seg)
+    pods = cb.pods_levels
+    if mw.shape[0] < max_levels:            # pad levels with the last row
+        pad = max_levels - mw.shape[0]
+        mw = np.concatenate([mw, np.repeat(mw[-1:], pad, 0)])
+        pods = np.concatenate([pods, np.repeat(pods[-1:], pad, 0)])
+    step_mw = np.zeros((n_steps, max_levels), np.float32)
+    step_pods = np.zeros((n_steps, max_levels), np.float32)
+    step_mw[:t] = mw.T[seg_idx]
+    step_pods[:t] = pods.T[seg_idx]
+    amb = np.full(n_steps, cb.schedule.segments[-1].ambient_c, np.float32)
+    amb[:t] = np.asarray([s.ambient_c for s in cb.schedule.segments],
+                         np.float32)[seg_idx]
+    active = np.zeros(n_steps, np.float32)
+    active[:t] = np.asarray([s.active for s in cb.schedule.segments],
+                            np.float32)[seg_idx]
+    valid = np.zeros(n_steps, np.float32)
+    valid[:t] = 1.0
+    amult = np.ones(max_levels, np.float32)
+    for lv in range(1, cb.policy.n_levels):
+        amult[lv:] = cb.policy.action(lv).active_mult
+    bat, th = cb.battery, cb.thermal
+    const = {
+        "temp_trip": cb.policy.temp_trip_c,
+        "temp_clear": cb.policy.temp_clear_c,
+        "soc_trip": cb.policy.soc_trip, "soc_clear": cb.policy.soc_clear,
+        "max_level": float(cb.policy.n_levels - 1),
+        "standby_mw": standby_mw,
+        "v_full": bat.v_full, "sag_v": bat.sag_v, "knee_v": bat.knee_v,
+        "knee_sharp": bat.knee_sharpness, "r_ohm": bat.r_internal_ohm,
+        "dsoc_coeff": dt_s / (3600.0 * bat.capacity_mwh),
+        "g_soc_skin": 1.0 / th.r_soc_skin_k_per_w,
+        "g_skin_amb": 1.0 / th.r_skin_amb_k_per_w,
+        "dt_c_soc": dt_s / th.c_soc_j_per_k,
+        "dt_c_skin": dt_s / th.c_skin_j_per_k,
+    }
+    return {"step_mw": step_mw, "step_pods": step_pods, "ambient": amb,
+            "active": active, "valid": valid, "act_mult": amult,
+            "const": {k: np.float32(v) for k, v in const.items()}}
+
+
+# ---------------------------------------------------------------------------
+# reports
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DayReport:
+    """Batched day-in-the-life results; all arrays share leading dim N.
+
+    Objectives per combo: time_to_empty_h (maximize), peak_skin_c
+    (minimize), pod_hours (minimize — time-resolved backend fleet
+    demand for `n_users` wearables), throttled_h (capture-hours degraded
+    by the policy: the deadline-hours-lost proxy).  `front_mask` is
+    filled by `dse.day_pareto`."""
+    combos: list                    # N combo label dicts
+    day_hours: np.ndarray           # (N,)
+    steady_mw: np.ndarray           # (N,) nominal steady-state total
+    time_to_empty_h: np.ndarray     # (N,)
+    end_soc: np.ndarray             # (N,)
+    peak_skin_c: np.ndarray         # (N,)
+    pod_hours: np.ndarray           # (N,)
+    throttled_h: np.ndarray         # (N,)
+    energy_mwh: np.ndarray          # (N,) total drained from the cell
+    n_users: float
+    dt_s: float
+    front_mask: np.ndarray | None = None
+    skipped: list = field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.combos)
+
+    def survives(self, skin_limit_c: float = 43.0) -> np.ndarray:
+        """(N,) bool: made it through the whole day without emptying the
+        cell or breaching the skin-contact comfort limit."""
+        return ((self.time_to_empty_h >= self.day_hours - 1e-9)
+                & (self.peak_skin_c <= skin_limit_c))
+
+    def objectives(self) -> np.ndarray:
+        """(N, 3) [time_to_empty_h, peak_skin_c, pod_hours]."""
+        return np.stack([self.time_to_empty_h, self.peak_skin_c,
+                         self.pod_hours], axis=1)
+
+    def row(self, i: int, _survives=None) -> dict:
+        surv = self.survives() if _survives is None else _survives
+        cost = offload.pod_cost(float(self.pod_hours[i]))
+        return {
+            "index": int(i), **self.combos[i],
+            "steady_mw": round(float(self.steady_mw[i]), 1),
+            "time_to_empty_h": round(float(self.time_to_empty_h[i]), 2),
+            "day_hours": round(float(self.day_hours[i]), 2),
+            "survives": bool(surv[i]),
+            "end_soc": round(float(self.end_soc[i]), 3),
+            "peak_skin_c": round(float(self.peak_skin_c[i]), 2),
+            "pod_hours": round(float(self.pod_hours[i]), 1),
+            "usd": round(cost["usd"], 2),
+            "kgco2": round(cost["kgco2"], 1),
+            "throttled_h": round(float(self.throttled_h[i]), 2),
+        }
+
+    def rows(self) -> list:
+        surv = self.survives()
+        return [self.row(i, surv) for i in range(len(self))]
+
+    def front_indices(self) -> np.ndarray:
+        if self.front_mask is None:
+            raise ValueError("front_mask not set; use dse.day_pareto")
+        return np.flatnonzero(self.front_mask)
+
+    def front_rows(self) -> list:
+        surv = self.survives()
+        rows = [self.row(i, surv) for i in self.front_indices()]
+        return sorted(rows, key=lambda r: -r["time_to_empty_h"])
+
+
+@dataclass
+class DayTrace:
+    """Single-combo run with full per-step traces (examples, tests)."""
+    combo: dict
+    dt_s: float
+    soc: np.ndarray
+    t_soc_c: np.ndarray
+    t_skin_c: np.ndarray
+    level: np.ndarray
+    th_state: np.ndarray
+    soc_state: np.ndarray
+    p_mw: np.ndarray
+    drain_mw: np.ndarray
+    pods: np.ndarray
+    valid: np.ndarray
+    summary: dict
+
+
+def _summarize(ys: dict, tables: dict, dt_s: float) -> dict:
+    """(N, T) traces -> (N,) objective arrays (numpy, off-device)."""
+    soc = np.asarray(ys["soc"], np.float64)
+    valid = np.asarray(tables["valid"], bool)
+    t_skin = np.asarray(ys["t_skin"], np.float64)
+    level = np.asarray(ys["level"])
+    active = np.asarray(tables["active"], np.float64)
+    day_steps = valid.sum(axis=1)
+    empty = soc <= 0.0
+    hit = empty.any(axis=1)
+    first = np.argmax(empty, axis=1).astype(np.float64) + 1.0
+    tte = np.where(hit, first, day_steps) * dt_s / 3600.0
+    peak = np.where(valid, t_skin, -np.inf).max(axis=1)
+    pods = np.asarray(ys["pods"], np.float64)
+    # capture-hours degraded by the policy while the device was still
+    # alive (time after the cell empties is lost outright, not throttled)
+    alive = np.concatenate([np.ones_like(soc[:, :1]), soc[:, :-1] > 0.0],
+                           axis=1) > 0.0
+    throttled = ((level > 0) & valid & alive) * active
+    drain = np.asarray(ys["drain_mw"], np.float64)
+    return {
+        "day_hours": day_steps * dt_s / 3600.0,
+        "time_to_empty_h": tte,
+        "end_soc": soc[:, -1],
+        "peak_skin_c": peak,
+        "pod_hours": pods.sum(axis=1) * dt_s / 3600.0,
+        "throttled_h": throttled.sum(axis=1) * dt_s / 3600.0,
+        "energy_mwh": drain.sum(axis=1) * dt_s / 3600.0,
+    }
+
+
+def _batteries_arg(battery, plat_name: str) -> BatterySpec:
+    if battery is None:
+        return battery_for(plat_name)
+    if isinstance(battery, dict):
+        return battery.get(plat_name, battery_for(plat_name))
+    return battery
+
+
+DEFAULT_PLATFORMS = ("aria2_display", "rayban_cam")
+DEFAULT_SCHEDULES = ("commuter", "field_day", "desk_day")
+DEFAULT_POLICIES = ("none", "thermal_governor", "battery_saver")
+
+
+def build_combos(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
+                 schedules=DEFAULT_SCHEDULES, policies=DEFAULT_POLICIES,
+                 n_users: float = 1e6, battery=None,
+                 thermal: ThermalSpec | None = None, theta=None,
+                 results_dir=None) -> tuple:
+    """Enumerate runnable combos and pre-compile their level tables (one
+    batched steady-state evaluate + pods pass per platform).  Returns
+    (combos, skipped); designs whose placement a platform cannot run
+    on-device are skipped, mirroring the engine's placement check."""
+    schedules = [_resolve(s, get_schedule, DaySchedule)
+                 for s in schedules]
+    policies = [_resolve(p, get_policy, ThrottlePolicy) for p in policies]
+    therm = thermal or DEFAULT_THERMAL
+    combos, skipped = [], []
+    for p in platforms:
+        plat = _plat(p)
+        supported = set(plat.supported_primitives())
+        bat = _batteries_arg(battery, plat.name)
+        plat_combos = []
+        for d in designs:
+            if not set(d["on_device"]) <= supported:
+                skipped.append({"platform": plat.name,
+                                "design": d.get("name", ""),
+                                "reason": "unsupported placement"})
+                continue
+            plat_combos.extend(
+                _Combo(plat, d, sched, pol, bat, therm)
+                for sched in schedules for pol in policies)
+        _compile_platform(plat, plat_combos, n_users, theta, results_dir)
+        combos.extend(plat_combos)
+    if not combos:
+        raise ValueError("no runnable (platform, design) combos")
+    return combos, skipped
+
+
+def batch_tables(combos: list, dt_s: float = DEFAULT_DT_S,
+                 standby_mw: float = DEFAULT_STANDBY_MW) -> dict:
+    """Stack per-combo step tables into the vmapped scan's input pytree
+    (leading dim N, padded to the longest schedule / deepest policy)."""
+    n_steps = max(cb.schedule.n_steps(dt_s) for cb in combos)
+    max_levels = max(cb.policy.n_levels for cb in combos)
+    per = [_combo_tables(cb, dt_s, n_steps, max_levels, standby_mw)
+           for cb in combos]
+    return jax.tree_util.tree_map(lambda *xs: jnp.asarray(np.stack(xs)),
+                                  *per)
+
+
+def day_grid(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
+             schedules=DEFAULT_SCHEDULES, policies=DEFAULT_POLICIES,
+             dt_s: float = DEFAULT_DT_S, n_users: float = 1e6,
+             standby_mw: float = DEFAULT_STANDBY_MW, battery=None,
+             thermal: ThermalSpec | None = None, theta=None,
+             results_dir=None) -> DayReport:
+    """Simulate every (platform x design x schedule x policy) combo
+    through ONE vmapped `jax.lax.scan`.
+
+    Designs whose placement a platform cannot run on-device are skipped
+    (recorded in `report.skipped`), mirroring the steady-state engine's
+    placement validation.  `battery` may be a single BatterySpec or a
+    {platform_name: BatterySpec} map; defaults come from `BATTERIES`.
+    """
+    combos, skipped = build_combos(platforms, designs, schedules,
+                                   policies, n_users, battery, thermal,
+                                   theta, results_dir)
+    tables = batch_tables(combos, dt_s, standby_mw)
+    ys = jax.block_until_ready(_integrate_batch(tables))
+    summ = _summarize(ys, {"valid": np.asarray(tables["valid"]),
+                           "active": np.asarray(tables["active"])}, dt_s)
+    return DayReport(
+        combos=[cb.label() for cb in combos],
+        steady_mw=np.asarray([cb.steady_mw for cb in combos]),
+        n_users=n_users, dt_s=dt_s, skipped=skipped, **summ)
+
+
+def simulate(platform, design: dict, schedule, policy="none",
+             dt_s: float = DEFAULT_DT_S, n_users: float = 1e6,
+             standby_mw: float = DEFAULT_STANDBY_MW,
+             battery: BatterySpec | None = None,
+             thermal: ThermalSpec | None = None, theta=None,
+             results_dir=None) -> DayTrace:
+    """One (platform, design, schedule, policy) day with full traces."""
+    plat = _plat(platform)
+    cb = _Combo(plat, design, _resolve(schedule, get_schedule, DaySchedule),
+                _resolve(policy, get_policy, ThrottlePolicy),
+                _batteries_arg(battery, plat.name),
+                thermal or DEFAULT_THERMAL)
+    _compile_platform(plat, [cb], n_users, theta, results_dir)
+    tb = _combo_tables(cb, dt_s, cb.schedule.n_steps(dt_s),
+                       cb.policy.n_levels, standby_mw)
+    batch = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], tb)
+    ys = jax.block_until_ready(_integrate_batch(batch))
+    summ = _summarize(ys, {"valid": tb["valid"][None],
+                           "active": tb["active"][None]}, dt_s)
+    summary = {k: float(v[0]) for k, v in summ.items()}
+    summary["steady_mw"] = cb.steady_mw
+    return DayTrace(
+        combo=cb.label(), dt_s=dt_s,
+        soc=np.asarray(ys["soc"][0]), t_soc_c=np.asarray(ys["t_soc"][0]),
+        t_skin_c=np.asarray(ys["t_skin"][0]),
+        level=np.asarray(ys["level"][0]),
+        th_state=np.asarray(ys["th_state"][0]),
+        soc_state=np.asarray(ys["soc_state"][0]),
+        p_mw=np.asarray(ys["p_mw"][0]),
+        drain_mw=np.asarray(ys["drain_mw"][0]),
+        pods=np.asarray(ys["pods"][0]), valid=tb["valid"],
+        summary=summary)
+
+
+def compiled_tables(platform, design: dict, schedule, policy="none",
+                    dt_s: float = DEFAULT_DT_S, n_users: float = 1e6,
+                    standby_mw: float = DEFAULT_STANDBY_MW,
+                    battery: BatterySpec | None = None,
+                    thermal: ThermalSpec | None = None) -> dict:
+    """The per-step table pytree for one combo — the shared input of the
+    scan and `reference_integrate` (parity tests, the bench baseline)."""
+    plat = _plat(platform)
+    cb = _Combo(plat, design, _resolve(schedule, get_schedule, DaySchedule),
+                _resolve(policy, get_policy, ThrottlePolicy),
+                _batteries_arg(battery, plat.name),
+                thermal or DEFAULT_THERMAL)
+    _compile_platform(plat, [cb], n_users)
+    return _combo_tables(cb, dt_s, cb.schedule.n_steps(dt_s),
+                         cb.policy.n_levels, standby_mw)
+
+
+def scan_integrate(tb: dict) -> dict:
+    """Run the jitted scan on one combo's tables (bench/parity entry)."""
+    batch = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], tb)
+    ys = jax.block_until_ready(_integrate_batch(batch))
+    return {k: np.asarray(v[0]) for k, v in ys.items()}

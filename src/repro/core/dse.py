@@ -45,7 +45,7 @@ import numpy as np
 
 from . import aria2, offload, scenarios
 from .aria2 import PRIMITIVES, Scenario
-from .platform import PlatformSpec
+from .platform import PlatformSpec, diff as platform_diff
 from .scenarios import MCS_TIERS, ScenarioSet, all_placements
 
 
@@ -279,17 +279,28 @@ class JointReport:
         return {s: arch for s, (arch, _, _) in
                 offload.STREAM_SERVICE.items()}
 
+    def cost_per_day(self) -> dict:
+        """Steady-state fleet cost: pods x 24 h -> $ and kgCO2 per day.
+
+        Arrays share the grid's leading dim N (offload.pod_cost)."""
+        return offload.pod_cost(self.backend_pods * 24.0)
+
     def row(self, i: int) -> dict:
         s = self.sset
+        cost = offload.pod_cost(float(self.backend_pods[i]) * 24.0)
         out = {
             "index": int(i),
             "on_device": "+".join(s.on_device(i)) or "(none)",
             "compression": float(s.compression[i]),
             "fps_scale": float(s.fps_scale[i]),
             "mcs": MCS_TIERS[int(s.mcs_tier[i])][0],
+            "upload_duty": round(float(s.upload_duty[i]), 3),
+            "brightness": round(float(s.brightness[i]), 3),
             "device_mw": round(float(self.device_mw[i]), 1),
             "uplink_mbps": round(float(self.uplink_mbps[i]), 2),
             "backend_pods": round(float(self.backend_pods[i]), 1),
+            "usd_per_day": round(cost["usd"], 0),
+            "kgco2_per_day": round(cost["kgco2"], 0),
         }
         if self.breakdown is not None:
             out["pods_by_stream"] = self.breakdown.row(i)
@@ -304,16 +315,22 @@ def joint_pareto(platform=None, placements=None,
                  compressions=scenarios.GRID_COMPRESSIONS,
                  fps_scales=scenarios.GRID_FPS_SCALES,
                  mcs_tiers=JOINT_MCS_TIERS,
+                 upload_duties=(1.0,), brightnesses=(0.0,),
                  n_users: float = 1e6, duty: float = 0.35,
                  results_dir=None, theta=None) -> JointReport:
     """Joint device+backend Pareto sweep in one batched pass.
 
     Default grid: 16 placements x 8 compressions x 6 fps x 3 MCS tiers =
-    2304 design points.  The whole grid goes through ONE jitted vmap
-    device call (scenarios.evaluate), one vectorized fleet-sizing pass
-    (offload.pods_breakdown — capacities come from the cached
-    CapacityTable, zero disk reads), and one blockwise dominance pass
-    (non_dominated) — no per-point Python loops anywhere on the path.
+    2304 design points; `upload_duties` and `brightnesses` are
+    first-class joint axes on top (VAD gating throttles both the radio
+    and backend ingest; brightness trades display power on display
+    SKUs), multiplying the grid accordingly — the blockwise
+    `non_dominated` scales to those sizes.  The whole grid goes through
+    ONE jitted vmap device call (scenarios.evaluate), one vectorized
+    fleet-sizing pass (offload.pods_breakdown — capacities come from the
+    cached CapacityTable, zero disk reads), and one blockwise dominance
+    pass (non_dominated) — no per-point Python loops anywhere on the
+    path.
     """
     plat = _plat(platform)
     if placements is None:
@@ -322,6 +339,8 @@ def joint_pareto(platform=None, placements=None,
                             compressions=[float(c) for c in compressions],
                             fps_scales=[float(f) for f in fps_scales],
                             mcs_tiers=[int(m) for m in mcs_tiers],
+                            upload_duties=[float(u) for u in upload_duties],
+                            brightnesses=[float(b) for b in brightnesses],
                             primitives=plat.primitives)
     rep = scenarios.evaluate(plat, sset, theta)
     device_mw = np.asarray(rep.total_mw, np.float64)
@@ -344,7 +363,8 @@ def _lex_argmin(keys: list, feasible: np.ndarray):
 
 
 def co_optimize(rep: JointReport, pod_budget: float | None = None,
-                power_budget_mw: float | None = None) -> dict:
+                power_budget_mw: float | None = None,
+                usd_budget_per_day: float | None = None) -> dict:
     """Constrained argmins over a joint grid (deterministic tie-breaks).
 
     * device_optimum            — min device power, backend unconstrained
@@ -352,6 +372,9 @@ def co_optimize(rep: JointReport, pod_budget: float | None = None,
     * min_power_under_pod_budget — min device power s.t. pods <= budget.
     * min_pods_under_power_budget — min pods s.t. device power <= budget
       (ties toward lower power, then higher uplink).
+    * min_power_under_usd_budget — the pod budget stated in money: min
+      device power s.t. the 24 h fleet bill (offload.pod_cost: amortized
+      capex + energy) fits `usd_budget_per_day`.
     Infeasible constraints yield None rows.
     """
     ones = np.ones(len(rep), bool)
@@ -367,4 +390,91 @@ def co_optimize(rep: JointReport, pod_budget: float | None = None,
                         rep.device_mw <= power_budget_mw)
         out["power_budget_mw"] = power_budget_mw
         out["min_pods_under_power_budget"] = None if i is None else rep.row(i)
+    if usd_budget_per_day is not None:
+        usd = rep.cost_per_day()["usd"]
+        i = _lex_argmin([rep.device_mw, rep.backend_pods, -rep.uplink_mbps],
+                        usd <= usd_budget_per_day)
+        out["usd_budget_per_day"] = usd_budget_per_day
+        out["min_power_under_usd_budget"] = None if i is None else rep.row(i)
     return out
+
+
+# ---------------------------------------------------------------------------
+# day-in-the-life objectives (core/daysim.py) as first-class DSE
+# ---------------------------------------------------------------------------
+
+def day_pareto(platforms=None, designs=None, schedules=None, policies=None,
+               **kw):
+    """Day-level Pareto front over (time-to-empty h, peak skin °C,
+    backend pod-hours).
+
+    Every (platform x design x schedule x policy) combo integrates
+    through daysim's ONE vmapped `jax.lax.scan` (battery SoC + 2-node
+    thermal RC + throttle hysteresis), and the 3-objective non-dominated
+    set is extracted with the shared blockwise `non_dominated` filter
+    (time-to-empty is maximized).  Returns the `daysim.DayReport` with
+    `front_mask` filled; `report.front_rows()` carries $ / kgCO2 via the
+    offload cost model."""
+    from . import daysim
+    args = {k: v for k, v in (("platforms", platforms),
+                              ("designs", designs),
+                              ("schedules", schedules),
+                              ("policies", policies)) if v is not None}
+    rep = daysim.day_grid(**args, **kw)
+    rep.front_mask = non_dominated(rep.objectives(), maximize=(0,))
+    return rep
+
+
+def survives_day(rep=None, skin_limit_c: float = 43.0, **kw):
+    """(N,) bool per combo: the cell lasts the whole schedule AND peak
+    skin temperature stays under the comfort limit.  Pass an existing
+    `DayReport` (from `day_pareto`/`daysim.day_grid`) or kwargs to run
+    one."""
+    if rep is None:
+        rep = day_pareto(**kw)
+    elif kw:
+        raise TypeError(f"got both a DayReport and grid kwargs "
+                        f"{sorted(kw)}; pass one or the other")
+    return rep.survives(skin_limit_c)
+
+
+def platform_ablation(names=None, on_device=(), compression: float = 10.0,
+                      fps_scale: float = 1.0) -> list:
+    """Registry-driven SKU comparison: evaluate one common scenario row
+    across platforms and diff each SKU's component table against the
+    first (baseline) entry.
+
+    Placements a SKU cannot run are downshifted to the supported subset
+    (the point of an ablation row is what the SKU saves, not a crash)."""
+    from . import platform as registry
+    if names is None:
+        names = registry.names()
+    plats = [_plat(n) for n in names]
+    base = plats[0]
+    rows = []
+    for plat in plats:
+        placement = tuple(p for p in on_device
+                          if p in plat.supported_primitives())
+        sset = ScenarioSet.grid(placements=(placement,),
+                                compressions=(float(compression),),
+                                fps_scales=(float(fps_scale),),
+                                primitives=plat.primitives)
+        rep = scenarios.evaluate(plat, sset)
+        d = platform_diff(base, plat)
+        rows.append({
+            "platform": plat.name,
+            "n_components": len(plat),
+            "on_device": "+".join(placement) or "(none)",
+            "total_mw": round(float(rep.total_mw[0]), 1),
+            "offload_mbps": round(float(rep.offloaded_mbps[0]), 2),
+            "vs_baseline": {
+                "added": sorted(d["added"]),
+                "dropped": sorted(d["dropped"]),
+                "changed": sorted(d["changed"]),
+                "theta": d["theta"], "raw_mbps": d["raw_mbps"],
+            },
+        })
+    base_mw = rows[0]["total_mw"]
+    for r in rows:
+        r["delta_mw_vs_baseline"] = round(r["total_mw"] - base_mw, 1)
+    return rows

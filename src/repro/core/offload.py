@@ -67,6 +67,36 @@ STREAM_CANDIDATES = {
 FALLBACK_BOUND_S = {"prefill": 2.0, "train": 6.0, "decode": 0.05}
 
 
+# -- backend cost model (pods -> pod-hours -> $ and kgCO2) ------------------
+# A pod is the 256-chip serving cell the roofline capacities describe.
+# Costs are per pod-hour: amortized capex + datacenter energy at the
+# board+cooling draw.  All four numbers are deliberately round data, not
+# code — co_optimize budgets can be stated in money instead of pods.
+POD_POWER_KW = 140.0            # 256 accelerators + interconnect/cooling
+USD_PER_KWH = 0.085
+KGCO2_PER_KWH = 0.30            # grid-average carbon intensity
+POD_CAPEX_USD_PER_HOUR = 260.0  # pod price amortized over service life
+
+
+def usd_per_pod_hour() -> float:
+    return POD_CAPEX_USD_PER_HOUR + POD_POWER_KW * USD_PER_KWH
+
+
+def pod_cost(pod_hours) -> dict:
+    """pod-hours -> {pod_hours, energy_kwh, usd, kgco2}.
+
+    Accepts scalars or numpy arrays; the money figure is capex
+    amortization plus datacenter energy, carbon is energy only."""
+    ph = np.asarray(pod_hours, np.float64)
+    kwh = ph * POD_POWER_KW
+    out = {"pod_hours": ph, "energy_kwh": kwh,
+           "usd": ph * POD_CAPEX_USD_PER_HOUR + kwh * USD_PER_KWH,
+           "kgco2": kwh * KGCO2_PER_KWH}
+    if np.ndim(pod_hours) == 0:
+        return {k: float(v) for k, v in out.items()}
+    return out
+
+
 @dataclass(frozen=True)
 class BackendDemand:
     stream: str

@@ -155,8 +155,12 @@ class PlatformSpec:
     def variant(self, name: str, drop: Iterable[str] = (),
                 add: Iterable[ComponentSpec] = (),
                 replace: Iterable[ComponentSpec] = (),
-                theta: dict | None = None) -> "PlatformSpec":
-        """Derive a SKU: drop/add/replace components, override theta."""
+                theta: dict | None = None,
+                raw_mbps: dict | None = None,
+                ip_rates: dict | None = None) -> "PlatformSpec":
+        """Derive a SKU: drop/add/replace components; override theta,
+        sensor raw rates, or accelerator rates (e.g. a camera-only SKU
+        zeroes the GS/ET streams it no longer captures)."""
         drop = set(drop)
         repl = {c.name: c for c in replace}
         unknown = (drop | set(repl)) - set(self.component_names())
@@ -167,8 +171,20 @@ class PlatformSpec:
         comps.extend(add)
         th = dict(self.theta)
         th.update(theta or {})
+        raw = dict(self.raw_mbps)
+        unknown = set(raw_mbps or {}) - set(raw)
+        if unknown:
+            raise KeyError(f"variant refers to unknown raw streams "
+                           f"{unknown}")
+        raw.update(raw_mbps or {})
+        rates = dict(self.ip_rates)
+        unknown = set(ip_rates or {}) - set(rates)
+        if unknown:
+            raise KeyError(f"variant refers to unknown ip rates {unknown}")
+        rates.update(ip_rates or {})
         return _dc_replace(self, name=name, components=tuple(comps),
-                           theta=_kv(th))
+                           theta=_kv(th), raw_mbps=_kv(raw),
+                           ip_rates=_kv(rates))
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
@@ -209,6 +225,52 @@ class PlatformSpec:
                    raw_mbps=_kv(d["raw_mbps"]), ip_rates=_kv(d["ip_rates"]),
                    duty_tables=tables,
                    primitives=tuple(d["primitives"]))
+
+
+# ---------------------------------------------------------------------------
+# platform diffs (SKU ablation reports from the registry)
+# ---------------------------------------------------------------------------
+
+def _changed_fields(a: ComponentSpec, b: ComponentSpec) -> dict:
+    out = {}
+    for f in ("category", "process", "rail", "digital_fraction", "group"):
+        va, vb = getattr(a, f), getattr(b, f)
+        if va != vb:
+            out[f] = (va, vb)
+    if a.load != b.load:
+        out["load"] = ({"kind": a.load.kind, **a.load.p()},
+                       {"kind": b.load.kind, **b.load.p()})
+    return out
+
+
+def diff(a: PlatformSpec, b: PlatformSpec) -> dict:
+    """Structural diff between two SKUs, pure data (no jax import).
+
+    Returns component names `added`/`dropped` (relative to `a`), a
+    `changed` map (name -> {field: (a_value, b_value)}), and the same
+    (a, b) pair maps for theta / raw_mbps / ip_rates / rails entries
+    that differ — the substrate for registry-driven ablation reports."""
+    ca = {c.name: c for c in a.components}
+    cb = {c.name: c for c in b.components}
+    changed = {n: _changed_fields(ca[n], cb[n])
+               for n in ca.keys() & cb.keys() if ca[n] != cb[n]}
+
+    def _kvdiff(ka, kb):
+        da, db = dict(ka), dict(kb)
+        return {k: (da.get(k), db.get(k))
+                for k in da.keys() | db.keys()
+                if da.get(k) != db.get(k)}
+
+    return {
+        "a": a.name, "b": b.name,
+        "added": sorted(cb.keys() - ca.keys()),
+        "dropped": sorted(ca.keys() - cb.keys()),
+        "changed": changed,
+        "theta": _kvdiff(a.theta, b.theta),
+        "raw_mbps": _kvdiff(a.raw_mbps, b.raw_mbps),
+        "ip_rates": _kvdiff(a.ip_rates, b.ip_rates),
+        "rails": _kvdiff(a.rails, b.rails),
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -162,6 +162,20 @@ class ScenarioSet:
                 for u in upload_duties for b in brightnesses]
         return cls.build(rows, primitives)
 
+    def take(self, idx) -> "ScenarioSet":
+        """Row subset (or reorder) by integer indices or a boolean mask
+        (e.g. a Pareto front_mask), names included."""
+        idx = np.asarray(idx)
+        idx = (np.flatnonzero(idx) if idx.dtype == bool
+               else idx.astype(np.int64))
+        names = tuple(self.names[i] for i in idx) if self.names else ()
+        return _dc_replace(
+            self, placement=self.placement[idx],
+            compression=self.compression[idx],
+            fps_scale=self.fps_scale[idx], mcs_tier=self.mcs_tier[idx],
+            upload_duty=self.upload_duty[idx],
+            brightness=self.brightness[idx], names=names)
+
     def with_knob(self, **arrays) -> "ScenarioSet":
         """Replace whole knob columns (broadcast scalars over N)."""
         n = len(self)

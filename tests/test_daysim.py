@@ -1,0 +1,336 @@
+"""Day-in-the-life simulator (core/daysim.py): scan-vs-Python parity,
+battery/thermal invariants, throttle hysteresis, declarative round-trip,
+and the day-level Pareto objectives (dse.day_pareto / survives_day)."""
+import json
+
+import numpy as np
+import pytest
+from _proptest import given, settings, st
+
+from repro.core import daysim, dse
+from repro.core.daysim import (BatterySpec, DaySchedule, DaySegment,
+                               ThermalSpec, ThrottleAction, ThrottlePolicy)
+
+DT = 20.0
+
+
+# ---------------------------------------------------------------------------
+# integrator parity: jitted lax.scan == pure-Python per-step loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule,policy", [
+    ("commuter", "none"),
+    ("commuter", "battery_saver"),
+    ("field_day", "thermal_governor"),
+])
+def test_scan_matches_python_reference(schedule, policy):
+    """The scanned integrator reproduces the per-step Python oracle to
+    1e-6 over a whole day — same tables, same float32 op order."""
+    tb = daysim.compiled_tables("aria2_display",
+                                daysim.DEFAULT_DESIGNS[1], schedule,
+                                policy, dt_s=DT)
+    ys = daysim.scan_integrate(tb)
+    ref = daysim.reference_integrate(tb)
+    np.testing.assert_array_equal(ys["level"], ref["level"])
+    for k in ("soc", "t_soc", "t_skin", "p_mw", "drain_mw", "pods"):
+        np.testing.assert_allclose(ys[k], ref[k], rtol=1e-6, atol=1e-6,
+                                   err_msg=f"{schedule}/{policy}/{k}")
+
+
+# ---------------------------------------------------------------------------
+# physical invariants
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def hot_trace():
+    return daysim.simulate("aria2_display", daysim.DEFAULT_DESIGNS[2],
+                           "field_day", "thermal_governor", dt_s=DT)
+
+
+def test_soc_monotone_nonincreasing(hot_trace):
+    """No charging in the model: state of charge never rises."""
+    assert np.all(np.diff(hot_trace.soc) <= 1e-7)
+    assert hot_trace.soc[0] <= 1.0
+    assert np.all(hot_trace.soc >= 0.0)
+
+
+def test_dead_device_stops_draining_and_heating(hot_trace):
+    """After the cell empties, power and backend ingest are zero and the
+    nodes relax toward ambient instead of cooking."""
+    tr = hot_trace
+    dead = np.flatnonzero(tr.soc <= 0.0)
+    assert dead.size, "expected this combo to empty its cell"
+    after = dead[0] + 1
+    assert np.all(tr.p_mw[after:] == 0.0)
+    assert np.all(tr.pods[after:] == 0.0)
+    assert tr.t_skin_c[-1] < tr.t_skin_c[: after].max()
+
+
+def test_throttle_reduces_power_and_extends_life():
+    """The governor's downshift draws less power while tripped and never
+    shortens time-to-empty vs the same design unthrottled."""
+    kw = dict(design=daysim.DEFAULT_DESIGNS[2], schedule="field_day",
+              dt_s=DT)
+    off = daysim.simulate("aria2_display", policy="none", **kw)
+    gov = daysim.simulate("aria2_display", policy="thermal_governor", **kw)
+    assert gov.summary["time_to_empty_h"] >= off.summary["time_to_empty_h"]
+    assert gov.summary["peak_skin_c"] <= off.summary["peak_skin_c"] + 1e-6
+    assert gov.summary["throttled_h"] > 0.0
+    assert off.summary["throttled_h"] == 0.0
+    throttled = gov.level > 0
+    alive = gov.soc > 0
+    assert np.any(throttled & alive)
+    # while throttled and on the same segment grid, power sits below the
+    # unthrottled trace
+    both = throttled & alive & (off.soc > 0)
+    assert np.all(gov.p_mw[both] <= off.p_mw[both] + 1e-3)
+
+
+def test_battery_nonlinearity_punishes_peaks():
+    """Equal average power, burstier current -> strictly more battery
+    drained (I^2 R loss is quadratic in current): the dynamic effect a
+    steady-state mW ranking cannot express."""
+    bat = BatterySpec("test_4wh", 4000.0, r_internal_ohm=2.0)
+    # smooth: capture duty 0.5 blends to a constant half-power draw
+    smooth = DaySchedule("smooth", (DaySegment("a", 4.0, active=0.5),))
+    # peaky: the same average duty delivered as full-power bursts
+    peaky = DaySchedule("peaky", tuple(
+        DaySegment(f"s{i}", 0.25, active=(1.0 if i % 2 == 0 else 0.0))
+        for i in range(16)))
+    kw = dict(design=daysim.DEFAULT_DESIGNS[0], policy="none",
+              battery=bat, dt_s=DT, standby_mw=0.0)
+    e_smooth = daysim.simulate("aria2", schedule=smooth, **kw)
+    e_peak = daysim.simulate("aria2", schedule=peaky, **kw)
+    # same device-side energy demand to within a step quantum...
+    assert e_peak.p_mw.sum() == pytest.approx(e_smooth.p_mw.sum(),
+                                              rel=1e-3)
+    # ...but the bursty day pays ~2x the I^2R loss and ends lower
+    loss = lambda tr: tr.drain_mw.sum() - tr.p_mw.sum()     # noqa: E731
+    assert loss(e_peak) > 1.5 * loss(e_smooth)
+    assert e_smooth.summary["end_soc"] > e_peak.summary["end_soc"] + 1e-4
+
+
+def test_voltage_curve_shape():
+    bat = daysim.BATTERIES["default"]
+    socs = np.linspace(0.0, 1.0, 50)
+    v = np.asarray([float(bat.voltage(s)) for s in socs])
+    assert np.all(np.diff(v) > 0)               # monotone in soc
+    assert v[-1] == pytest.approx(bat.v_full, abs=0.01)
+    # the knee: marginal voltage drop is steepest near empty
+    assert (v[1] - v[0]) > 3 * (v[-1] - v[-2])
+
+
+# ---------------------------------------------------------------------------
+# throttle hysteresis: no oscillation at the threshold
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(trip=st.floats(min_value=33.0, max_value=41.0),
+       band=st.floats(min_value=1.0, max_value=3.0))
+def test_hysteresis_never_chatters(trip, band):
+    """For any trip point and a positive hysteresis band, the thermal
+    trigger transitions only on genuine band crossings: up requires the
+    previous skin temp above trip, down requires it below clear, and
+    (since per-step temperature motion is smaller than the band) the
+    trigger never flips on consecutive steps."""
+    pol = ThrottlePolicy("t", temp_trip_c=trip, temp_clear_c=trip - band,
+                         soc_trip=0.05, soc_clear=0.1,
+                         actions=(ThrottleAction(fps_mult=2.0,
+                                                 duty_mult=0.5,
+                                                 brightness_mult=0.2),))
+    sched = DaySchedule("osc", (
+        DaySegment("heat", 1.5, ambient_c=trip - 2.0, active=1.0,
+                   upload_duty=0.8, brightness=0.6),
+        DaySegment("cool", 1.0, ambient_c=trip - 9.0, active=0.6,
+                   upload_duty=0.4, brightness=0.2),
+        DaySegment("heat2", 1.5, ambient_c=trip - 1.0, active=1.0,
+                   upload_duty=0.8, brightness=0.6),
+    ))
+    tr = daysim.simulate("aria2_display", daysim.DEFAULT_DESIGNS[1],
+                         sched, pol, dt_s=30.0)
+    th = tr.th_state.astype(int)
+    t_skin = tr.t_skin_c
+    # precondition: the state moves less than the band per step
+    assert np.abs(np.diff(t_skin)).max() < band
+    d = np.diff(th)
+    up, down = np.flatnonzero(d == 1), np.flatnonzero(d == -1)
+    # transitions fire only on true crossings of their own edge
+    for t in up:
+        assert t_skin[t] > trip, (t, t_skin[t])
+    for t in down:
+        assert t_skin[t] < trip - band, (t, t_skin[t])
+    # and never immediately reverse (no chatter at the boundary)
+    flips = np.flatnonzero(d != 0)
+    assert np.all(np.diff(flips) > 1), flips
+
+
+# ---------------------------------------------------------------------------
+# declarative round-trip + registries
+# ---------------------------------------------------------------------------
+
+def test_schedule_policy_battery_json_roundtrip():
+    for name in daysim.schedule_names():
+        s = daysim.get_schedule(name)
+        assert DaySchedule.from_dict(json.loads(json.dumps(s.to_dict()))) \
+            == s
+    for name in daysim.policy_names():
+        p = daysim.get_policy(name)
+        assert ThrottlePolicy.from_dict(
+            json.loads(json.dumps(p.to_dict()))) == p
+    for b in daysim.BATTERIES.values():
+        assert BatterySpec.from_dict(json.loads(json.dumps(b.to_dict()))) \
+            == b
+    t = daysim.DEFAULT_THERMAL
+    assert ThermalSpec.from_dict(json.loads(json.dumps(t.to_dict()))) == t
+
+
+def test_registry_lookup_and_registration():
+    assert {"commuter", "field_day", "desk_day"} <= \
+        set(daysim.schedule_names())
+    assert {"none", "thermal_governor", "battery_saver"} <= \
+        set(daysim.policy_names())
+    with pytest.raises(KeyError, match="unknown schedule"):
+        daysim.get_schedule("no_such_day")
+    with pytest.raises(KeyError, match="unknown policy"):
+        daysim.get_policy("no_such_policy")
+    mine = daysim.register_schedule(DaySchedule("test_day", (
+        DaySegment("only", 1.0),)))
+    assert daysim.get_schedule("test_day") is mine
+
+
+def test_declarative_validation():
+    with pytest.raises(ValueError, match="hours"):
+        DaySegment("bad", 0.0)
+    with pytest.raises(ValueError, match="outside"):
+        DaySegment("bad", 1.0, active=1.5)
+    with pytest.raises(ValueError, match="hysteresis"):
+        ThrottlePolicy("bad", temp_trip_c=38.0, temp_clear_c=39.0,
+                       actions=(ThrottleAction(),))
+    with pytest.raises(ValueError, match="hysteresis"):
+        ThrottlePolicy("bad", soc_trip=0.5, soc_clear=0.4,
+                       actions=(ThrottleAction(),))
+    with pytest.raises(ValueError, match="fps_mult"):
+        ThrottleAction(fps_mult=0.5)
+    with pytest.raises(ValueError, match="capacity"):
+        BatterySpec("bad", -1.0)
+    # "none" (no actions) is exempt from band checks: thresholds unused
+    ThrottlePolicy("inert", temp_trip_c=30.0, temp_clear_c=35.0)
+
+
+# ---------------------------------------------------------------------------
+# the batched day grid + day-level Pareto objectives
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def day():
+    """2 SKUs x 3 schedules x 3 policies in ONE vmapped scan call."""
+    return dse.day_pareto(dt_s=60.0)
+
+
+def test_day_grid_covers_skus_schedules_policies(day):
+    assert len(day) >= 2 * 3 * 2
+    plats = {c["platform"] for c in day.combos}
+    scheds = {c["schedule"] for c in day.combos}
+    pols = {c["policy"] for c in day.combos}
+    assert len(plats) >= 2 and len(scheds) >= 3 and len(pols) >= 2
+    assert np.all(np.isfinite(day.objectives()))
+    assert np.all(day.time_to_empty_h > 0)
+    assert np.all(day.time_to_empty_h <= day.day_hours + 1e-9)
+    assert np.all(day.pod_hours > 0)
+    # unsupported placements were skipped, not silently evaluated
+    assert any(s["platform"] == "rayban_cam" for s in day.skipped)
+
+
+def test_day_front_is_exactly_non_dominated(day):
+    """Acceptance: the (tte, peak skin, pod-hours) front from the shared
+    blockwise filter equals the brute-force reference."""
+    objs = day.objectives().copy()
+    objs[:, 0] *= -1.0                    # time-to-empty is maximized
+    n = len(day)
+    brute = np.ones(n, bool)
+    for i in range(n):
+        for j in range(n):
+            if i != j and np.all(objs[j] <= objs[i]) \
+                    and np.any(objs[j] < objs[i]):
+                brute[i] = False
+                break
+    np.testing.assert_array_equal(day.front_mask, brute)
+    assert 1 <= day.front_mask.sum() < n
+
+
+def test_policy_only_differs_in_dynamics(day):
+    """steady_mw is policy-blind (the same design evaluates identically)
+    while the day objectives are not — the whole point of the module."""
+    key = lambda c: (c["platform"], c["design"], c["schedule"])  # noqa
+    groups = {}
+    for i, c in enumerate(day.combos):
+        groups.setdefault(key(c), []).append(i)
+    diverged = 0
+    for idx in groups.values():
+        steadies = {round(float(day.steady_mw[i]), 3) for i in idx}
+        assert len(steadies) == 1
+        if len({round(float(day.time_to_empty_h[i]), 3)
+                for i in idx}) > 1:
+            diverged += 1
+    assert diverged > 0
+    # the "none" policy never throttles
+    for i, c in enumerate(day.combos):
+        if c["policy"] == "none":
+            assert day.throttled_h[i] == 0.0
+
+
+def test_survives_day_and_cost_rows(day):
+    surv = dse.survives_day(day)
+    assert surv.shape == (len(day),) and surv.dtype == bool
+    # passing a report AND grid kwargs is a misuse, not a silent no-op
+    with pytest.raises(TypeError, match="one or the other"):
+        dse.survives_day(day, platforms=("rayban_cam",))
+    # a generous pack + light day survives; defaults on heavy days die
+    lite = dse.survives_day(
+        platforms=("rayban_cam",), designs=daysim.DEFAULT_DESIGNS[:1],
+        schedules=(DaySchedule("half_day", (
+            DaySegment("light", 3.0, active=0.2, upload_duty=0.3),)),),
+        policies=("none",), battery=BatterySpec("big", 4000.0),
+        dt_s=60.0)
+    assert bool(lite.all())
+    rows = day.front_rows()
+    assert rows and rows[0]["time_to_empty_h"] >= rows[-1]["time_to_empty_h"]
+    for r in rows:
+        assert r["usd"] > 0 and r["kgco2"] > 0
+        assert r["policy"] in daysim.policy_names()
+
+
+def test_throttling_flips_the_day_winner(day):
+    """Acceptance: for some (platform, schedule), the best time-to-empty
+    design point runs a throttling policy and strictly beats every
+    unthrottled point — invisible to any steady-state mW ranking."""
+    flipped = 0
+    for key in {(c["platform"], c["schedule"]) for c in day.combos}:
+        idx = [i for i, c in enumerate(day.combos)
+               if (c["platform"], c["schedule"]) == key]
+        none_best = max(day.time_to_empty_h[i] for i in idx
+                        if day.combos[i]["policy"] == "none")
+        win = max(idx, key=lambda i: day.time_to_empty_h[i])
+        if day.combos[win]["policy"] != "none" \
+                and day.time_to_empty_h[win] > none_best + 0.05:
+            flipped += 1
+    assert flipped > 0
+
+
+def test_steady_state_winner_loses_the_day(day):
+    """The Amdahl-over-time headline: some combo pair (same schedule and
+    policy) has strictly lower steady-state mW but strictly worse
+    time-to-empty."""
+    found = False
+    for i in range(len(day)):
+        for j in range(len(day)):
+            ci, cj = day.combos[i], day.combos[j]
+            if (ci["schedule"], ci["policy"]) != \
+                    (cj["schedule"], cj["policy"]):
+                continue
+            if day.steady_mw[i] < day.steady_mw[j] - 1.0 and \
+                    day.time_to_empty_h[i] < day.time_to_empty_h[j] - 0.05:
+                found = True
+        if found:
+            break
+    assert found

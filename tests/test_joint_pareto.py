@@ -133,13 +133,11 @@ def test_joint_matches_fleet_grid_rows(joint):
     """The vectorized pods pass agrees with the row-formatted fleet_grid
     on a stratified subset of the same ScenarioSet."""
     idx = list(range(0, len(joint), 191))
-    sub = joint.sset
-    rows = offload.fleet_grid(
-        type(sub)(sub.placement[idx], sub.compression[idx],
-                  sub.fps_scale[idx], sub.mcs_tier[idx],
-                  sub.upload_duty[idx], sub.brightness[idx],
-                  primitives=sub.primitives),
-        n_users=joint.n_users, duty=joint.duty)
+    rows = offload.fleet_grid(joint.sset.take(idx),
+                              n_users=joint.n_users, duty=joint.duty)
+    # take() treats boolean masks as masks, not as 0/1 indices
+    assert len(joint.sset.take(joint.front_mask)) == \
+        int(joint.front_mask.sum())
     for k, i in enumerate(idx):
         assert rows[k]["backend_pods"] == pytest.approx(
             joint.backend_pods[i], abs=0.06)
@@ -182,6 +180,70 @@ def test_joint_front_reflects_contention_tables(joint):
 
 
 # ---------------------------------------------------------------------------
+# upload_duty / brightness as first-class joint axes + the cost model
+# ---------------------------------------------------------------------------
+
+def test_joint_axes_upload_duty_and_brightness():
+    """The joint grid sweeps duty x brightness alongside the classic
+    axes; gating must cut both radio power and backend pods, and
+    brightness must cost device power on the display SKU."""
+    rep = dse.joint_pareto(platform="aria2_display",
+                           placements=((),), compressions=(8.0,),
+                           fps_scales=(1.0,), mcs_tiers=(1,),
+                           upload_duties=(0.4, 1.0),
+                           brightnesses=(0.0, 0.8))
+    assert len(rep) == 4
+    rows = {(r["upload_duty"], r["brightness"]): r
+            for r in (rep.row(i) for i in range(4))}
+    assert set(rows) == {(0.4, 0.0), (0.4, 0.8), (1.0, 0.0), (1.0, 0.8)}
+    # duty gates backend ingest linearly and saves radio power
+    assert rows[(0.4, 0.0)]["backend_pods"] == pytest.approx(
+        rows[(1.0, 0.0)]["backend_pods"] * 0.4, rel=1e-3)
+    assert rows[(0.4, 0.0)]["device_mw"] < rows[(1.0, 0.0)]["device_mw"]
+    # brightness costs device power, backend-neutral
+    assert rows[(1.0, 0.8)]["device_mw"] > rows[(1.0, 0.0)]["device_mw"]
+    assert rows[(1.0, 0.8)]["backend_pods"] == pytest.approx(
+        rows[(1.0, 0.0)]["backend_pods"], rel=1e-6)
+    assert rep.front_mask.sum() >= 1
+    # the gated low-brightness corner dominates the full-duty bright one
+    # on (power, pods) but loses uplink — all four can be on the front
+    assert np.all(np.isfinite(rep.objectives()))
+
+
+def test_cost_model_pods_to_money():
+    """pods -> pod-hours -> $ / kgCO2 (offload.pod_cost), scalar + array,
+    and the JointReport rows / co_optimize budget stated in money."""
+    c = offload.pod_cost(10.0)
+    assert c["usd"] == pytest.approx(
+        10.0 * offload.POD_CAPEX_USD_PER_HOUR
+        + 10.0 * offload.POD_POWER_KW * offload.USD_PER_KWH)
+    assert c["kgco2"] == pytest.approx(
+        10.0 * offload.POD_POWER_KW * offload.KGCO2_PER_KWH)
+    arr = offload.pod_cost(np.array([1.0, 2.0]))
+    assert arr["usd"][1] == pytest.approx(2 * arr["usd"][0])
+    assert offload.usd_per_pod_hour() > 0
+
+
+def test_co_optimize_usd_budget(joint):
+    """A dollar budget behaves exactly like the equivalent pod budget."""
+    r = joint.row(0)
+    assert r["usd_per_day"] == pytest.approx(
+        r["backend_pods"] * 24.0 * offload.usd_per_pod_hour(), rel=1e-3)
+    pods_mid = float(np.median(joint.backend_pods))
+    usd_mid = pods_mid * 24.0 * offload.usd_per_pod_hour()
+    by_usd = dse.co_optimize(joint, usd_budget_per_day=usd_mid)[
+        "min_power_under_usd_budget"]
+    by_pods = dse.co_optimize(joint, pod_budget=pods_mid)[
+        "min_power_under_pod_budget"]
+    assert by_usd is not None and by_usd["index"] == by_pods["index"]
+    assert dse.co_optimize(joint, usd_budget_per_day=0.0)[
+        "min_power_under_usd_budget"] is None
+    # cost columns ride on the day report too (see test_daysim.py rows)
+    usd = joint.cost_per_day()["usd"]
+    assert usd.shape == (len(joint),) and np.all(usd > 0)
+
+
+# ---------------------------------------------------------------------------
 # backend capacities come from dry-run artifacts, not fallbacks
 # ---------------------------------------------------------------------------
 
@@ -214,4 +276,5 @@ def test_bench_smoke_mode_runs_clean():
                          timeout=300)
     assert res.returncode == 0, res.stdout + res.stderr
     assert "joint_smoke" in res.stdout
+    assert "daysim_smoke" in res.stdout
     assert "ERROR" not in res.stdout

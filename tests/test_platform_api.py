@@ -252,6 +252,102 @@ def test_category_breakdown_sums_to_total(plat):
 
 
 # ---------------------------------------------------------------------------
+# Ray-Ban-class + puck-split SKUs, platform diffs / ablation helper
+# ---------------------------------------------------------------------------
+
+def test_rayban_cam_sku(plat):
+    """Camera-only SKU: pure registry data, ASR is the only on-device
+    primitive, and the dropped GS/ET streams vanish from the uplink."""
+    rb = aria2.rayban_cam_platform()
+    assert platform_registry.get("rayban_cam") is rb
+    assert set(rb.supported_primitives()) == {"asr"}
+    assert len(rb) < len(aria2.aria2_capture_only_platform()) < len(plat)
+    raw = dict(rb.raw_mbps)
+    assert raw["gs"] == raw["et"] == raw["gs_vio_share"] == 0.0
+    sset = ScenarioSet.build([{"on_device": ()}])
+    assert float(scenarios.total_mw(rb, sset)[0]) < \
+        float(scenarios.total_mw(aria2.aria2_capture_only_platform(),
+                                 sset)[0])
+    # uplink carries only the RGB + audio + telemetry streams
+    mbps = float(scenarios.offloaded_mbps(rb, sset)[0])
+    full = float(scenarios.offloaded_mbps(plat, sset)[0])
+    assert mbps < full / 3
+    with pytest.raises(ValueError, match="cannot run"):
+        scenarios.total_mw(rb, ScenarioSet.build([{"on_device": ("vio",)}]))
+    # JSON round-trip preserves the raw_mbps override
+    rebuilt = PlatformSpec.from_dict(json.loads(json.dumps(rb.to_dict())))
+    assert rebuilt == rb
+
+
+def test_puck_split_sku(plat):
+    """Glasses half of the puck split: no ML IPs, short-range-link
+    radio coefficients, cheaper at full offload than the baseline."""
+    puck = aria2.aria2_puck_split_platform()
+    assert platform_registry.get("aria2_puck_split") is puck
+    th = puck.theta_dict()
+    assert th["wifi_mw_per_mbps"] < plat.theta_dict()["wifi_mw_per_mbps"]
+    sset = ScenarioSet.build([{"on_device": ()}])
+    assert float(scenarios.total_mw(puck, sset)[0]) < \
+        float(scenarios.total_mw(plat, sset)[0])
+    assert "vio" not in puck.supported_primitives()
+
+
+def test_variant_raw_mbps_override_validated(plat):
+    with pytest.raises(KeyError, match="unknown raw streams"):
+        plat.variant("bad", raw_mbps={"not_a_stream": 1.0})
+    with pytest.raises(KeyError, match="unknown ip rates"):
+        plat.variant("bad", ip_rates={"npu_htt": 0.0})   # typo'd key
+    v = plat.variant("ok", raw_mbps={"et": 0.0})
+    assert dict(v.raw_mbps)["et"] == 0.0
+    assert dict(v.raw_mbps)["rgb"] == dict(plat.raw_mbps)["rgb"]
+
+
+def test_rayban_sheds_dropped_sensor_traffic(plat):
+    """The SKU's uplink carries no traffic from sensors it dropped:
+    one IMU (not two), no GNSS/mag/baro in the aux stream."""
+    raw = dict(aria2.rayban_cam_platform().raw_mbps)
+    base = dict(plat.raw_mbps)
+    assert raw["imu"] == pytest.approx(base["imu"] / 2)
+    assert raw["aux"] < base["aux"]
+
+
+def test_platform_diff(plat):
+    from repro.core.platform import diff
+
+    rb = aria2.rayban_cam_platform()
+    d = diff(plat, rb)
+    assert d["a"] == "aria2" and d["b"] == "rayban_cam"
+    assert "npu_ml" in d["dropped"] and "gs_camera_0" in d["dropped"]
+    assert d["added"] == []
+    assert "coproc_soc_base" in d["changed"]
+    assert d["raw_mbps"]["gs"][1] == 0.0
+    assert d["theta"] == {}
+    # identity diff is empty
+    d0 = diff(plat, plat)
+    assert not (d0["added"] or d0["dropped"] or d0["changed"]
+                or d0["theta"] or d0["raw_mbps"])
+    # theta-only variants show up in the theta section
+    puck = aria2.aria2_puck_split_platform()
+    assert "wifi_link_mw" in diff(plat, puck)["theta"]
+
+
+def test_platform_ablation_rows(plat):
+    from repro.core import dse
+
+    rows = dse.platform_ablation(
+        names=("aria2", "rayban_cam", "aria2_capture_only"),
+        on_device=("asr", "vio"))
+    assert [r["platform"] for r in rows] == \
+        ["aria2", "rayban_cam", "aria2_capture_only"]
+    assert rows[0]["delta_mw_vs_baseline"] == 0.0
+    assert rows[0]["on_device"] == "asr+vio"
+    # unsupported placements downshift instead of raising
+    assert rows[1]["on_device"] == "asr"
+    assert all(r["delta_mw_vs_baseline"] < 0 for r in rows[1:])
+    assert "npu_ml" in rows[1]["vs_baseline"]["dropped"]
+
+
+# ---------------------------------------------------------------------------
 # offload fleet sizing fallback (no dry-run artifacts)
 # ---------------------------------------------------------------------------
 
