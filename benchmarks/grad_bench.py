@@ -1,0 +1,208 @@
+"""Gradient design-core benchmark (core/design.py + the relaxed engines).
+
+Two claims are measured, both riding the unified DesignSpace pytree:
+
+1. POLICY: `dse.gradient_descend` (projected Adam, vmapped restarts,
+   straight-through trip comparisons through the day-scan) finds a
+   ThrottlePolicy with STRICTLY longer time-to-empty than the best
+   grid-searched policy of the PR-4 registry, at equal-or-lower peak
+   skin temperature — validated by re-simulating the hardened policy
+   with the exact (non-relaxed) integrator.
+
+2. CALIBRATION: `calibrate.fit_restarts_vmapped` (all restarts as ONE
+   vmapped lax.scan device program) beats the sequential per-restart
+   loop wall-clock at identical math.
+
+Emits results/benchmarks/BENCH_grad.json and returns (rows, derived)
+for benchmarks/run.py.
+
+BENCH_grad.json schema (one JSON object):
+  combo             obj   (platform, design, schedule) the policy bench
+                          optimizes over
+  tte_grid_h        float best hard time-to-empty among the registered
+                          (grid-searched) policies for that combo
+  peak_grid_c       float that grid winner's hard peak skin temp (the
+                          equal-peak cap handed to the optimizer)
+  grid_policy       str   name of the grid winner
+  tte_grad_h        float hard time-to-empty of the gradient-optimized
+                          policy (exact integrator, same combo)
+  peak_grad_c       float its hard peak skin (<= peak_grid_c + 1e-6)
+  tte_gain_h        float tte_grad_h - tte_grid_h (the acceptance gate
+                          requires > 0)
+  grad_policy       obj   the winning thresholds (trip/clear bands)
+  opt_s             float wall time of the whole optimize_policy call
+  fd_rel_err        float finite-difference relative error of the
+                          relaxed-engine gradient at the bench point
+                          (sanity tie-in to tests/test_design_grad.py)
+  calib_restarts    int   restarts in the calibration head-to-head
+  calib_steps       int   Adam steps per restart
+  calib_seq_s       float sequential per-restart loop wall time
+  calib_vmap_s      float vmapped ensemble wall time (post-warmup best)
+  calib_speedup     float calib_seq_s / calib_vmap_s — the regression
+                          gate metric (>20% drop fails benchmarks/run.py)
+  posterior         obj   per-coefficient {mean, std, best} from the
+                          ensemble (the theta posterior)
+
+    PYTHONPATH=src python benchmarks/grad_bench.py
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+
+BENCH_COMBO = ("aria2_display", 0, "field_day")   # design index 0
+CAND_POLICIES = ("none", "thermal_governor", "battery_saver")
+
+
+def _grid_winner(platform, design_row, schedule, dt_s):
+    """Best registered policy by hard time-to-empty (the PR-4 answer)."""
+    from repro.core import daysim
+    best = None
+    for name in CAND_POLICIES:
+        tr = daysim.simulate(platform, design_row, schedule, name,
+                             dt_s=dt_s)
+        row = (tr.summary["time_to_empty_h"], tr.summary["peak_skin_c"],
+               name)
+        if best is None or row[0] > best[0]:
+            best = row
+    return best
+
+
+def _fd_check():
+    """Tiny float32 finite-difference sanity on the relaxed engine."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import aria2, scenarios
+    plat = aria2.aria2_platform()
+    sset = scenarios.ScenarioSet.grid(placements=((), ("asr",)),
+                                      compressions=(8.0,),
+                                      fps_scales=(2.0,))
+    vec = scenarios.relax_vec(sset)
+
+    def f(c):
+        v = dict(vec)
+        v["compression"] = c
+        return jnp.sum(scenarios.total_mw_relaxed(plat, v))
+
+    c0 = vec["compression"]
+    g = float(jax.grad(f)(c0)[0])
+    eps = 0.5
+    e = jnp.zeros_like(c0).at[0].set(eps)
+    fd = float((f(c0 + e) - f(c0 - e)) / (2 * eps))
+    return abs(g - fd) / max(abs(fd), 1e-9)
+
+
+def run(calib_restarts: int = 8, calib_steps: int = 200,
+        n_repeats: int = 3):
+    import jax
+    from repro.core import calibrate, daysim, dse
+
+    plat, di, sched = BENCH_COMBO
+    design_row = daysim.DEFAULT_DESIGNS[di]
+    dt_s = 60.0
+
+    # -- policy: grid winner vs gradient-optimized ---------------------------
+    tte_grid, peak_grid, grid_name = _grid_winner(plat, design_row,
+                                                  sched, dt_s)
+    t0 = time.perf_counter()
+    opt = dse.optimize_policy(plat, design_row, sched, "battery_saver",
+                              peak_cap_c=peak_grid, n_restarts=6,
+                              steps=80, dt_s=dt_s)
+    opt_s = time.perf_counter() - t0
+    pol = opt["policy"]
+
+    # -- calibration: sequential loop vs vmapped restarts --------------------
+    # (both paths pre-warmed: the cached compiled runners make repeats
+    # measure the hot path, not XLA compilation)
+    z0s = calibrate.restart_starts(calib_restarts)
+    calibrate.fit_restarts_sequential(z0s, steps=calib_steps)    # warm
+    seq_s = min(
+        _timed(lambda: calibrate.fit_restarts_sequential(
+            z0s, steps=calib_steps))
+        for _ in range(n_repeats))
+    calibrate.fit_restarts_vmapped(z0s, steps=calib_steps)       # warm
+    vmap_s = min(
+        _timed(lambda: calibrate.fit_restarts_vmapped(
+            z0s, steps=calib_steps))
+        for _ in range(n_repeats))
+    ens = calibrate.fit_ensemble(calib_restarts, calib_steps)
+
+    result = {
+        "combo": {"platform": plat,
+                  "design": design_row.get("name", ""),
+                  "schedule": sched, "dt_s": dt_s},
+        "tte_grid_h": round(tte_grid, 3),
+        "peak_grid_c": round(peak_grid, 3),
+        "grid_policy": grid_name,
+        "tte_grad_h": round(opt["tte_h"], 3),
+        "peak_grad_c": round(opt["peak_skin_c"], 3),
+        "tte_gain_h": round(opt["tte_h"] - tte_grid, 3),
+        "grad_policy": {
+            "temp_trip_c": round(pol.temp_trip_c, 2),
+            "temp_clear_c": round(pol.temp_clear_c, 2),
+            "soc_trip": round(pol.soc_trip, 3),
+            "soc_clear": round(pol.soc_clear, 3)},
+        "opt_s": round(opt_s, 2),
+        "fd_rel_err": float(f"{_fd_check():.2e}"),
+        "calib_restarts": calib_restarts,
+        "calib_steps": calib_steps,
+        "calib_seq_s": round(seq_s, 3),
+        "calib_vmap_s": round(vmap_s, 3),
+        "calib_speedup": round(seq_s / vmap_s, 1),
+        "posterior": {k: {kk: round(vv, 4) for kk, vv in p.items()}
+                      for k, p in ens["posterior"].items()},
+    }
+    assert result["tte_gain_h"] > 0, \
+        f"gradient policy must beat the grid winner: {result}"
+    assert result["peak_grad_c"] <= result["peak_grid_c"] + 1e-6, result
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "BENCH_grad.json").write_text(json.dumps(result, indent=1))
+    derived = (f"tte {tte_grid:.2f}->{opt['tte_h']:.2f}h "
+               f"(+{result['tte_gain_h']:.2f}) at peak "
+               f"{result['peak_grad_c']:.1f}<= {peak_grid:.1f}C "
+               f"calib_speedup={result['calib_speedup']}x")
+    return [result], derived
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def smoke():
+    """Tiny gradient pass: 2 restarts x a handful of Adam steps through
+    the relaxed day-scan + a 2-restart vmapped calibration — exercises
+    DesignSpace -> relaxed engine -> STE scan -> projected Adam inside
+    the tier-1 time budget.  Writes nothing."""
+    import numpy as np
+    from repro.core import calibrate, daysim, dse
+
+    sched = daysim.DaySchedule("grad_smoke_day", (
+        daysim.DaySegment("hot", 1.0, ambient_c=36.0, active=1.0,
+                          upload_duty=0.8, brightness=0.5),
+        daysim.DaySegment("cool", 1.0, ambient_c=24.0, active=0.6,
+                          upload_duty=0.4, brightness=0.1,
+                          charge_mw=900.0),
+    ))
+    opt = dse.optimize_policy("aria2_display", daysim.DEFAULT_DESIGNS[0],
+                              sched, "thermal_governor", n_restarts=2,
+                              steps=10, dt_s=120.0)
+    assert np.isfinite(opt["tte_h"]) and np.isfinite(opt["peak_skin_c"])
+    z0s = calibrate.restart_starts(2)
+    _, losses = calibrate.fit_restarts_vmapped(z0s, steps=8)
+    assert np.all(np.isfinite(losses)) and losses.shape == (2,)
+    return [], (f"opt_tte={opt['tte_h']:.2f}h gain={opt['gain_h']:+.2f}h "
+                f"calib_losses_ok")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    rows, derived = run()
+    print((OUT / "BENCH_grad.json").read_text())
+    print(derived)

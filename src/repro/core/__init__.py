@@ -22,18 +22,39 @@ cheaply.  The core is organised around two abstractions:
     loads, totals, PD losses and uplink rates for the whole batch; it is
     `jax.grad`-able in theta (calibration, sensitivity).
 
+`design.DesignSpace` — the unified differentiable design core
+    Every knob — placement logits, compression, fps, duty, brightness,
+    throttle trip/clear bands, theta — is a declared `Knob` leaf with
+    bounds and a discrete/continuous tag; design points are plain jax
+    pytrees.  Discrete structure carries smooth relaxations (sigmoid /
+    softmax placement+MCS, straight-through throttle comparisons,
+    `take_linear` level tables), so `jax.grad` flows end to end through
+    `scenarios.evaluate_relaxed` AND the daysim scan.  On top:
+    `dse.gradient_descend` (projected Adam, vmapped restarts),
+    `dse.sensitivity_map` (per-scenario d mW/d knob grids in one vjp),
+    `dse.optimize_policy` (throttle thresholds through the day-scan)
+    and `calibrate.fit_ensemble` (vmapped multi-restart theta
+    posterior).  The int-indexed engines remain as parity oracles.
+
 Built on top:
     dse.py        — placement/compression/grid sweeps, sensitivity,
                     Pareto fronts; every sweep is one batched call.
                     `day_pareto`/`survives_day` lift the day-level
-                    objectives into the same non-dominated machinery.
-    daysim.py     — day-in-the-life simulator: `DaySchedule` segments +
+                    objectives into the same non-dominated machinery;
+                    `gradient_descend`/`sensitivity_map`/
+                    `optimize_policy` are the gradient engines.
+    daysim.py     — day-in-the-life simulator: `DaySchedule` segments
+                    (incl. dock/pocket `charge_mw` top-ups) +
                     `ThrottlePolicy` hysteresis integrated through one
                     vmapped `jax.lax.scan` (nonlinear battery SoC,
-                    2-node thermal RC) -> time-to-empty, peak skin
-                    temperature, backend pod-hours.
+                    thermal RC, latched thermal shutdown); split SKUs
+                    carry a true two-node glasses+puck state (each its
+                    own battery/thermal, coupled by the link) in the
+                    same scan -> time-to-empty, peak skin temperature,
+                    backend pod-hours.
     calibrate.py  — fits theta to the paper's aggregates by Adam through
-                    the batched evaluator.
+                    the batched evaluator; vmapped multi-restart
+                    ensemble + `queue_mw_per_duty` trace calibration.
     offload.py    — maps offloaded streams to backend pod fleets
                     (`fleet_grid` sizes a whole ScenarioSet at once);
                     `pod_cost` turns pod-hours into $ and kgCO2.
@@ -50,6 +71,7 @@ Migrating from the legacy single-`Scenario` API:
     the pre-redesign dict implementation survives as `aria2.legacy_*`
     only as a parity oracle and benchmark baseline.
 """
+from .design import DesignSpace, Knob  # noqa: F401
 from .platform import (PRIMITIVES, ComponentSpec, LoadRule,  # noqa: F401
                        PlatformSpec)
 from .scenarios import BatchReport, ScenarioSet  # noqa: F401

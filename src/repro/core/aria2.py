@@ -67,7 +67,10 @@ THETA0 = {
     "codec_mw_per_rawmbps": 0.085,  # H265 energy per raw pixel rate
     "dram_mw_per_mbps": 0.10,
     "queue_mw_per_duty": 40.0,    # active-clock overhead per unit of
-                                  # sim duty (NPU/DSP/DRAM-bus contention)
+                                  # sim duty (NPU/DSP/DRAM-bus contention);
+                                  # pre-fit nominal — calibrated.json
+                                  # carries the trace-fitted value
+                                  # (calibrate.fit_queue_coeff)
     "eff_scale": 1.0,             # global PD-efficiency adjustment
 }
 
@@ -356,7 +359,23 @@ def aria2_puck_split_platform() -> PlatformSpec:
         "aria2_puck_split",
         drop=("npu_ml", "hwa_vio6dof", "wifi_fem"),
         replace=(_spec_for("coproc_soc_base", "const", {"mw": 52.0}),),
-        theta={"wifi_mw_per_mbps": 3.2, "wifi_link_mw": 24.0})
+        theta={"wifi_mw_per_mbps": 3.2, "wifi_link_mw": 24.0},
+        # the pocket host half of the split, as registry data: daysim
+        # carries it as a second battery/thermal node in the SAME scan,
+        # coupled by the short-range link (its WAN radio re-transmits
+        # the glasses' offloaded Mbps at phone-class energy/bit)
+        companion={
+            "base_mw": 210.0,            # host SoC + relay compute
+            "wan_link_mw": 95.0,         # WAN radio link maintenance
+            "wan_mw_per_mbps": 9.0,      # WAN energy/bit (MCS8-class)
+            "standby_mw": 18.0,
+            "battery_mwh": 5600.0,       # pocket-scale pack
+            "r_internal_ohm": 0.12,
+            "c_soc_j_per_k": 42.0,       # bigger mass, pocket-coupled
+            "c_skin_j_per_k": 210.0,
+            "r_soc_skin_k_per_w": 4.5,
+            "r_skin_amb_k_per_w": 8.0,
+        })
     return register(spec)
 
 

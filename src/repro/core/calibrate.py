@@ -8,6 +8,22 @@ efficiency) by gradient descent — the batched scenario engine
 ALL target scenarios in one vmapped forward/backward pass instead of a
 Python loop over placements.
 
+Calibration is a `design.DesignSpace` citizen like every other knob set:
+`theta_space()` declares the coefficient bounds as Knob leaves, and
+`fit_ensemble` runs a *vmapped multi-restart* fit — R perturbed starts
+through one `jax.vmap`-batched Adam/`lax.scan` loop (a single device
+program instead of R sequential fits; `benchmarks/grad_bench.py` times
+the speedup) — returning a theta ENSEMBLE with a loss-weighted
+posterior (mean/std per coefficient) instead of a single point
+estimate.  The sequential `fit()` loop survives as the wall-clock
+baseline and parity path.
+
+`fit_queue_coeff` calibrates the queueing contention coefficient
+`queue_mw_per_duty` against a synthetic latency/power trace (duty
+operating points sampled from the taskgraph-sim tables, contention
+power with a mild queueing nonlinearity + measurement noise) instead of
+the historical nominal 40 mW/duty.
+
 Fitted values land in calibrated.json (loaded by aria2 at import); the
 benchmark reports show model-vs-paper residuals.
 """
@@ -20,8 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import aria2, scenarios
+from . import aria2, design, scenarios
 from .aria2 import PRIMITIVES, Scenario
+from .design import DesignSpace, Knob
 from .scenarios import ScenarioSet
 
 # paper targets: scenario -> delta vs full-offload (% of full-offload total)
@@ -80,8 +97,10 @@ def _pack(theta):
     return jnp.array(z)
 
 
-def loss_fn(z):
+def loss_fn(z, extra_theta: dict | None = None):
     th = _unpack(z)
+    if extra_theta:
+        th = {**extra_theta, **th}
     plat = aria2.aria2_platform()
     rep = scenarios.evaluate(plat, _target_set(), th)
     totals = rep.total_mw
@@ -94,21 +113,231 @@ def loss_fn(z):
     return loss
 
 
-def fit(steps: int = 600, lr: float = 0.05, verbose: bool = True):
+def theta_space() -> DesignSpace:
+    """The calibration coefficients as DesignSpace knobs (bounds from
+    BOUNDS) — theta is a design leaf like any other."""
+    return DesignSpace(tuple(
+        Knob(k, *BOUNDS[k], design.CONTINUOUS, (),
+             "physical coefficient (calibrate.BOUNDS)")
+        for k in FIT_KEYS))
+
+
+def fit(steps: int = 600, lr: float = 0.05, verbose: bool = True,
+        extra_theta: dict | None = None):
+    """Single-start sequential Adam fit (the pre-ensemble path; kept as
+    the wall-clock baseline `fit_ensemble` is benchmarked against).
+
+    Shares the design-core optimizer step (`design.adam_update`) with
+    every other fit in this module."""
     z = _pack(aria2.THETA0)
-    val_grad = jax.jit(jax.value_and_grad(loss_fn))
-    m = jnp.zeros_like(z)
-    v = jnp.zeros_like(z)
+    val_grad = jax.jit(jax.value_and_grad(
+        lambda zz: loss_fn(zz, extra_theta)))
+    pt, state = {"z": z}, design.adam_init({"z": z})
     for t in range(1, steps + 1):
-        val, g = val_grad(z)
-        m = 0.9 * m + 0.1 * g
-        v = 0.999 * v + 0.001 * g * g
-        z = z - lr * (m / (1 - 0.9 ** t)) / (
-            jnp.sqrt(v / (1 - 0.999 ** t)) + 1e-8)
+        val, g = val_grad(pt["z"])
+        pt, state = design.adam_update(pt, {"z": g}, state, lr)
         if verbose and (t % 150 == 0 or t == 1):
             print(f"step {t:4d} loss {float(val):9.4f}")
-    theta = {k: float(v) for k, v in _unpack(z).items()}
-    return theta, float(loss_fn(z))
+    theta = {k: float(v) for k, v in _unpack(pt["z"]).items()}
+    return theta, float(loss_fn(pt["z"], extra_theta))
+
+
+# ---------------------------------------------------------------------------
+# vmapped multi-restart ensemble fit (theta posterior)
+# ---------------------------------------------------------------------------
+
+def _adam_scan(z0, steps: int, lr: float, extra_theta: dict | None = None,
+               loss=None):
+    """Whole Adam trajectory as ONE lax.scan (jit/vmap-able), on the
+    shared design-core optimizer step."""
+    fn = loss or (lambda zz: loss_fn(zz, extra_theta))
+    vg = jax.value_and_grad(fn)
+
+    def step(carry, _):
+        pt, st = carry
+        val, g = vg(pt["z"])
+        pt, st = design.adam_update(pt, {"z": g}, st, lr)
+        return (pt, st), val
+
+    pt0 = {"z": z0}
+    (pt, _), _ = jax.lax.scan(step, (pt0, design.adam_init(pt0)),
+                              None, length=steps)
+    return pt["z"], fn(pt["z"])
+
+
+def restart_starts(n_restarts: int, seed: int = 0,
+                   spread: float = 1.2) -> jnp.ndarray:
+    """(R, D) packed start points: THETA0 plus gaussian logit jitter
+    (restart 0 is the unperturbed THETA0 pack)."""
+    z0 = _pack(aria2.THETA0)
+    noise = spread * jax.random.normal(
+        jax.random.key(seed), (n_restarts, z0.shape[0]), z0.dtype)
+    return z0[None, :] + noise.at[0].set(0.0)
+
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=16)
+def _compiled_runner(steps: int, lr: float, extra_key: tuple | None,
+                     vmapped: bool):
+    """Compiled Adam trajectory runner, cached so repeated calls (and
+    benchmark repeats) pay compilation once."""
+    extra = dict(extra_key) if extra_key else None
+    one = lambda z: _adam_scan(z, steps, lr, extra)          # noqa: E731
+    return jax.jit(jax.vmap(one) if vmapped else one)
+
+
+def _extra_key(extra_theta: dict | None) -> tuple | None:
+    return (tuple(sorted((k, float(v)) for k, v in extra_theta.items()))
+            if extra_theta else None)
+
+
+def fit_restarts_sequential(z0s, steps: int = 300, lr: float = 0.05,
+                            extra_theta: dict | None = None):
+    """Python loop over restarts — the wall-clock baseline."""
+    run = _compiled_runner(steps, lr, _extra_key(extra_theta), False)
+    zs, losses = [], []
+    for i in range(z0s.shape[0]):
+        z, ls = run(z0s[i])
+        zs.append(jax.block_until_ready(z))
+        losses.append(float(ls))
+    return jnp.stack(zs), np.asarray(losses)
+
+
+def fit_restarts_vmapped(z0s, steps: int = 300, lr: float = 0.05,
+                         extra_theta: dict | None = None):
+    """All restarts as ONE vmapped device program."""
+    run = _compiled_runner(steps, lr, _extra_key(extra_theta), True)
+    zs, losses = run(z0s)
+    return jax.block_until_ready(zs), np.asarray(losses)
+
+
+def fit_ensemble(n_restarts: int = 8, steps: int = 300, lr: float = 0.05,
+                 seed: int = 0, spread: float = 1.2,
+                 extra_theta: dict | None = None,
+                 temperature: float = 2.0) -> dict:
+    """Vmapped multi-restart calibration with a theta posterior.
+
+    Returns {"thetas": [R dicts], "losses": (R,), "best": best theta,
+    "posterior": {coeff: {"mean", "std", "best"}}, ...}.  The posterior
+    weights restarts by softmax(-loss / temperature): restarts that
+    explain the paper targets equally well but land on different
+    coefficients widen the std — exactly the identifiability signal a
+    single point fit hides."""
+    z0s = restart_starts(n_restarts, seed, spread)
+    zs, losses = fit_restarts_vmapped(z0s, steps, lr, extra_theta)
+    thetas = [{k: float(v) for k, v in _unpack(zs[i]).items()}
+              for i in range(n_restarts)]
+    w = np.exp(-(losses - losses.min()) / temperature)
+    w = w / w.sum()
+    best_i = int(np.argmin(losses))
+    posterior = {}
+    for k in FIT_KEYS:
+        vals = np.asarray([t[k] for t in thetas])
+        mean = float((w * vals).sum())
+        posterior[k] = {
+            "mean": mean,
+            "std": float(np.sqrt((w * (vals - mean) ** 2).sum())),
+            "best": float(vals[best_i]),
+        }
+    return {"thetas": thetas, "losses": losses, "weights": w,
+            "best": thetas[best_i], "best_loss": float(losses[best_i]),
+            "posterior": posterior, "n_restarts": n_restarts,
+            "steps": steps}
+
+
+# ---------------------------------------------------------------------------
+# queue_mw_per_duty: fit against a synthetic latency/power trace
+# ---------------------------------------------------------------------------
+
+QUEUE_TRACE_SEED = 11
+QUEUE_TRUE_MW_PER_DUTY = 47.0   # ground truth of the trace generator
+QUEUE_BOUNDS = (10.0, 120.0)
+
+
+def synth_queue_trace(n: int = 240, seed: int = QUEUE_TRACE_SEED) -> dict:
+    """Synthetic contention telemetry: duty operating points sampled
+    from the platform's taskgraph-sim duty tables (every placement mask
+    x several frame rates), with "measured" extra power
+
+        P = q_true * duty_total + 1.8 * duty_total^2 + N(0, 2.5)  [mW]
+
+    and an M/M/1-flavored latency column (duty/(1-duty)) — the kind of
+    latency/power trace a powermon + scheduler timestamp capture yields.
+    The trace is measured AT THE BATTERY (delivered power, like a real
+    fuel-gauge capture); the mild quadratic term and the noise are
+    deliberately NOT in the linear model being fitted, so the fit must
+    find the best linear explanation rather than read back an oracle
+    constant."""
+    rng = np.random.RandomState(seed)
+    plat = aria2.aria2_platform()
+    tabs = {r: np.asarray(plat.duty_table(r, 0.0))
+            for r in ("npu", "dsp", "dram_bus")}
+    n_masks = 1 << len(plat.primitives)
+    masks = rng.randint(0, n_masks, n)
+    fps = rng.choice([1.0, 2.0, 4.0, 8.0], n)
+    # the engine's duty loading: npu and dram contention amortize with
+    # frame rate, dsp does not (scenarios.LOAD_KINDS)
+    duty_total = (tabs["npu"][masks] / fps + tabs["dsp"][masks]
+                  + tabs["dram_bus"][masks] / fps)
+    extra_mw = (QUEUE_TRUE_MW_PER_DUTY * duty_total
+                + 1.8 * duty_total ** 2
+                + rng.normal(0.0, 2.5, n))
+    util = np.clip(duty_total / duty_total.max(), 0.0, 0.97)
+    return {"mask": masks, "fps": fps, "duty_total": duty_total,
+            "extra_mw": extra_mw,
+            "latency_ms": 4.0 * util / (1.0 - util)}
+
+
+def fit_queue_coeff(trace: dict | None = None, steps: int = 200,
+                    lr: float = 0.2) -> dict:
+    """Fit queue_mw_per_duty to the trace THROUGH the batched engine.
+
+    For every trace point the model's contention power is evaluated as
+    total_mw(q) - total_mw(q=0) via `scenarios.evaluate` (so the fit
+    exercises exactly the terms the engine applies, including the
+    per-resource fps amortization AND the rail-efficiency division), and
+    q minimizes the mean squared residual by the shared `_adam_scan`
+    trajectory.  The sampled trace repeats operating points, so the
+    engine sees only the `ScenarioSet.dedupe` unique rows, scattered
+    back to trace order with the inverse indices.  Because the trace is
+    battery-side, the fitted load-side coefficient comes out ~= trace
+    slope x rail efficiency (~0.78) — the engine-aware correction a
+    naive linear readback of the trace (which produced the historical
+    40 mW/duty nominal) silently skips."""
+    trace = trace or synth_queue_trace()
+    plat = aria2.aria2_platform()
+    prim = plat.primitives
+    rows = [{"on_device": tuple(p for j, p in enumerate(prim)
+                                if m >> j & 1),
+             "fps_scale": float(f), "compression": 10.0}
+            for m, f in zip(trace["mask"], trace["fps"])]
+    full = ScenarioSet.build(rows, primitives=prim)
+    sset, inverse = full.dedupe()       # trace repeats operating points
+    inv = jnp.asarray(inverse)
+    target = jnp.asarray(trace["extra_mw"], jnp.float32)
+    lo, hi = QUEUE_BOUNDS
+
+    def q_of(z):
+        return lo + (hi - lo) * jax.nn.sigmoid(z)
+
+    # the q=0 baseline is z-independent: evaluate once, close over it
+    off = scenarios.total_mw(plat, sset,
+                             {"queue_mw_per_duty": jnp.zeros(())})
+
+    def mse(z):
+        q = q_of(z)
+        on = scenarios.total_mw(plat, sset, {"queue_mw_per_duty": q})
+        return jnp.mean(((on - off)[inv] - target) ** 2)
+
+    z, final = jax.jit(lambda z0: _adam_scan(z0, steps, lr,
+                                             loss=mse))(jnp.zeros(()))
+    q = float(q_of(z))
+    return {"queue_mw_per_duty": q, "mse": float(final),
+            "n_points": len(rows), "n_unique_rows": len(sset),
+            "nominal": float(aria2.THETA0["queue_mw_per_duty"]),
+            "trace_true": QUEUE_TRUE_MW_PER_DUTY}
 
 
 def report(theta=None):
@@ -126,10 +355,21 @@ def report(theta=None):
             "pd_share": round(pd, 4), "pd_target": PAPER_PD_SHARE}
 
 
-def main():
-    theta, final = fit()
+def main(n_restarts: int = 8, steps: int = 600):
+    # 1. queueing contention coefficient from the synthetic trace
+    qfit = fit_queue_coeff()
+    q = {"queue_mw_per_duty": qfit["queue_mw_per_duty"]}
+    print(f"queue_mw_per_duty: nominal {qfit['nominal']:.1f} -> fitted "
+          f"{q['queue_mw_per_duty']:.2f} (trace truth "
+          f"{qfit['trace_true']:.1f}, mse {qfit['mse']:.2f})")
+    # 2. vmapped multi-restart fit of the paper coefficients on top
+    ens = fit_ensemble(n_restarts=n_restarts, steps=steps, extra_theta=q)
+    theta = {**ens["best"], **q}
     CAL_PATH.write_text(json.dumps(theta, indent=1))
-    print(f"final loss {final:.4f} -> {CAL_PATH}")
+    print(f"best of {n_restarts} restarts: loss "
+          f"{ens['best_loss']:.4f} -> {CAL_PATH}")
+    print(json.dumps({k: {kk: round(vv, 3) for kk, vv in p.items()}
+                      for k, p in ens["posterior"].items()}, indent=1))
     print(json.dumps(report(theta), indent=1))
 
 

@@ -50,12 +50,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import offload, scenarios
+from . import design, offload, scenarios
+from .design import ste_gt, ste_lt, take_linear
 from .platform import PlatformSpec
 from .scenarios import DEFAULT_MCS, ScenarioSet
 
 DEFAULT_DT_S = 10.0             # integrator step (s)
 DEFAULT_STANDBY_MW = 45.0       # deep-idle draw between capture bursts
+DEFAULT_SHUTDOWN_C = 46.0       # skin temp that hard-bricks the device
+STE_BETA_C = 2.0                # thermal trip surrogate sharpness (1/K)
+STE_BETA_SOC = 60.0             # SoC trip surrogate sharpness (1/SoC)
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +156,52 @@ def battery_for(platform_name: str) -> BatterySpec:
     return BATTERIES.get(platform_name, BATTERIES["default"])
 
 
+@dataclass(frozen=True)
+class PuckSpec:
+    """Pocket-host node of a split SKU: its own battery and thermal RC,
+    coupled to the glasses by the short-range link.
+
+    The puck's load is `base_mw + wan_link_mw + wan_mw_per_mbps x
+    (glasses offloaded Mbps)` while capturing — it relays everything
+    the glasses stream over its own WAN radio — and `standby_mw`
+    otherwise.  Built from `PlatformSpec.companion` registry data
+    (`puck_for`), so split SKUs stay declarative."""
+    name: str
+    base_mw: float
+    wan_link_mw: float
+    wan_mw_per_mbps: float
+    standby_mw: float
+    battery: BatterySpec
+    thermal: ThermalSpec
+
+    def level_mw(self, mbps):
+        """Active puck power for a (level, segment) uplink-rate table."""
+        return self.base_mw + self.wan_link_mw + self.wan_mw_per_mbps * mbps
+
+
+def puck_for(plat: PlatformSpec) -> PuckSpec | None:
+    """PuckSpec from the platform's companion data (None = single-node)."""
+    c = plat.companion_dict()
+    if not c:
+        return None
+    name = f"{plat.name}_puck"
+    return PuckSpec(
+        name=name,
+        base_mw=float(c["base_mw"]),
+        wan_link_mw=float(c.get("wan_link_mw", 0.0)),
+        wan_mw_per_mbps=float(c.get("wan_mw_per_mbps", 0.0)),
+        standby_mw=float(c.get("standby_mw", 0.0)),
+        battery=BatterySpec(
+            f"{name}_cell", float(c["battery_mwh"]),
+            r_internal_ohm=float(c.get("r_internal_ohm", 0.15))),
+        thermal=ThermalSpec(
+            f"{name}_thermal",
+            c_soc_j_per_k=float(c.get("c_soc_j_per_k", 40.0)),
+            c_skin_j_per_k=float(c.get("c_skin_j_per_k", 200.0)),
+            r_soc_skin_k_per_w=float(c.get("r_soc_skin_k_per_w", 4.5)),
+            r_skin_amb_k_per_w=float(c.get("r_skin_amb_k_per_w", 8.0))))
+
+
 # ---------------------------------------------------------------------------
 # schedules: timed segments binding scenario knob overrides
 # ---------------------------------------------------------------------------
@@ -163,17 +213,26 @@ class DaySegment:
     `active` is the capture duty inside the segment (fraction of time the
     sensing pipeline runs vs deep standby); `upload_duty` is the
     VAD/saliency uplink gating *while* capturing; `brightness` drives
-    display SKUs (inert elsewhere)."""
+    display SKUs (inert elsewhere); `charge_mw` is dock/pocket top-up
+    power flowing INTO the cell during the segment (a desk dock, a
+    pocket battery case) — SoC can rise, capped at 1.  Charge flows
+    regardless of load state, so any nonzero charge revives a dead
+    device the next step (a trickle below the standby draw yields the
+    real-world boot-loop: alternating dead/alive steps)."""
     name: str
     hours: float
     ambient_c: float = 24.0
     active: float = 1.0
     upload_duty: float = 1.0
     brightness: float = 0.0
+    charge_mw: float = 0.0
 
     def __post_init__(self):
         if self.hours <= 0:
             raise ValueError(f"segment {self.name!r}: hours must be > 0")
+        if self.charge_mw < 0:
+            raise ValueError(f"segment {self.name!r}: charge_mw must "
+                             f"be >= 0")
         for k in ("active", "upload_duty", "brightness"):
             v = getattr(self, k)
             if not 0.0 <= v <= 1.0:
@@ -184,13 +243,15 @@ class DaySegment:
         return {"name": self.name, "hours": self.hours,
                 "ambient_c": self.ambient_c, "active": self.active,
                 "upload_duty": self.upload_duty,
-                "brightness": self.brightness}
+                "brightness": self.brightness,
+                "charge_mw": self.charge_mw}
 
     @classmethod
     def from_dict(cls, d: dict) -> "DaySegment":
         return cls(d["name"], float(d["hours"]), float(d["ambient_c"]),
                    float(d["active"]), float(d["upload_duty"]),
-                   float(d["brightness"]))
+                   float(d["brightness"]),
+                   float(d.get("charge_mw", 0.0)))
 
 
 @dataclass(frozen=True)
@@ -387,6 +448,23 @@ register_schedule(DaySchedule("desk_day", (
                upload_duty=0.25, brightness=0.10),
 )))
 
+# commuter day with dock top-ups: the glasses sit on a desk dock during
+# office blocks (charge_mw flows INTO the cell while still capturing)
+register_schedule(DaySchedule("commuter_dock", (
+    DaySegment("commute_am", 1.0, ambient_c=28.0, active=0.9,
+               upload_duty=0.5, brightness=0.30),
+    DaySegment("office_am_dock", 3.5, ambient_c=24.0, active=0.55,
+               upload_duty=0.30, brightness=0.15, charge_mw=1600.0),
+    DaySegment("lunch_conversation", 1.0, ambient_c=26.0, active=1.0,
+               upload_duty=0.85, brightness=0.20),
+    DaySegment("office_pm_dock", 3.0, ambient_c=24.0, active=0.55,
+               upload_duty=0.30, brightness=0.15, charge_mw=1600.0),
+    DaySegment("commute_pm", 1.0, ambient_c=30.0, active=0.9,
+               upload_duty=0.5, brightness=0.30),
+    DaySegment("evening", 2.5, ambient_c=23.0, active=0.4,
+               upload_duty=0.30, brightness=0.40),
+)))
+
 # -- built-in policies -------------------------------------------------------
 
 register_policy(ThrottlePolicy("none", actions=()))
@@ -442,59 +520,109 @@ def _design_row(design: dict, seg: DaySegment,
 # the scanned integrator
 # ---------------------------------------------------------------------------
 
+def _node_step(soc, t_soc, t_skin, p_mw, charge_mw, amb, pre, const):
+    """One battery + thermal-RC Euler step for one node (`pre` prefixes
+    the node's const keys: "" = glasses, "p_" = puck)."""
+    v = (const[pre + "v_full"] - const[pre + "sag_v"] * (1.0 - soc)
+         - const[pre + "knee_v"]
+         * jnp.exp(-const[pre + "knee_sharp"] * soc))
+    i_a = p_mw * 1e-3 / v
+    loss_mw = i_a * i_a * const[pre + "r_ohm"] * 1e3
+    drain_mw = p_mw + loss_mw
+    soc_n = jnp.minimum(jnp.maximum(
+        soc - drain_mw * const[pre + "dsoc_coeff"]
+        + charge_mw * const[pre + "dsoc_coeff"], 0.0), 1.0)
+
+    heat_w = drain_mw * 1e-3
+    flow = (t_soc - t_skin) * const[pre + "g_soc_skin"]
+    t_soc_n = t_soc + (heat_w - flow) * const[pre + "dt_c_soc"]
+    t_skin_n = t_skin + (flow - (t_skin - amb)
+                         * const[pre + "g_skin_amb"]) \
+        * const[pre + "dt_c_skin"]
+    return soc_n, t_soc_n, t_skin_n, drain_mw
+
+
 def _step_math(carry, x, const):
-    """One Euler step; shared (symbolically) by the jax scan and the
-    pure-Python reference below — keep the op order in lockstep with
-    `reference_integrate` or the parity test will catch you."""
-    soc, t_soc, t_skin, th_state, soc_state = carry
-    mw_row, pods_row, amult_row, amb, active, valid = x
+    """One Euler step over BOTH nodes (glasses + optional puck); shared
+    (symbolically) by the jax scan and the pure-Python reference below —
+    keep the op order in lockstep with `reference_integrate` or the
+    parity test will catch you.
+
+    The throttle trip comparisons are straight-through estimators
+    (`design.ste_gt`/`ste_lt`): forward values are the exact hard
+    comparisons, so dynamics are bit-identical to the reference, while
+    the backward pass carries sigmoid surrogate gradients into the
+    trip/clear thresholds.  Level-indexed tables go through
+    `take_linear`, which is exact at the integer levels the forward
+    pass produces and hands the level a `table[l+1]-table[l]`
+    (sub)gradient."""
+    (soc, soc_p, t_soc, t_skin, t_soc_p, t_skin_p,
+     th_state, soc_state, shut) = carry
 
     # hysteresis triggers evaluate on the *previous* step's state
-    th_state = jnp.where(t_skin > const["temp_trip"], 1.0,
-                         jnp.where(t_skin < const["temp_clear"],
-                                   0.0, th_state))
-    soc_state = jnp.where(soc < const["soc_trip"], 1.0,
-                          jnp.where(soc > const["soc_clear"],
-                                    0.0, soc_state))
-    level = jnp.minimum(th_state + soc_state,
-                        const["max_level"]).astype(jnp.int32)
+    trip_t = ste_gt(t_skin, const["temp_trip"], const["ste_beta_c"])
+    clear_t = ste_lt(t_skin, const["temp_clear"], const["ste_beta_c"])
+    th_state = trip_t + (1.0 - trip_t) * (1.0 - clear_t) * th_state
+    soc_eff = jnp.minimum(soc, soc_p)
+    trip_s = ste_lt(soc_eff, const["soc_trip"], const["ste_beta_soc"])
+    clear_s = ste_gt(soc_eff, const["soc_clear"], const["ste_beta_soc"])
+    soc_state = trip_s + (1.0 - trip_s) * (1.0 - clear_s) * soc_state
+    level_f = jnp.minimum(th_state + soc_state, const["max_level"])
 
-    alive = jnp.where(soc > 0.0, 1.0, 0.0) * valid
-    act = active * jnp.take(amult_row, level)
-    p_mw = (act * jnp.take(mw_row, level)
+    # thermal shutdown: latched hard kill (a constraint, not an
+    # optimization surface — no STE); EITHER node overheating bricks
+    # the device, mirroring the either-node-emptying SoC rule
+    shut = jnp.maximum(shut, jnp.where(t_skin > const["shutdown_c"],
+                                       1.0, 0.0))
+    shut = jnp.maximum(shut, jnp.where(t_skin_p > const["shutdown_c"],
+                                       1.0, 0.0) * const["has_puck"])
+
+    alive = (jnp.where(soc > 0.0, 1.0, 0.0)
+             * jnp.where(soc_p > 0.0, 1.0, 0.0)
+             * (1.0 - shut) * x["valid"])
+    act = x["active"] * take_linear(x["amult"], level_f)
+    p_mw = (act * take_linear(x["mw"], level_f)
             + (1.0 - act) * const["standby_mw"]) * alive
-    v = (const["v_full"] - const["sag_v"] * (1.0 - soc)
-         - const["knee_v"] * jnp.exp(-const["knee_sharp"] * soc))
-    i_a = p_mw * jnp.float32(1e-3) / v
-    loss_mw = i_a * i_a * const["r_ohm"] * jnp.float32(1e3)
-    drain_mw = p_mw + loss_mw
-    soc_n = jnp.maximum(soc - drain_mw * const["dsoc_coeff"], 0.0)
+    p_p_mw = (act * take_linear(x["mw_p"], level_f)
+              + (1.0 - act) * const["p_standby_mw"]) * alive \
+        * const["has_puck"]
 
-    heat_w = drain_mw * jnp.float32(1e-3)
-    flow = (t_soc - t_skin) * const["g_soc_skin"]
-    t_soc_n = t_soc + (heat_w - flow) * const["dt_c_soc"]
-    t_skin_n = t_skin + (flow - (t_skin - amb)
-                         * const["g_skin_amb"]) * const["dt_c_skin"]
+    soc_n, t_soc_n, t_skin_n, drain_mw = _node_step(
+        soc, t_soc, t_skin, p_mw, x["charge"], x["amb"], "", const)
+    soc_p_n, t_soc_p_n, t_skin_p_n, drain_p_mw = _node_step(
+        soc_p, t_soc_p, t_skin_p, p_p_mw, x["charge_p"], x["amb"],
+        "p_", const)
 
-    pods = act * jnp.take(pods_row, level) * alive
-    new = (soc_n, t_soc_n, t_skin_n, th_state, soc_state)
-    out = {"soc": soc_n, "t_soc": t_soc_n, "t_skin": t_skin_n,
-           "level": level, "th_state": th_state, "soc_state": soc_state,
-           "p_mw": p_mw, "drain_mw": drain_mw, "pods": pods}
+    pods = act * take_linear(x["pods"], level_f) * alive
+    new = (soc_n, soc_p_n, t_soc_n, t_skin_n, t_soc_p_n, t_skin_p_n,
+           th_state, soc_state, shut)
+    out = {"soc": soc_n, "soc_p": soc_p_n, "t_soc": t_soc_n,
+           "t_skin": t_skin_n, "t_soc_p": t_soc_p_n,
+           "t_skin_p": t_skin_p_n,
+           "level": jnp.round(level_f).astype(jnp.int32),
+           "th_state": th_state, "soc_state": soc_state, "shut": shut,
+           "p_mw": p_mw, "p_p_mw": p_p_mw, "drain_mw": drain_mw,
+           "drain_p_mw": drain_p_mw, "pods": pods}
     return new, out
 
 
 def _integrate_one(tb):
-    """Whole-day scan for one combo (vmapped across combos)."""
+    """Whole-day scan for one combo (vmapped across combos in the data
+    path; traced directly in the gradient path)."""
     const = tb["const"]
     amb0 = tb["ambient"][0]
-    init = (jnp.float32(1.0), amb0, amb0, jnp.float32(0.0),
-            jnp.float32(0.0))
-    xs = (tb["step_mw"], tb["step_pods"],
-          jnp.broadcast_to(tb["act_mult"],
-                           (tb["step_mw"].shape[0],)
-                           + tb["act_mult"].shape),
-          tb["ambient"], tb["active"], tb["valid"])
+    dt = jnp.result_type(tb["step_mw"])
+    one = jnp.asarray(1.0, dt)
+    zero = jnp.asarray(0.0, dt)
+    init = (one, one, amb0, amb0, amb0, amb0, zero, zero, zero)
+    n = tb["step_mw"].shape[0]
+    xs = {"mw": tb["step_mw"], "mw_p": tb["step_mw_p"],
+          "pods": tb["step_pods"],
+          "amult": jnp.broadcast_to(tb["act_mult"],
+                                    (n,) + tb["act_mult"].shape),
+          "amb": tb["ambient"], "active": tb["active"],
+          "charge": tb["charge"], "charge_p": tb["charge_p"],
+          "valid": tb["valid"]}
 
     def step(carry, x):
         return _step_math(carry, x, const)
@@ -508,50 +636,80 @@ def _integrate_batch(tables):
     return jax.vmap(_integrate_one)(tables)
 
 
+def _ref_node_step(soc, t_soc, t_skin, p_mw, charge_mw, amb, pre, c):
+    """float32 scalar mirror of `_node_step` (same op order)."""
+    f = np.float32
+    v = (c[pre + "v_full"] - c[pre + "sag_v"] * (f(1.0) - soc)
+         - c[pre + "knee_v"] * np.exp(-c[pre + "knee_sharp"] * soc))
+    i_a = p_mw * f(1e-3) / v
+    loss_mw = i_a * i_a * c[pre + "r_ohm"] * f(1e3)
+    drain_mw = p_mw + loss_mw
+    soc_n = min(max(soc - drain_mw * c[pre + "dsoc_coeff"]
+                    + charge_mw * c[pre + "dsoc_coeff"], f(0.0)), f(1.0))
+    heat_w = drain_mw * f(1e-3)
+    flow = (t_soc - t_skin) * c[pre + "g_soc_skin"]
+    t_soc_n = t_soc + (heat_w - flow) * c[pre + "dt_c_soc"]
+    t_skin_n = t_skin + (flow - (t_skin - amb)
+                         * c[pre + "g_skin_amb"]) * c[pre + "dt_c_skin"]
+    return soc_n, t_soc_n, t_skin_n, drain_mw
+
+
 def reference_integrate(tb: dict) -> dict:
     """Pure-Python per-step oracle: identical math to the scan, float32
-    scalar ops in the same order.  O(steps) Python — the daysim bench
+    scalar ops in the same order (hard comparisons — the scan's STE
+    forwards are exactly these).  O(steps) Python — the daysim bench
     baseline and the parity test's reference."""
     f = np.float32
     c = {k: f(v) for k, v in tb["const"].items()}
     mw, pods_t = np.asarray(tb["step_mw"]), np.asarray(tb["step_pods"])
+    mw_p = np.asarray(tb["step_mw_p"])
     amult = np.asarray(tb["act_mult"])
     amb_t = np.asarray(tb["ambient"])
     active_t, valid_t = np.asarray(tb["active"]), np.asarray(tb["valid"])
-    soc, th_state, soc_state = f(1.0), f(0.0), f(0.0)
-    t_soc = t_skin = f(amb_t[0])
-    out = {k: [] for k in ("soc", "t_soc", "t_skin", "level", "th_state",
-                           "soc_state", "p_mw", "drain_mw", "pods")}
+    charge_t = np.asarray(tb["charge"])
+    charge_p_t = np.asarray(tb["charge_p"])
+    soc = soc_p = f(1.0)
+    th_state, soc_state, shut = f(0.0), f(0.0), f(0.0)
+    t_soc = t_skin = t_soc_p = t_skin_p = f(amb_t[0])
+    out = {k: [] for k in ("soc", "soc_p", "t_soc", "t_skin", "t_soc_p",
+                           "t_skin_p", "level", "th_state", "soc_state",
+                           "shut", "p_mw", "p_p_mw", "drain_mw",
+                           "drain_p_mw", "pods")}
     for t in range(mw.shape[0]):
         if t_skin > c["temp_trip"]:
             th_state = f(1.0)
         elif t_skin < c["temp_clear"]:
             th_state = f(0.0)
-        if soc < c["soc_trip"]:
+        soc_eff = min(soc, soc_p)
+        if soc_eff < c["soc_trip"]:
             soc_state = f(1.0)
-        elif soc > c["soc_clear"]:
+        elif soc_eff > c["soc_clear"]:
             soc_state = f(0.0)
         level = int(min(th_state + soc_state, c["max_level"]))
-        alive = (f(1.0) if soc > 0.0 else f(0.0)) * f(valid_t[t])
+        if t_skin > c["shutdown_c"]:
+            shut = f(1.0)
+        if t_skin_p > c["shutdown_c"] and c["has_puck"] > 0.0:
+            shut = f(1.0)
+        alive = ((f(1.0) if soc > 0.0 else f(0.0))
+                 * (f(1.0) if soc_p > 0.0 else f(0.0))
+                 * (f(1.0) - shut) * f(valid_t[t]))
         act = f(active_t[t]) * f(amult[level])
         p_mw = (act * f(mw[t, level])
                 + (f(1.0) - act) * c["standby_mw"]) * alive
-        v = (c["v_full"] - c["sag_v"] * (f(1.0) - soc)
-             - c["knee_v"] * np.exp(-c["knee_sharp"] * soc))
-        i_a = p_mw * f(1e-3) / v
-        loss_mw = i_a * i_a * c["r_ohm"] * f(1e3)
-        drain_mw = p_mw + loss_mw
-        soc = max(soc - drain_mw * c["dsoc_coeff"], f(0.0))
-        heat_w = drain_mw * f(1e-3)
-        flow = (t_soc - t_skin) * c["g_soc_skin"]
-        t_soc_new = t_soc + (heat_w - flow) * c["dt_c_soc"]
-        t_skin = t_skin + (flow - (t_skin - f(amb_t[t]))
-                           * c["g_skin_amb"]) * c["dt_c_skin"]
-        t_soc = t_soc_new
-        row = {"soc": soc, "t_soc": t_soc, "t_skin": t_skin,
-               "level": level, "th_state": th_state,
-               "soc_state": soc_state, "p_mw": p_mw,
-               "drain_mw": drain_mw,
+        p_p_mw = (act * f(mw_p[t, level])
+                  + (f(1.0) - act) * c["p_standby_mw"]) * alive \
+            * c["has_puck"]
+        soc, t_soc, t_skin, drain_mw = _ref_node_step(
+            soc, t_soc, t_skin, p_mw, f(charge_t[t]), f(amb_t[t]), "", c)
+        soc_p, t_soc_p, t_skin_p, drain_p_mw = _ref_node_step(
+            soc_p, t_soc_p, t_skin_p, p_p_mw, f(charge_p_t[t]),
+            f(amb_t[t]), "p_", c)
+        row = {"soc": soc, "soc_p": soc_p, "t_soc": t_soc,
+               "t_skin": t_skin, "t_soc_p": t_soc_p,
+               "t_skin_p": t_skin_p, "level": level,
+               "th_state": th_state, "soc_state": soc_state,
+               "shut": shut, "p_mw": p_mw, "p_p_mw": p_p_mw,
+               "drain_mw": drain_mw, "drain_p_mw": drain_p_mw,
                "pods": act * f(pods_t[t, level]) * alive}
         for k, vv in row.items():
             out[k].append(vv)
@@ -589,23 +747,73 @@ class _Combo:
     policy: ThrottlePolicy
     battery: BatterySpec
     thermal: ThermalSpec
+    puck: PuckSpec | None = None
     mw_levels: np.ndarray = None        # (L, n_seg) filled by compile
     pods_levels: np.ndarray = None      # (L, n_seg)
+    mbps_levels: np.ndarray = None      # (L, n_seg) gated uplink rate
     steady_mw: float = 0.0
 
     def label(self) -> dict:
-        return {"platform": self.platform.name,
-                "design": self.design.get("name", ""),
-                "on_device": "+".join(self.design["on_device"]) or "(none)",
-                "schedule": self.schedule.name,
-                "policy": self.policy.name,
-                "battery": self.battery.name}
+        out = {"platform": self.platform.name,
+               "design": self.design.get("name", ""),
+               "on_device": "+".join(self.design["on_device"]) or "(none)",
+               "schedule": self.schedule.name,
+               "policy": self.policy.name,
+               "battery": self.battery.name}
+        if self.puck is not None:
+            out["puck"] = self.puck.name
+        return out
+
+
+# row-level evaluation cache: (context id, row knobs) -> (total_mw,
+# pods, mbps), where a context id stands for one (PlatformSpec, theta,
+# n_users, results_dir) combination — keyed by the SPEC ITSELF (frozen,
+# hashable), not its name, so a modified same-named platform gets a
+# fresh context instead of stale tables.  Policy combos repeat the same
+# (design, segment, level) rows — e.g. every policy shares the design's
+# level-0 rows — and benchmarks call build_combos twice; before this
+# cache each call re-evaluated the full duplicated row list.
+_ROW_CACHE: dict = {}
+_ROW_CACHE_MAX = 200_000
+_CTX_IDS: dict = {}
+CACHE_STATS = {"hits": 0, "misses": 0, "evaluate_calls": 0}
+
+
+def _theta_key(theta) -> tuple | None:
+    if not theta:
+        return None
+    return tuple(sorted((k, float(v)) for k, v in theta.items()))
+
+
+def _ctx_id(plat: PlatformSpec, theta, n_users: float,
+            results_dir) -> int:
+    """Small int id for one evaluation context (spec hashed once per
+    call, not once per row key)."""
+    key = (plat, _theta_key(theta), float(n_users), str(results_dir))
+    return _CTX_IDS.setdefault(key, len(_CTX_IDS))
+
+
+def _row_key(row: dict) -> tuple:
+    return (tuple(row["on_device"]), float(row["compression"]),
+            float(row["fps_scale"]), int(row["mcs_tier"]),
+            float(row["upload_duty"]), float(row["brightness"]))
+
+
+def clear_row_cache() -> None:
+    _ROW_CACHE.clear()
+    _CTX_IDS.clear()
+    CACHE_STATS.update(hits=0, misses=0, evaluate_calls=0)
 
 
 def _compile_platform(plat: PlatformSpec, combos: list, n_users: float,
                       theta=None, results_dir=None) -> None:
-    """Fill mw/pods level tables for every combo of one platform with ONE
-    batched `scenarios.evaluate` + ONE vectorized pods pass."""
+    """Fill mw/pods/mbps level tables for every combo of one platform.
+
+    Rows are deduplicated (`_row_key`) and served from the module-level
+    `_ROW_CACHE`; only rows never seen for this (platform, theta,
+    n_users, results_dir) context hit the engine — at most ONE batched
+    `scenarios.evaluate` + ONE vectorized pods pass per call, and zero
+    on a warm cache."""
     if not combos:
         return
     rows, slices = [], []
@@ -620,20 +828,57 @@ def _compile_platform(plat: PlatformSpec, combos: list, n_users: float,
         rows.append(_design_row(cb.design, DaySegment("steady", 1.0),
                                 ThrottleAction()))
         slices.append((start, len(rows) - 1))
-    sset = ScenarioSet.build(rows, primitives=plat.primitives)
-    rep = scenarios.evaluate(plat, sset, theta)
-    totals = np.asarray(rep.total_mw, np.float64)
-    bd = offload.pods_breakdown(sset, n_users=n_users, duty=1.0,
-                                results_dir=results_dir)
+    # evict BEFORE membership checks: clearing after computing hits
+    # would drop entries this very call still indexes below
+    if len(_ROW_CACHE) > _ROW_CACHE_MAX:
+        _ROW_CACHE.clear()
+    ctx = (_ctx_id(plat, theta, n_users, results_dir),)
+    keys = [ctx + _row_key(r) for r in rows]
+    fresh: dict = {}
+    for k, r in zip(keys, rows):
+        if k not in _ROW_CACHE and k not in fresh:
+            fresh[k] = r
+    CACHE_STATS["hits"] += sum(k in _ROW_CACHE for k in keys)
+    CACHE_STATS["misses"] += len(fresh)
+    if fresh:
+        sset = ScenarioSet.build(list(fresh.values()),
+                                 primitives=plat.primitives)
+        rep = scenarios.evaluate(plat, sset, theta)
+        CACHE_STATS["evaluate_calls"] += 1
+        totals = np.asarray(rep.total_mw, np.float64)
+        mbps = np.asarray(rep.offloaded_mbps, np.float64)
+        bd = offload.pods_breakdown(sset, n_users=n_users, duty=1.0,
+                                    results_dir=results_dir)
+        for i, k in enumerate(fresh):
+            _ROW_CACHE[k] = (totals[i], float(bd.pods[i]), mbps[i])
+    vals = np.asarray([_ROW_CACHE[k] for k in keys], np.float64)
+    totals, pods, mbps = vals[:, 0], vals[:, 1], vals[:, 2]
     for cb, (start, steady_i) in zip(combos, slices):
         n_seg, n_lvl = len(cb.schedule.segments), cb.policy.n_levels
         cb.mw_levels = totals[start:steady_i].reshape(n_lvl, n_seg)
-        cb.pods_levels = bd.pods[start:steady_i].reshape(n_lvl, n_seg)
+        cb.pods_levels = pods[start:steady_i].reshape(n_lvl, n_seg)
+        cb.mbps_levels = mbps[start:steady_i].reshape(n_lvl, n_seg)
         cb.steady_mw = float(totals[steady_i])
 
 
+def _battery_const(bat: BatterySpec, th: ThermalSpec, dt_s: float,
+                   pre: str = "") -> dict:
+    return {
+        pre + "v_full": bat.v_full, pre + "sag_v": bat.sag_v,
+        pre + "knee_v": bat.knee_v,
+        pre + "knee_sharp": bat.knee_sharpness,
+        pre + "r_ohm": bat.r_internal_ohm,
+        pre + "dsoc_coeff": dt_s / (3600.0 * bat.capacity_mwh),
+        pre + "g_soc_skin": 1.0 / th.r_soc_skin_k_per_w,
+        pre + "g_skin_amb": 1.0 / th.r_skin_amb_k_per_w,
+        pre + "dt_c_soc": dt_s / th.c_soc_j_per_k,
+        pre + "dt_c_skin": dt_s / th.c_skin_j_per_k,
+    }
+
+
 def _combo_tables(cb: _Combo, dt_s: float, n_steps: int,
-                  max_levels: int, standby_mw: float) -> dict:
+                  max_levels: int, standby_mw: float,
+                  shutdown_c: float = DEFAULT_SHUTDOWN_C) -> dict:
     """Per-step numpy tables for one combo, padded to the batch shape."""
     seg_steps = [max(1, round(s.hours * 3600.0 / dt_s))
                  for s in cb.schedule.segments]
@@ -641,14 +886,19 @@ def _combo_tables(cb: _Combo, dt_s: float, n_steps: int,
     t = len(seg_idx)
     mw = cb.mw_levels                       # (L, n_seg)
     pods = cb.pods_levels
+    mw_p = (cb.puck.level_mw(cb.mbps_levels) if cb.puck is not None
+            else np.zeros_like(mw))
     if mw.shape[0] < max_levels:            # pad levels with the last row
         pad = max_levels - mw.shape[0]
         mw = np.concatenate([mw, np.repeat(mw[-1:], pad, 0)])
         pods = np.concatenate([pods, np.repeat(pods[-1:], pad, 0)])
+        mw_p = np.concatenate([mw_p, np.repeat(mw_p[-1:], pad, 0)])
     step_mw = np.zeros((n_steps, max_levels), np.float32)
     step_pods = np.zeros((n_steps, max_levels), np.float32)
+    step_mw_p = np.zeros((n_steps, max_levels), np.float32)
     step_mw[:t] = mw.T[seg_idx]
     step_pods[:t] = pods.T[seg_idx]
+    step_mw_p[:t] = mw_p.T[seg_idx]
     amb = np.full(n_steps, cb.schedule.segments[-1].ambient_c, np.float32)
     amb[:t] = np.asarray([s.ambient_c for s in cb.schedule.segments],
                          np.float32)[seg_idx]
@@ -657,26 +907,39 @@ def _combo_tables(cb: _Combo, dt_s: float, n_steps: int,
                             np.float32)[seg_idx]
     valid = np.zeros(n_steps, np.float32)
     valid[:t] = 1.0
+    # dock/pocket top-up current, split across nodes by capacity share
+    cap_g = cb.battery.capacity_mwh
+    cap_p = cb.puck.battery.capacity_mwh if cb.puck is not None else 0.0
+    share_g = cap_g / (cap_g + cap_p) if cap_p else 1.0
+    seg_charge = np.asarray([s.charge_mw for s in cb.schedule.segments],
+                            np.float32)[seg_idx]
+    charge = np.zeros(n_steps, np.float32)
+    charge_p = np.zeros(n_steps, np.float32)
+    charge[:t] = seg_charge * np.float32(share_g)
+    charge_p[:t] = seg_charge * np.float32(1.0 - share_g)
     amult = np.ones(max_levels, np.float32)
     for lv in range(1, cb.policy.n_levels):
         amult[lv:] = cb.policy.action(lv).active_mult
-    bat, th = cb.battery, cb.thermal
     const = {
         "temp_trip": cb.policy.temp_trip_c,
         "temp_clear": cb.policy.temp_clear_c,
         "soc_trip": cb.policy.soc_trip, "soc_clear": cb.policy.soc_clear,
         "max_level": float(cb.policy.n_levels - 1),
         "standby_mw": standby_mw,
-        "v_full": bat.v_full, "sag_v": bat.sag_v, "knee_v": bat.knee_v,
-        "knee_sharp": bat.knee_sharpness, "r_ohm": bat.r_internal_ohm,
-        "dsoc_coeff": dt_s / (3600.0 * bat.capacity_mwh),
-        "g_soc_skin": 1.0 / th.r_soc_skin_k_per_w,
-        "g_skin_amb": 1.0 / th.r_skin_amb_k_per_w,
-        "dt_c_soc": dt_s / th.c_soc_j_per_k,
-        "dt_c_skin": dt_s / th.c_skin_j_per_k,
+        "shutdown_c": shutdown_c,
+        "ste_beta_c": STE_BETA_C, "ste_beta_soc": STE_BETA_SOC,
+        "has_puck": 1.0 if cb.puck is not None else 0.0,
+        "p_standby_mw": cb.puck.standby_mw if cb.puck is not None else 0.0,
+        **_battery_const(cb.battery, cb.thermal, dt_s),
+        **_battery_const(
+            cb.puck.battery if cb.puck is not None else cb.battery,
+            cb.puck.thermal if cb.puck is not None else cb.thermal,
+            dt_s, "p_"),
     }
-    return {"step_mw": step_mw, "step_pods": step_pods, "ambient": amb,
-            "active": active, "valid": valid, "act_mult": amult,
+    return {"step_mw": step_mw, "step_mw_p": step_mw_p,
+            "step_pods": step_pods, "ambient": amb,
+            "active": active, "valid": valid, "charge": charge,
+            "charge_p": charge_p, "act_mult": amult,
             "const": {k: np.float32(v) for k, v in const.items()}}
 
 
@@ -698,10 +961,15 @@ class DayReport:
     steady_mw: np.ndarray           # (N,) nominal steady-state total
     time_to_empty_h: np.ndarray     # (N,)
     end_soc: np.ndarray             # (N,)
-    peak_skin_c: np.ndarray         # (N,)
+    end_soc_puck: np.ndarray        # (N,) 1.0 for single-node SKUs
+    peak_skin_c: np.ndarray         # (N,) glasses node
+    peak_skin_puck_c: np.ndarray    # (N,) pocket host (ambient-bound
+                                    # for single-node SKUs); shutdown
+                                    # latches on EITHER node
     pod_hours: np.ndarray           # (N,)
     throttled_h: np.ndarray         # (N,)
-    energy_mwh: np.ndarray          # (N,) total drained from the cell
+    energy_mwh: np.ndarray          # (N,) total drained from the cell(s)
+    shutdown: np.ndarray            # (N,) bool: thermal hard-kill latched
     n_users: float
     dt_s: float
     front_mask: np.ndarray | None = None
@@ -711,10 +979,12 @@ class DayReport:
         return len(self.combos)
 
     def survives(self, skin_limit_c: float = 43.0) -> np.ndarray:
-        """(N,) bool: made it through the whole day without emptying the
-        cell or breaching the skin-contact comfort limit."""
+        """(N,) bool: made it through the whole day without emptying a
+        cell, thermally shutting down (the hard constraint), or
+        breaching the skin-contact comfort limit."""
         return ((self.time_to_empty_h >= self.day_hours - 1e-9)
-                & (self.peak_skin_c <= skin_limit_c))
+                & (self.peak_skin_c <= skin_limit_c)
+                & ~self.shutdown)
 
     def objectives(self) -> np.ndarray:
         """(N, 3) [time_to_empty_h, peak_skin_c, pod_hours]."""
@@ -730,8 +1000,11 @@ class DayReport:
             "time_to_empty_h": round(float(self.time_to_empty_h[i]), 2),
             "day_hours": round(float(self.day_hours[i]), 2),
             "survives": bool(surv[i]),
+            "shutdown": bool(self.shutdown[i]),
             "end_soc": round(float(self.end_soc[i]), 3),
+            "end_soc_puck": round(float(self.end_soc_puck[i]), 3),
             "peak_skin_c": round(float(self.peak_skin_c[i]), 2),
+            "peak_skin_puck_c": round(float(self.peak_skin_puck_c[i]), 2),
             "pod_hours": round(float(self.pod_hours[i]), 1),
             "usd": round(cost["usd"], 2),
             "kgco2": round(cost["kgco2"], 1),
@@ -759,13 +1032,18 @@ class DayTrace:
     combo: dict
     dt_s: float
     soc: np.ndarray
+    soc_puck: np.ndarray
     t_soc_c: np.ndarray
     t_skin_c: np.ndarray
+    t_skin_puck_c: np.ndarray
     level: np.ndarray
     th_state: np.ndarray
     soc_state: np.ndarray
+    shut: np.ndarray
     p_mw: np.ndarray
+    p_puck_mw: np.ndarray
     drain_mw: np.ndarray
+    drain_puck_mw: np.ndarray
     pods: np.ndarray
     valid: np.ndarray
     summary: dict
@@ -774,31 +1052,40 @@ class DayTrace:
 def _summarize(ys: dict, tables: dict, dt_s: float) -> dict:
     """(N, T) traces -> (N,) objective arrays (numpy, off-device)."""
     soc = np.asarray(ys["soc"], np.float64)
+    soc_p = np.asarray(ys["soc_p"], np.float64)
+    shut = np.asarray(ys["shut"], np.float64)
     valid = np.asarray(tables["valid"], bool)
     t_skin = np.asarray(ys["t_skin"], np.float64)
     level = np.asarray(ys["level"])
     active = np.asarray(tables["active"], np.float64)
     day_steps = valid.sum(axis=1)
-    empty = soc <= 0.0
-    hit = empty.any(axis=1)
-    first = np.argmax(empty, axis=1).astype(np.float64) + 1.0
+    # either node emptying — or the thermal hard-kill — ends the day
+    dead = (np.minimum(soc, soc_p) <= 0.0) | (shut > 0.5)
+    hit = dead.any(axis=1)
+    first = np.argmax(dead, axis=1).astype(np.float64) + 1.0
     tte = np.where(hit, first, day_steps) * dt_s / 3600.0
     peak = np.where(valid, t_skin, -np.inf).max(axis=1)
+    t_skin_p = np.asarray(ys["t_skin_p"], np.float64)
+    peak_p = np.where(valid, t_skin_p, -np.inf).max(axis=1)
     pods = np.asarray(ys["pods"], np.float64)
     # capture-hours degraded by the policy while the device was still
     # alive (time after the cell empties is lost outright, not throttled)
-    alive = np.concatenate([np.ones_like(soc[:, :1]), soc[:, :-1] > 0.0],
-                           axis=1) > 0.0
+    alive = np.concatenate([np.zeros_like(dead[:, :1]), dead[:, :-1]],
+                           axis=1) == 0.0
     throttled = ((level > 0) & valid & alive) * active
-    drain = np.asarray(ys["drain_mw"], np.float64)
+    drain = (np.asarray(ys["drain_mw"], np.float64)
+             + np.asarray(ys["drain_p_mw"], np.float64))
     return {
         "day_hours": day_steps * dt_s / 3600.0,
         "time_to_empty_h": tte,
         "end_soc": soc[:, -1],
+        "end_soc_puck": soc_p[:, -1],
         "peak_skin_c": peak,
+        "peak_skin_puck_c": peak_p,
         "pod_hours": pods.sum(axis=1) * dt_s / 3600.0,
         "throttled_h": throttled.sum(axis=1) * dt_s / 3600.0,
         "energy_mwh": drain.sum(axis=1) * dt_s / 3600.0,
+        "shutdown": shut[:, -1] > 0.5,
     }
 
 
@@ -810,7 +1097,7 @@ def _batteries_arg(battery, plat_name: str) -> BatterySpec:
     return battery
 
 
-DEFAULT_PLATFORMS = ("aria2_display", "rayban_cam")
+DEFAULT_PLATFORMS = ("aria2_display", "rayban_cam", "aria2_puck_split")
 DEFAULT_SCHEDULES = ("commuter", "field_day", "desk_day")
 DEFAULT_POLICIES = ("none", "thermal_governor", "battery_saver")
 
@@ -833,6 +1120,7 @@ def build_combos(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
         plat = _plat(p)
         supported = set(plat.supported_primitives())
         bat = _batteries_arg(battery, plat.name)
+        puck = puck_for(plat)
         plat_combos = []
         for d in designs:
             if not set(d["on_device"]) <= supported:
@@ -841,7 +1129,7 @@ def build_combos(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
                                 "reason": "unsupported placement"})
                 continue
             plat_combos.extend(
-                _Combo(plat, d, sched, pol, bat, therm)
+                _Combo(plat, d, sched, pol, bat, therm, puck)
                 for sched in schedules for pol in policies)
         _compile_platform(plat, plat_combos, n_users, theta, results_dir)
         combos.extend(plat_combos)
@@ -851,12 +1139,14 @@ def build_combos(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
 
 
 def batch_tables(combos: list, dt_s: float = DEFAULT_DT_S,
-                 standby_mw: float = DEFAULT_STANDBY_MW) -> dict:
+                 standby_mw: float = DEFAULT_STANDBY_MW,
+                 shutdown_c: float = DEFAULT_SHUTDOWN_C) -> dict:
     """Stack per-combo step tables into the vmapped scan's input pytree
     (leading dim N, padded to the longest schedule / deepest policy)."""
     n_steps = max(cb.schedule.n_steps(dt_s) for cb in combos)
     max_levels = max(cb.policy.n_levels for cb in combos)
-    per = [_combo_tables(cb, dt_s, n_steps, max_levels, standby_mw)
+    per = [_combo_tables(cb, dt_s, n_steps, max_levels, standby_mw,
+                         shutdown_c)
            for cb in combos]
     return jax.tree_util.tree_map(lambda *xs: jnp.asarray(np.stack(xs)),
                                   *per)
@@ -867,7 +1157,8 @@ def day_grid(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
              dt_s: float = DEFAULT_DT_S, n_users: float = 1e6,
              standby_mw: float = DEFAULT_STANDBY_MW, battery=None,
              thermal: ThermalSpec | None = None, theta=None,
-             results_dir=None) -> DayReport:
+             results_dir=None,
+             shutdown_c: float = DEFAULT_SHUTDOWN_C) -> DayReport:
     """Simulate every (platform x design x schedule x policy) combo
     through ONE vmapped `jax.lax.scan`.
 
@@ -879,7 +1170,7 @@ def day_grid(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
     combos, skipped = build_combos(platforms, designs, schedules,
                                    policies, n_users, battery, thermal,
                                    theta, results_dir)
-    tables = batch_tables(combos, dt_s, standby_mw)
+    tables = batch_tables(combos, dt_s, standby_mw, shutdown_c)
     ys = jax.block_until_ready(_integrate_batch(tables))
     summ = _summarize(ys, {"valid": np.asarray(tables["valid"]),
                            "active": np.asarray(tables["active"])}, dt_s)
@@ -894,16 +1185,17 @@ def simulate(platform, design: dict, schedule, policy="none",
              standby_mw: float = DEFAULT_STANDBY_MW,
              battery: BatterySpec | None = None,
              thermal: ThermalSpec | None = None, theta=None,
-             results_dir=None) -> DayTrace:
+             results_dir=None,
+             shutdown_c: float = DEFAULT_SHUTDOWN_C) -> DayTrace:
     """One (platform, design, schedule, policy) day with full traces."""
     plat = _plat(platform)
     cb = _Combo(plat, design, _resolve(schedule, get_schedule, DaySchedule),
                 _resolve(policy, get_policy, ThrottlePolicy),
                 _batteries_arg(battery, plat.name),
-                thermal or DEFAULT_THERMAL)
+                thermal or DEFAULT_THERMAL, puck_for(plat))
     _compile_platform(plat, [cb], n_users, theta, results_dir)
     tb = _combo_tables(cb, dt_s, cb.schedule.n_steps(dt_s),
-                       cb.policy.n_levels, standby_mw)
+                       cb.policy.n_levels, standby_mw, shutdown_c)
     batch = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], tb)
     ys = jax.block_until_ready(_integrate_batch(batch))
     summ = _summarize(ys, {"valid": tb["valid"][None],
@@ -912,13 +1204,19 @@ def simulate(platform, design: dict, schedule, policy="none",
     summary["steady_mw"] = cb.steady_mw
     return DayTrace(
         combo=cb.label(), dt_s=dt_s,
-        soc=np.asarray(ys["soc"][0]), t_soc_c=np.asarray(ys["t_soc"][0]),
+        soc=np.asarray(ys["soc"][0]),
+        soc_puck=np.asarray(ys["soc_p"][0]),
+        t_soc_c=np.asarray(ys["t_soc"][0]),
         t_skin_c=np.asarray(ys["t_skin"][0]),
+        t_skin_puck_c=np.asarray(ys["t_skin_p"][0]),
         level=np.asarray(ys["level"][0]),
         th_state=np.asarray(ys["th_state"][0]),
         soc_state=np.asarray(ys["soc_state"][0]),
+        shut=np.asarray(ys["shut"][0]),
         p_mw=np.asarray(ys["p_mw"][0]),
+        p_puck_mw=np.asarray(ys["p_p_mw"][0]),
         drain_mw=np.asarray(ys["drain_mw"][0]),
+        drain_puck_mw=np.asarray(ys["drain_p_mw"][0]),
         pods=np.asarray(ys["pods"][0]), valid=tb["valid"],
         summary=summary)
 
@@ -927,17 +1225,18 @@ def compiled_tables(platform, design: dict, schedule, policy="none",
                     dt_s: float = DEFAULT_DT_S, n_users: float = 1e6,
                     standby_mw: float = DEFAULT_STANDBY_MW,
                     battery: BatterySpec | None = None,
-                    thermal: ThermalSpec | None = None) -> dict:
+                    thermal: ThermalSpec | None = None,
+                    shutdown_c: float = DEFAULT_SHUTDOWN_C) -> dict:
     """The per-step table pytree for one combo — the shared input of the
     scan and `reference_integrate` (parity tests, the bench baseline)."""
     plat = _plat(platform)
     cb = _Combo(plat, design, _resolve(schedule, get_schedule, DaySchedule),
                 _resolve(policy, get_policy, ThrottlePolicy),
                 _batteries_arg(battery, plat.name),
-                thermal or DEFAULT_THERMAL)
+                thermal or DEFAULT_THERMAL, puck_for(plat))
     _compile_platform(plat, [cb], n_users)
     return _combo_tables(cb, dt_s, cb.schedule.n_steps(dt_s),
-                         cb.policy.n_levels, standby_mw)
+                         cb.policy.n_levels, standby_mw, shutdown_c)
 
 
 def scan_integrate(tb: dict) -> dict:
@@ -945,3 +1244,189 @@ def scan_integrate(tb: dict) -> dict:
     batch = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], tb)
     ys = jax.block_until_ready(_integrate_batch(batch))
     return {k: np.asarray(v[0]) for k, v in ys.items()}
+
+
+# ---------------------------------------------------------------------------
+# the differentiable day: gradients from day objectives back to knobs
+# ---------------------------------------------------------------------------
+
+def _hard_logits(design_row: dict, primitives: tuple):
+    """A design's placement as saturated logits (sigmoid ~ 0/1)."""
+    on = set(design_row.get("on_device", ()))
+    return jnp.asarray([design.LOGIT_HI if p in on else -design.LOGIT_HI
+                        for p in primitives])
+
+
+def relaxed_day_fn(platform, schedule, policy, design_row=None, *,
+                   dt_s: float = 30.0, n_users: float = 1e6,
+                   standby_mw: float = DEFAULT_STANDBY_MW,
+                   battery: BatterySpec | None = None,
+                   thermal: ThermalSpec | None = None, theta=None,
+                   results_dir=None,
+                   tau: float = 1.0,
+                   shutdown_c: float = DEFAULT_SHUTDOWN_C,
+                   ste_beta_c: float = STE_BETA_C,
+                   ste_beta_soc: float = STE_BETA_SOC,
+                   soft_alive_margin: float = 0.03,
+                   soft_alive_beta: float = 80.0):
+    """Build `f(point) -> outputs`, differentiable end to end.
+
+    `point` is a DesignSpace point that may carry any subset of
+    `design.device_space` leaves (placement_logits, log2_compression,
+    log2_fps_scale, upload_duty — the latter scales every segment's
+    VAD gating) and/or `design.policy_space` leaves (temp_trip_c,
+    temp_band_c, soc_trip, soc_band); leaves not present fall back to
+    the static `design_row` dict / `policy` thresholds.  For every
+    throttle level the ThrottleAction multipliers compose with the
+    relaxed knobs, the per-(level, segment) power tables come from the
+    relaxed engine *inside the same graph* (no precompiled table severs
+    it), and the whole day integrates through `_integrate_one` — whose
+    trip comparisons are straight-through, so `jax.grad` reaches both
+    the design knobs (via the tables) and the policy thresholds (via
+    the STE surrogates).
+
+    Outputs: `soft_tte_h` (smoothly-alive hours: sum of
+    sigmoid((soc-margin)*beta) steps — the maximization surrogate),
+    `tte_h`/`peak_skin_c`/`pod_hours` (hard values off the same traces,
+    for reporting), plus the raw `t_skin`/`soc` traces — thermal-cap
+    penalties are built by callers from `t_skin` (see
+    `dse.optimize_policy`)."""
+    plat = _plat(platform)
+    sched = _resolve(schedule, get_schedule, DaySchedule)
+    pol = _resolve(policy, get_policy, ThrottlePolicy)
+    bat = _batteries_arg(battery, plat.name)
+    therm = thermal or DEFAULT_THERMAL
+    puck = puck_for(plat)
+    row = dict(design_row or DEFAULT_DESIGNS[0])
+    n_lvl = pol.n_levels
+    segs = sched.segments
+    n_seg = len(segs)
+
+    # static per-segment / per-level data
+    seg_steps = [max(1, round(s.hours * 3600.0 / dt_s)) for s in segs]
+    seg_idx = np.repeat(np.arange(n_seg), seg_steps)
+    seg_duty = np.asarray([s.upload_duty for s in segs])
+    seg_bright = np.asarray([s.brightness for s in segs])
+    seg_amb = np.asarray([s.ambient_c for s in segs])
+    seg_active = np.asarray([s.active for s in segs])
+    seg_charge = np.asarray([s.charge_mw for s in segs])
+    acts = [pol.action(lv) for lv in range(n_lvl)]
+    fps_mult = np.asarray([a.fps_mult for a in acts])
+    duty_mult = np.asarray([a.duty_mult for a in acts])
+    bright_mult = np.asarray([a.brightness_mult for a in acts])
+    act_mult = np.ones(n_lvl)
+    for lv in range(1, n_lvl):
+        act_mult[lv:] = acts[lv].active_mult
+    offload_lv = np.asarray([1.0 if a.offload else 0.0 for a in acts])
+    mcs_hot = np.eye(len(scenarios.MCS_TIERS))[
+        int(row.get("mcs_tier", DEFAULT_MCS))]
+    cap_g = bat.capacity_mwh
+    cap_p = puck.battery.capacity_mwh if puck is not None else 0.0
+    share_g = cap_g / (cap_g + cap_p) if cap_p else 1.0
+    static_const = {
+        "max_level": float(n_lvl - 1), "standby_mw": standby_mw,
+        "shutdown_c": shutdown_c,
+        "ste_beta_c": ste_beta_c, "ste_beta_soc": ste_beta_soc,
+        "has_puck": 1.0 if puck is not None else 0.0,
+        "p_standby_mw": puck.standby_mw if puck is not None else 0.0,
+        **_battery_const(bat, therm, dt_s),
+        **_battery_const(puck.battery if puck is not None else bat,
+                         puck.thermal if puck is not None else therm,
+                         dt_s, "p_"),
+    }
+    th = scenarios._theta_relaxed(plat, theta)
+    n_steps = len(seg_idx)
+
+    def f(point: dict) -> dict:
+        logits = point.get("placement_logits",
+                           _hard_logits(row, plat.primitives))
+        pl = design.placement_probs(logits, tau)            # (n_prim,)
+        comp = 2.0 ** point.get(
+            "log2_compression",
+            jnp.log2(jnp.asarray(float(row.get("compression", 10.0)))))
+        fps = 2.0 ** point.get(
+            "log2_fps_scale",
+            jnp.log2(jnp.asarray(float(row.get("fps_scale", 1.0)))))
+        # (L, S) knob rows: ThrottleAction multipliers compose smoothly
+        pl_rows = pl[None, :] * (1.0 - jnp.asarray(offload_lv))[:, None]
+        vec = {
+            "placement": jnp.repeat(pl_rows[:, None, :], n_seg,
+                                    axis=1).reshape(n_lvl * n_seg, -1),
+            "compression": jnp.broadcast_to(
+                comp, (n_lvl * n_seg,)),
+            "fps_scale": (fps * jnp.asarray(fps_mult)[:, None]
+                          * jnp.ones((1, n_seg))).reshape(-1),
+            "upload_duty": (point.get("upload_duty", 1.0)
+                            * jnp.asarray(seg_duty)[None, :]
+                            * jnp.asarray(duty_mult)[:, None]).reshape(-1),
+            "brightness": (jnp.asarray(seg_bright)[None, :]
+                           * jnp.asarray(bright_mult)[:, None]
+                           ).reshape(-1),
+            "mcs_weights": jnp.broadcast_to(
+                jnp.asarray(mcs_hot), (n_lvl * n_seg, len(mcs_hot))),
+        }
+        out = scenarios._engine_relaxed(plat)(vec, th)
+        totals = out["total"].reshape(n_lvl, n_seg)
+        mbps = out["mbps"].reshape(n_lvl, n_seg)
+        if puck is not None:
+            mw_p = puck.level_mw(mbps)
+        else:
+            mw_p = jnp.zeros_like(totals)
+        # smooth backend fleet demand for the same rows (pod-hours as a
+        # differentiable objective; duty=1.0 matches the hard path's
+        # _compile_platform pods tables)
+        pods_rows = offload.pods_relaxed(
+            vec, n_users=n_users, duty=1.0, results_dir=results_dir,
+            primitives=plat.primitives).reshape(n_lvl, n_seg)
+        # per-step tables: gather the (level, segment) grids along time
+        idx = jnp.asarray(seg_idx)
+        tb = {
+            "step_mw": totals.T[idx],           # (T, L)
+            "step_mw_p": mw_p.T[idx],
+            "step_pods": pods_rows.T[idx],
+            "ambient": jnp.asarray(seg_amb)[idx],
+            "active": jnp.asarray(seg_active)[idx],
+            "valid": jnp.ones(n_steps),
+            "charge": jnp.asarray(seg_charge * share_g)[idx],
+            "charge_p": jnp.asarray(seg_charge * (1.0 - share_g))[idx],
+            "act_mult": jnp.asarray(act_mult),
+            "const": {
+                **{k: jnp.asarray(v) for k, v in static_const.items()},
+                "temp_trip": point.get(
+                    "temp_trip_c", jnp.asarray(pol.temp_trip_c)),
+                "temp_clear": point.get(
+                    "temp_trip_c", jnp.asarray(pol.temp_trip_c))
+                - point.get("temp_band_c",
+                            jnp.asarray(pol.temp_trip_c
+                                        - pol.temp_clear_c)),
+                "soc_trip": point.get("soc_trip",
+                                      jnp.asarray(pol.soc_trip)),
+                "soc_clear": point.get("soc_trip",
+                                       jnp.asarray(pol.soc_trip))
+                + point.get("soc_band",
+                            jnp.asarray(pol.soc_clear - pol.soc_trip)),
+            },
+        }
+        ys = _integrate_one(tb)
+        soc_eff = jnp.minimum(ys["soc"], ys["soc_p"])
+        h = dt_s / 3600.0
+        soft_alive = design.soft_indicator(soc_eff, soft_alive_margin,
+                                           soft_alive_beta)
+        dead = (soc_eff <= 0.0) | (ys["shut"] > 0.5)
+        hit = jnp.any(dead)
+        first = jnp.argmax(dead).astype(soc_eff.dtype) + 1.0
+        tte_h = jnp.where(hit, first, float(n_steps)) * h
+        return {
+            "soft_tte_h": jnp.sum(soft_alive) * h,
+            "tte_h": tte_h,
+            "peak_skin_c": jnp.max(ys["t_skin"]),
+            "pod_hours": jnp.sum(ys["pods"]) * h,
+            "end_soc": ys["soc"][-1],
+            "end_soc_puck": ys["soc_p"][-1],
+            "throttled_frac": jnp.mean((ys["level"] > 0)
+                                       .astype(soc_eff.dtype)),
+            "t_skin": ys["t_skin"],
+            "soc": ys["soc"],
+        }
+
+    return f

@@ -1,0 +1,313 @@
+"""Unified differentiable design core: the `DesignSpace` pytree.
+
+Before this module the stack spoke three incompatible design languages:
+`ScenarioSet` was an int-indexed struct-of-arrays (placement mask, MCS
+tier), `daysim` precompiled per-(segment, level) power tables that
+severed the graph from the design knobs, and `calibrate` threaded a raw
+theta dict.  A `DesignSpace` unifies them: every knob — placement
+logits, compression, fps_scale, upload_duty, brightness, throttle
+trip/clear bands, theta coefficients — is a declared `Knob` leaf with
+bounds and a discrete/continuous tag, and a *design point* is a plain
+``{name: jnp.ndarray}`` dict (a jax pytree), so `jax.grad`, `jax.vmap`
+and optimizers flow through it unchanged.
+
+Discrete knobs carry smooth relaxations so gradients exist end to end:
+
+  * placement      — per-primitive Bernoulli logits; `placement_probs`
+                     is a temperature-annealed sigmoid.  The batched
+                     engine consumes probabilities directly (multilinear
+                     interpolation of the placement-indexed duty tables
+                     in `scenarios._features_relaxed`), and a binary
+                     point reproduces the int-indexed oracle exactly.
+  * mcs            — logits over the WiFi MCS tiers; `mcs_probs` is a
+                     temperature-annealed softmax, and the engine mixes
+                     the per-tier energy/link scales by those weights
+                     (one-hot == `jnp.take` of the int path).
+  * throttle trips — the day-scan's hysteresis comparisons use the
+                     straight-through estimators below (`ste_gt` /
+                     `ste_lt`): the forward value is the *exact* hard
+                     comparison (bit-identical to the Python reference
+                     integrator), the backward pass substitutes a
+                     sigmoid surrogate so trip/clear thresholds receive
+                     gradients.
+  * table levels   — `take_linear` indexes throttle-level tables with a
+                     float level: exact at integer levels, linear
+                     (sub)gradient between them.
+
+On top sit the generic optimization utilities: `uniform_sample` /
+`clip` / `project` over a space, and `adam_init` / `adam_update` — the
+projected-Adam step `dse.gradient_descend` vmaps across restarts.
+
+Standard spaces: `device_space(platform)` (the ScenarioSet knobs),
+`policy_space()` (throttle trip points + hysteresis band widths; the
+band parameterization keeps clear-below-trip satisfied under any
+projection).  `calibrate.theta_space()` builds the theta space from its
+calibration bounds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .platform import PlatformSpec
+
+CONTINUOUS = "continuous"
+DISCRETE = "discrete"
+
+
+@dataclass(frozen=True)
+class Knob:
+    """One declared design-space leaf.
+
+    `lo`/`hi` bound the raw leaf value (for DISCRETE knobs these bound
+    the *logits*, not the relaxed probabilities); `shape` is the leaf
+    shape of one design point (scalar knobs use ())."""
+    name: str
+    lo: float
+    hi: float
+    tag: str = CONTINUOUS
+    shape: tuple = ()
+    doc: str = ""
+
+    def __post_init__(self):
+        if self.tag not in (CONTINUOUS, DISCRETE):
+            raise ValueError(f"knob {self.name!r}: tag must be "
+                             f"{CONTINUOUS!r} or {DISCRETE!r}")
+        if not self.lo < self.hi:
+            raise ValueError(f"knob {self.name!r}: need lo < hi, "
+                             f"got [{self.lo}, {self.hi}]")
+
+
+@dataclass(frozen=True)
+class DesignSpace:
+    """An ordered set of `Knob`s; design points are {name: array} dicts."""
+    knobs: tuple
+
+    def __post_init__(self):
+        names = [k.name for k in self.knobs]
+        if len(names) != len(set(names)):
+            raise ValueError(f"duplicate knob names in {names}")
+
+    def __len__(self) -> int:
+        return len(self.knobs)
+
+    def names(self) -> tuple:
+        return tuple(k.name for k in self.knobs)
+
+    def knob(self, name: str) -> Knob:
+        for k in self.knobs:
+            if k.name == name:
+                return k
+        raise KeyError(f"unknown knob {name!r}; one of {self.names()}")
+
+    def subset(self, names) -> "DesignSpace":
+        return DesignSpace(tuple(self.knob(n) for n in names))
+
+    # -- points -------------------------------------------------------------
+    def midpoint(self) -> dict:
+        return {k.name: jnp.full(k.shape, 0.5 * (k.lo + k.hi))
+                for k in self.knobs}
+
+    def validate(self, point: dict) -> dict:
+        """Check leaf names/shapes (bounds are enforced by `clip`)."""
+        missing = set(self.names()) - set(point)
+        extra = set(point) - set(self.names())
+        if missing or extra:
+            raise ValueError(f"design point keys mismatch: missing "
+                             f"{sorted(missing)}, extra {sorted(extra)}")
+        for k in self.knobs:
+            got = tuple(np.shape(point[k.name]))[-len(k.shape):] \
+                if k.shape else ()
+            if k.shape and got != k.shape:
+                raise ValueError(f"knob {k.name!r}: trailing shape {got} "
+                                 f"!= declared {k.shape}")
+        return point
+
+    def clip(self, point: dict) -> dict:
+        """Project a point (or a batch of points) back into bounds."""
+        return {k.name: jnp.clip(point[k.name], k.lo, k.hi)
+                for k in self.knobs}
+
+    def uniform_sample(self, key, n: int) -> dict:
+        """(n,)-batched uniform-in-bounds restarts (leading axis n)."""
+        keys = jax.random.split(key, len(self.knobs))
+        return {k.name: jax.random.uniform(
+            kk, (n,) + k.shape, minval=k.lo, maxval=k.hi)
+            for k, kk in zip(self.knobs, keys)}
+
+    def to_dict(self) -> dict:
+        return {"knobs": [{"name": k.name, "lo": k.lo, "hi": k.hi,
+                           "tag": k.tag, "shape": list(k.shape),
+                           "doc": k.doc} for k in self.knobs]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DesignSpace":
+        return cls(tuple(Knob(k["name"], float(k["lo"]), float(k["hi"]),
+                              k["tag"], tuple(k["shape"]),
+                              k.get("doc", ""))
+                         for k in d["knobs"]))
+
+
+# ---------------------------------------------------------------------------
+# smooth relaxations of discrete structure
+# ---------------------------------------------------------------------------
+
+def placement_probs(logits, tau: float = 1.0):
+    """Temperature-annealed per-primitive on-device probabilities.
+
+    tau -> 0 sharpens toward the hard 0/1 mask; the batched relaxed
+    engine consumes the probabilities directly."""
+    return jax.nn.sigmoid(logits / tau)
+
+
+def mcs_probs(logits, tau: float = 1.0):
+    """Temperature-annealed soft one-hot over WiFi MCS tiers."""
+    return jax.nn.softmax(logits / tau, axis=-1)
+
+
+def ste_gt(x, thresh, beta):
+    """Straight-through x > thresh.
+
+    Forward: the exact hard comparison (0.0/1.0), so scanned dynamics
+    stay bit-identical to the non-relaxed integrator.  Backward: the
+    sigmoid surrogate's gradient flows to both `x` and `thresh` — this
+    is the path that makes throttle trip points optimizable."""
+    hard = (x > thresh).astype(jnp.result_type(x, thresh, float))
+    soft = jax.nn.sigmoid((x - thresh) * beta)
+    # parenthesization matters: (soft - sg(soft)) is EXACTLY 0.0 in
+    # every float width, so the forward value is exactly `hard`;
+    # (hard + soft) - sg(soft) would round at the ulp and leak ~6e-8
+    # into the scanned trigger state
+    return hard + (soft - jax.lax.stop_gradient(soft))
+
+
+def ste_lt(x, thresh, beta):
+    """Straight-through x < thresh (see `ste_gt`)."""
+    hard = (x < thresh).astype(jnp.result_type(x, thresh, float))
+    soft = jax.nn.sigmoid((thresh - x) * beta)
+    return hard + (soft - jax.lax.stop_gradient(soft))
+
+
+def take_linear(table, idx_f):
+    """Index the last axis of `table` at float position `idx_f`.
+
+    Exact table lookup at integer positions (frac == 0 contributes an
+    exact `a*1 + b*0`), linear interpolation between them — so a
+    straight-through throttle level carries the finite difference
+    `table[l+1] - table[l]` as its gradient."""
+    n = table.shape[-1]
+    l0 = jnp.clip(jnp.floor(idx_f), 0, n - 1)
+    frac = idx_f - l0
+    i0 = l0.astype(jnp.int32)
+    i1 = jnp.minimum(i0 + 1, n - 1)
+    return (jnp.take(table, i0, axis=-1) * (1.0 - frac)
+            + jnp.take(table, i1, axis=-1) * frac)
+
+
+def soft_indicator(x, margin, beta):
+    """Smooth 1[x > margin] for surrogate objectives (e.g. soft
+    time-to-empty = sum of soft-alive steps)."""
+    return jax.nn.sigmoid((x - margin) * beta)
+
+
+# ---------------------------------------------------------------------------
+# standard spaces
+# ---------------------------------------------------------------------------
+
+LOGIT_LO, LOGIT_HI = -6.0, 6.0
+
+
+def device_space(platform: PlatformSpec | None = None,
+                 n_mcs: int = 3) -> DesignSpace:
+    """The ScenarioSet knob set as one differentiable space.
+
+    Compression and fps_scale are optimized in log2 (their sweeps span
+    decades); placement/MCS are DISCRETE logits leaves."""
+    n_prim = len(platform.primitives) if platform is not None else 4
+    return DesignSpace((
+        Knob("placement_logits", LOGIT_LO, LOGIT_HI, DISCRETE, (n_prim,),
+             "per-primitive on-device Bernoulli logits"),
+        Knob("log2_compression", 0.0, 7.0, CONTINUOUS, (),
+             "visual stream compression = 2**x (1..128)"),
+        Knob("log2_fps_scale", 0.0, 5.0, CONTINUOUS, (),
+             "sensor frame-rate reduction = 2**x (1..32)"),
+        Knob("upload_duty", 0.02, 1.0, CONTINUOUS, (),
+             "VAD/saliency uplink gating"),
+        Knob("brightness", 0.0, 1.0, CONTINUOUS, (),
+             "display brightness (display SKUs)"),
+        Knob("mcs_logits", LOGIT_LO, LOGIT_HI, DISCRETE, (n_mcs,),
+             "WiFi MCS tier softmax logits"),
+    ))
+
+
+def device_vec(point: dict, tau: float = 1.0) -> dict:
+    """DesignPoint -> the relaxed engine's knob vector
+    (`scenarios.evaluate_relaxed`).  Leading batch axes pass through."""
+    return {
+        "placement": placement_probs(point["placement_logits"], tau),
+        "compression": 2.0 ** point["log2_compression"],
+        "fps_scale": 2.0 ** point["log2_fps_scale"],
+        "upload_duty": point["upload_duty"],
+        "brightness": point["brightness"],
+        "mcs_weights": mcs_probs(point["mcs_logits"], tau),
+    }
+
+
+def policy_space() -> DesignSpace:
+    """Throttle-governor thresholds as a differentiable space.
+
+    Hysteresis is parameterized as (trip, band) with band > 0, so
+    clear = trip - band (thermal) / trip + band (SoC) satisfies the
+    policy invariants under any clipping/projection."""
+    return DesignSpace((
+        Knob("temp_trip_c", 34.0, 43.0, CONTINUOUS, (),
+             "skin temp that trips the thermal throttle"),
+        Knob("temp_band_c", 0.5, 6.0, CONTINUOUS, (),
+             "thermal hysteresis band; clear = trip - band"),
+        Knob("soc_trip", 0.02, 0.6, CONTINUOUS, (),
+             "state of charge that trips the battery throttle"),
+        Knob("soc_band", 0.02, 0.35, CONTINUOUS, (),
+             "SoC hysteresis band; clear = trip + band"),
+    ))
+
+
+def policy_point(policy) -> dict:
+    """daysim.ThrottlePolicy -> a policy_space design point."""
+    return {
+        "temp_trip_c": jnp.asarray(float(policy.temp_trip_c)),
+        "temp_band_c": jnp.asarray(float(policy.temp_trip_c
+                                         - policy.temp_clear_c)),
+        "soc_trip": jnp.asarray(float(policy.soc_trip)),
+        "soc_band": jnp.asarray(float(policy.soc_clear - policy.soc_trip)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# projected Adam over design points (pytree-generic)
+# ---------------------------------------------------------------------------
+
+def adam_init(point: dict) -> dict:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, point)
+    return {"m": zeros,
+            "v": jax.tree_util.tree_map(jnp.zeros_like, point),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(point: dict, grads: dict, state: dict, lr: float,
+                b1: float = 0.9, b2: float = 0.999,
+                eps: float = 1e-8) -> tuple:
+    """One Adam step on a design-point pytree; returns (point, state).
+
+    Callers compose with `space.clip` for the projection — together
+    this is the projected-Adam step `dse.gradient_descend` vmaps."""
+    t = state["t"] + 1
+    tm = jax.tree_util.tree_map
+    m = tm(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = tm(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.result_type(float))
+    new = tm(lambda p, m_, v_: p - lr * (m_ / (1 - b1 ** tf))
+             / (jnp.sqrt(v_ / (1 - b2 ** tf)) + eps), point, m, v)
+    return new, {"m": m, "v": v, "t": t}

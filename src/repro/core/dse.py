@@ -43,8 +43,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import aria2, offload, scenarios
+from . import aria2, design, offload, scenarios
 from .aria2 import PRIMITIVES, Scenario
+from .design import DesignSpace
 from .platform import PlatformSpec, diff as platform_diff
 from .scenarios import MCS_TIERS, ScenarioSet, all_placements
 
@@ -436,6 +437,230 @@ def survives_day(rep=None, skin_limit_c: float = 43.0, **kw):
         raise TypeError(f"got both a DayReport and grid kwargs "
                         f"{sorted(kw)}; pass one or the other")
     return rep.survives(skin_limit_c)
+
+
+# ---------------------------------------------------------------------------
+# gradient-based design optimization on the unified DesignSpace pytree
+# ---------------------------------------------------------------------------
+
+@dataclass
+class GradResult:
+    """`gradient_descend` output: each restart's BEST-SEEN point along
+    its whole trajectory (leading dim R; not the final Adam iterate —
+    projected Adam can overshoot late) with the matching losses, plus
+    the best point/loss across restarts."""
+    space: DesignSpace
+    points: dict                    # {knob: (R, ...)}
+    losses: np.ndarray              # (R,)
+    best_point: dict                # {knob: (...)}  best restart
+    best_loss: float
+    steps: int
+
+    def restart_points(self) -> list:
+        r = len(self.losses)
+        return [{k: np.asarray(v)[i] for k, v in self.points.items()}
+                for i in range(r)]
+
+
+def gradient_descend(space: DesignSpace, loss_fn, n_restarts: int = 8,
+                     steps: int = 200, lr: float = 0.05, seed: int = 0,
+                     init: dict | None = None) -> GradResult:
+    """Projected Adam over a DesignSpace point, vmapped multi-restart.
+
+    `loss_fn(point) -> scalar` must be jax-traceable; every Adam update
+    evaluates ALL restarts in one vmapped value_and_grad call, and the
+    projection (`space.clip`) keeps every leaf inside its declared
+    bounds.  Restart 0 starts from `init` when given (so a known-good
+    grid point can only be improved on); the rest sample uniformly in
+    bounds.  The best point/loss seen over ALL steps and restarts is
+    tracked on-device (no per-step host sync)."""
+    key = jax.random.key(seed)
+    pts = space.uniform_sample(key, n_restarts)
+    if init is not None:
+        space.validate(init)
+        pts = {k: v.at[0].set(jnp.asarray(init[k]))
+               for k, v in pts.items()}
+    pts = space.clip(pts)
+    vg = jax.vmap(jax.value_and_grad(loss_fn))
+    state = jax.vmap(design.adam_init)(pts)
+
+    @jax.jit
+    def step(carry, _):
+        pts, st, best_loss, best_pts = carry
+        losses, grads = vg(pts)
+        new, st = jax.vmap(design.adam_update,
+                           in_axes=(0, 0, 0, None))(pts, grads, st, lr)
+        new = space.clip(new)
+        better = losses < best_loss
+        best_loss = jnp.where(better, losses, best_loss)
+        best_pts = jax.tree_util.tree_map(
+            lambda b, p: jnp.where(
+                better.reshape((-1,) + (1,) * (p.ndim - 1)), p, b),
+            best_pts, pts)
+        return (new, st, best_loss, best_pts), losses
+
+    init_best = jnp.full((n_restarts,), jnp.inf)
+    (pts, _, best_loss, best_pts), _ = jax.lax.scan(
+        step, (pts, state, init_best, pts), None, length=steps)
+    # one final evaluation so the last projected update also competes
+    losses, _ = vg(pts)
+    better = losses < best_loss
+    best_loss = np.asarray(jnp.where(better, losses, best_loss))
+    best_pts = jax.tree_util.tree_map(
+        lambda b, p: jnp.where(
+            jnp.asarray(better).reshape((-1,) + (1,) * (p.ndim - 1)),
+            p, b),
+        best_pts, pts)
+    i = int(np.argmin(best_loss))
+    best = {k: np.asarray(v)[i] for k, v in best_pts.items()}
+    return GradResult(space, {k: np.asarray(v) for k, v in
+                              best_pts.items()},
+                      np.asarray(best_loss), best,
+                      float(best_loss[i]), steps)
+
+
+def sensitivity_map(platform=None, sset: ScenarioSet | None = None,
+                    theta=None) -> dict:
+    """Per-scenario d(total mW)/d(knob) over a whole grid in ONE vjp.
+
+    Each scenario's total depends only on its own knob row (the engine
+    is a vmap), so pulling back a ones-cotangent through
+    `scenarios.total_mw_relaxed` yields the exact per-scenario gradient
+    rows for every knob simultaneously — (N,) for scalar knobs, (N, 4)
+    for placement probabilities, (N, 3) for MCS weights — one reverse
+    pass for the entire map, however large the grid.
+
+    The placement column answers "what is the marginal mW of moving
+    this primitive on-device for THIS design point" — the paper's Fig 4
+    bars, continuously, everywhere on the grid at once."""
+    plat = _plat(platform)
+    if sset is None:
+        sset = ScenarioSet.grid(
+            placements=all_placements(plat.supported_primitives()),
+            primitives=plat.primitives)
+    vec = scenarios.relax_vec(sset)
+
+    def f(v):
+        return scenarios.total_mw_relaxed(plat, v, theta)
+
+    total, pull = jax.vjp(f, vec)
+    grads = pull(jnp.ones_like(total))[0]
+    return {
+        "sset": sset,
+        "total_mw": np.asarray(total),
+        "d_mw_d": {k: np.asarray(g) for k, g in grads.items()},
+    }
+
+
+def sensitivity_rows(sense: dict, top: int = 10) -> list:
+    """Human-readable top rows of a `sensitivity_map` (largest placement
+    leverage first: the biggest |d mW / d placement prob| anywhere)."""
+    sset = sense["sset"]
+    pl = sense["d_mw_d"]["placement"]
+    lever = np.abs(pl).max(axis=1)
+    order = np.argsort(-lever)[:top]
+    return [{
+        "scenario": sset.label(int(i)),
+        "compression": float(sset.compression[i]),
+        "fps_scale": float(sset.fps_scale[i]),
+        "total_mw": round(float(sense["total_mw"][i]), 1),
+        "d_mw_d_placement": {p: round(float(pl[i, j]), 1)
+                             for j, p in enumerate(sset.primitives)},
+        "d_mw_d_upload_duty": round(
+            float(sense["d_mw_d"]["upload_duty"][i]), 1),
+        "d_mw_d_fps_scale": round(
+            float(sense["d_mw_d"]["fps_scale"][i]), 2),
+    } for i in order]
+
+
+def optimize_policy(platform, design_row, schedule, policy_template,
+                    peak_cap_c: float | None = None,
+                    n_restarts: int = 6, steps: int = 120,
+                    lr: float = 0.08, seed: int = 0,
+                    dt_s: float = 60.0, peak_weight: float = 8.0,
+                    **day_kw) -> dict:
+    """Gradient-optimize ThrottlePolicy trip/clear bands through the
+    day-scan (straight-through trip comparisons), then HARD-validate.
+
+    Maximizes the smooth time-to-empty surrogate subject to a softplus
+    penalty on skin-time above `peak_cap_c` (default: the template
+    policy's own hard peak — "equal peak skin").  The template's
+    thresholds seed restart 0, so the optimizer can only improve on the
+    grid policy it starts from; every restart's final point is hardened
+    back into a `ThrottlePolicy` and re-simulated with the exact
+    (non-relaxed) integrator — the returned winner is the best HARD
+    time-to-empty among candidates whose hard peak respects the cap.
+
+    `day_kw` accepts any day knob of `daysim.relaxed_day_fn` or
+    `daysim.simulate` (standby_mw/battery/thermal/theta/shutdown_c,
+    n_users/results_dir, tau/ste_beta_*/soft_alive_*); each is routed
+    only to the callee that understands it, unknown keys raise."""
+    from . import daysim
+    shared = {"standby_mw", "battery", "thermal", "theta", "shutdown_c",
+              "n_users", "results_dir"}
+    relax_only = {"tau", "ste_beta_c", "ste_beta_soc",
+                  "soft_alive_margin", "soft_alive_beta"}
+    unknown = set(day_kw) - shared - relax_only
+    if unknown:
+        raise TypeError(f"optimize_policy: unknown day kwargs "
+                        f"{sorted(unknown)}")
+    relax_kw = {k: v for k, v in day_kw.items()
+                if k in shared | relax_only}
+    sim_kw = {k: v for k, v in day_kw.items() if k in shared}
+    pol = daysim._resolve(policy_template, daysim.get_policy,
+                          daysim.ThrottlePolicy)
+    if not pol.actions:
+        raise ValueError("policy_template needs throttle actions to tune")
+    f = daysim.relaxed_day_fn(platform, schedule, pol, design_row,
+                              dt_s=dt_s, **relax_kw)
+    space = design.policy_space()
+    init = design.policy_point(pol)
+    base = daysim.simulate(platform, design_row, schedule, pol, dt_s=dt_s,
+                           **sim_kw)
+    cap = (float(base.summary["peak_skin_c"]) if peak_cap_c is None
+           else float(peak_cap_c))
+
+    def loss(point):
+        out = f(point)
+        exceed = jnp.mean(jax.nn.softplus(
+            (out["t_skin"] - cap) * 4.0) / 4.0)
+        return -out["soft_tte_h"] + peak_weight * exceed
+
+    res = gradient_descend(space, loss, n_restarts=n_restarts,
+                           steps=steps, lr=lr, seed=seed, init=init)
+
+    def harden(pt) -> daysim.ThrottlePolicy:
+        return daysim.ThrottlePolicy(
+            f"{pol.name}_grad",
+            temp_trip_c=float(pt["temp_trip_c"]),
+            temp_clear_c=float(pt["temp_trip_c"] - pt["temp_band_c"]),
+            soc_trip=float(pt["soc_trip"]),
+            soc_clear=float(min(pt["soc_trip"] + pt["soc_band"], 0.95)),
+            actions=pol.actions)
+
+    candidates = []
+    for pt in res.restart_points():
+        cand = harden(pt)
+        tr = daysim.simulate(platform, design_row, schedule, cand,
+                             dt_s=dt_s, **sim_kw)
+        candidates.append((tr.summary["time_to_empty_h"],
+                           tr.summary["peak_skin_c"], cand, pt))
+    feasible = [c for c in candidates if c[1] <= cap + 1e-6]
+    pool = feasible or candidates
+    tte, peak, best_pol, best_pt = max(pool, key=lambda c: c[0])
+    return {
+        "policy": best_pol,
+        "point": {k: float(v) for k, v in best_pt.items()},
+        "tte_h": float(tte),
+        "peak_skin_c": float(peak),
+        "peak_cap_c": cap,
+        "feasible": bool(feasible),
+        "baseline": {"policy": pol.name,
+                     "tte_h": float(base.summary["time_to_empty_h"]),
+                     "peak_skin_c": float(base.summary["peak_skin_c"])},
+        "gain_h": float(tte - base.summary["time_to_empty_h"]),
+        "restarts": n_restarts, "steps": steps,
+    }
 
 
 def platform_ablation(names=None, on_device=(), compression: float = 10.0,

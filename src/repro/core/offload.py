@@ -321,6 +321,38 @@ def pods_breakdown(sset: ScenarioSet, n_users: float = 1e6,
     return PodsBreakdown(pods, by, archs, cells, sources, active)
 
 
+def pods_relaxed(vec: dict, n_users: float = 1e6, duty: float = 0.35,
+                 results_dir=None, primitives=None):
+    """Differentiable fleet sizing over a RELAXED knob vector.
+
+    The smooth counterpart of `pods_breakdown` for the DesignSpace
+    gradient path (`scenarios.evaluate_relaxed` vecs): the audio stream
+    is gated by the ASR placement *probability* (its multilinear
+    relaxation — exact at binary points), RGB->VLM ingest scales with
+    the continuous fps knob, and upload_duty gates everything, so
+    `jax.grad` sees how a design move shifts backend pods.  Capacities
+    come from the same cached CapacityTable; returns a jnp array with
+    the vec's leading shape."""
+    import jax.numpy as jnp
+    from .platform import PRIMITIVES as _P
+    prim = primitives or _P
+    table = capacity_table(results_dir)
+    asr_p = vec["placement"][..., prim.index("asr")]
+    fps = jnp.maximum(vec["fps_scale"], 1.0)
+    gate = n_users * duty * vec["upload_duty"]
+    pods = 0.0
+    for s, (arch0, cell0, tok) in STREAM_SERVICE.items():
+        _, _, cap, _ = table.resolve(
+            STREAM_CANDIDATES.get(s, ((arch0, cell0),)))
+        if s == "rgb":
+            pods = pods + gate * (tok / cap) / fps
+        elif s == "audio":
+            pods = pods + gate * (tok / cap) * (1.0 - asr_p)
+        else:
+            pods = pods + gate * (tok / cap)
+    return pods
+
+
 def pods_vector(sset: ScenarioSet, n_users: float = 1e6, duty: float = 0.35,
                 results_dir=None) -> tuple[np.ndarray, dict]:
     """(N,) backend pods for a whole ScenarioSet (see `pods_breakdown`).

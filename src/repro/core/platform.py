@@ -113,6 +113,8 @@ class PlatformSpec:
     ip_rates: tuple             # ((rate key, GFLOP/s), ...)
     duty_tables: tuple          # ((resource, (duty per placement idx,)),)
     primitives: tuple = PRIMITIVES
+    companion: tuple = ()       # ((param, value), ...): pocket-host node
+                                # data for split SKUs (daysim.puck_for)
 
     # -- convenience views --------------------------------------------------
     def component_names(self) -> tuple:
@@ -142,6 +144,10 @@ class PlatformSpec:
         """Back-compat view of the ISP table (pre-duty_tables API)."""
         return self.duty_table("isp", 1.0)
 
+    def companion_dict(self) -> dict:
+        """Pocket-host (puck) node parameters, {} for single-node SKUs."""
+        return dict(self.companion)
+
     def theta_dict(self) -> dict:
         return dict(self.theta)
 
@@ -157,7 +163,8 @@ class PlatformSpec:
                 replace: Iterable[ComponentSpec] = (),
                 theta: dict | None = None,
                 raw_mbps: dict | None = None,
-                ip_rates: dict | None = None) -> "PlatformSpec":
+                ip_rates: dict | None = None,
+                companion: dict | None = None) -> "PlatformSpec":
         """Derive a SKU: drop/add/replace components; override theta,
         sensor raw rates, or accelerator rates (e.g. a camera-only SKU
         zeroes the GS/ET streams it no longer captures)."""
@@ -182,9 +189,17 @@ class PlatformSpec:
         if unknown:
             raise KeyError(f"variant refers to unknown ip rates {unknown}")
         rates.update(ip_rates or {})
+        # companion: None inherits, a non-empty dict merges overrides,
+        # an explicit {} CLEARS it (derive a single-node SKU from a
+        # split one)
+        if companion is not None and not companion:
+            comp = {}
+        else:
+            comp = dict(self.companion)
+            comp.update(companion or {})
         return _dc_replace(self, name=name, components=tuple(comps),
                            theta=_kv(th), raw_mbps=_kv(raw),
-                           ip_rates=_kv(rates))
+                           ip_rates=_kv(rates), companion=_kv(comp))
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
@@ -197,6 +212,7 @@ class PlatformSpec:
             "ip_rates": dict(self.ip_rates),
             "duty_tables": {name: list(tab) for name, tab in
                             self.duty_tables},
+            "companion": dict(self.companion),
             "components": [
                 {"name": c.name, "category": c.category,
                  "process": c.process, "rail": c.rail,
@@ -224,7 +240,8 @@ class PlatformSpec:
                    rails=_kv(d["rails"]), theta=_kv(d["theta"]),
                    raw_mbps=_kv(d["raw_mbps"]), ip_rates=_kv(d["ip_rates"]),
                    duty_tables=tables,
-                   primitives=tuple(d["primitives"]))
+                   primitives=tuple(d["primitives"]),
+                   companion=_kv(d.get("companion", {})))
 
 
 # ---------------------------------------------------------------------------
@@ -270,6 +287,7 @@ def diff(a: PlatformSpec, b: PlatformSpec) -> dict:
         "raw_mbps": _kvdiff(a.raw_mbps, b.raw_mbps),
         "ip_rates": _kvdiff(a.ip_rates, b.ip_rates),
         "rails": _kvdiff(a.rails, b.rails),
+        "companion": _kvdiff(a.companion, b.companion),
     }
 
 

@@ -168,6 +168,9 @@ class ScenarioSet:
         idx = np.asarray(idx)
         idx = (np.flatnonzero(idx) if idx.dtype == bool
                else idx.astype(np.int64))
+        if idx.size and (idx.min() < -len(self) or idx.max() >= len(self)):
+            raise IndexError(f"take indices out of range for "
+                             f"{len(self)}-row ScenarioSet")
         names = tuple(self.names[i] for i in idx) if self.names else ()
         return _dc_replace(
             self, placement=self.placement[idx],
@@ -175,6 +178,30 @@ class ScenarioSet:
             fps_scale=self.fps_scale[idx], mcs_tier=self.mcs_tier[idx],
             upload_duty=self.upload_duty[idx],
             brightness=self.brightness[idx], names=names)
+
+    def row_matrix(self) -> np.ndarray:
+        """(N, n_prim + 5) float64 matrix of every knob column — the
+        canonical row identity used for deduplication."""
+        return np.column_stack([
+            np.asarray(self.placement, np.float64),
+            np.asarray(self.compression, np.float64),
+            np.asarray(self.fps_scale, np.float64),
+            np.asarray(self.mcs_tier, np.float64),
+            np.asarray(self.upload_duty, np.float64),
+            np.asarray(self.brightness, np.float64)])
+
+    def dedupe(self) -> tuple:
+        """(unique ScenarioSet, inverse indices): `inverse` maps every
+        original row to its unique representative, so
+        `evaluate(plat, unique).total_mw[inverse]` recovers the full
+        batch from one call on the unique rows.  Batch-level dedup for
+        sweeps that enumerate redundant grids; the daysim table
+        precompute solves the same problem cross-call with its own
+        keyed row cache (`daysim._ROW_CACHE`)."""
+        _, first, inverse = np.unique(self.row_matrix(), axis=0,
+                                      return_index=True,
+                                      return_inverse=True)
+        return self.take(first), inverse.reshape(-1)
 
     def with_knob(self, **arrays) -> "ScenarioSet":
         """Replace whole knob columns (broadcast scalars over N)."""
@@ -227,16 +254,22 @@ class Features:
     r_dsp_asr: float
 
 
-def _features(platform: PlatformSpec, vec: dict, th: dict) -> Features:
+def _features_core(platform: PlatformSpec, on, c, fs, duty, brightness,
+                   duty_of, mcs_ebit, mcs_link) -> Features:
+    """Shared knob->feature math of the hard and relaxed paths.
+
+    `on` may be a hard 0/1 mask or relaxed Bernoulli probabilities; the
+    arithmetic below is its multilinear extension, so binary inputs
+    reproduce the int-indexed oracle bit for bit.  `duty_of` abstracts
+    the placement-indexed duty-table lookup (hard `jnp.take` vs the
+    relaxed multilinear interpolation)."""
     R = dict(platform.raw_mbps)
     rates = dict(platform.ip_rates)
     prim = platform.primitives
-    on = vec["placement"]
     vio = on[prim.index("vio")]
     et = on[prim.index("eye_tracking")]
     asr = on[prim.index("asr")]
     ht = on[prim.index("hand_tracking")]
-    c, fs = vec["compression"], vec["fps_scale"]
     n_on = jnp.sum(on)
     fps_f = 0.35 + 0.65 / fs
 
@@ -248,6 +281,24 @@ def _features(platform: PlatformSpec, vec: dict, th: dict) -> Features:
     codec_raw = visual_off / fs
     raw_visual = (R["rgb"] + R["gs"] + R["et"]) / fs
 
+    return Features(
+        vio=vio, et=et, asr=asr, ht=ht, n_on=n_on, compression=c,
+        fps_scale=fs, fps_f=fps_f, mbps=mbps, mbps_eff=mbps * duty,
+        codec_raw=codec_raw, raw_visual=raw_visual,
+        isp_duty=duty_of("isp", 1.0),
+        duty_npu=duty_of("npu", 0.0), duty_dsp=duty_of("dsp", 0.0),
+        duty_dram=duty_of("dram_bus", 0.0),
+        upload_duty=duty, brightness=brightness,
+        mcs_ebit_scale=mcs_ebit, mcs_link_scale=mcs_link,
+        r_npu_ht=rates.get("npu_ht", 0.0), r_npu_et=rates.get("npu_et", 0.0),
+        r_hwa_vio=rates.get("hwa_vio", 0.0),
+        r_dsp_asr=rates.get("dsp_asr", 0.0))
+
+
+def _features(platform: PlatformSpec, vec: dict, th: dict) -> Features:
+    """Int-indexed feature path (the parity oracle's engine)."""
+    prim = platform.primitives
+    on = vec["placement"]
     # placement-mask index -> per-resource duty from the event-driven
     # taskgraph sim (ISP duty rule + NPU/DSP/DRAM contention terms)
     bits = jnp.asarray([1 << i for i in range(len(prim))], jnp.float32)
@@ -258,20 +309,39 @@ def _features(platform: PlatformSpec, vec: dict, th: dict) -> Features:
         return jnp.take(jnp.asarray(tab, jnp.float32), idx)
 
     mcs = vec["mcs_tier"]
-    duty = vec["upload_duty"]
-    return Features(
-        vio=vio, et=et, asr=asr, ht=ht, n_on=n_on, compression=c,
-        fps_scale=fs, fps_f=fps_f, mbps=mbps, mbps_eff=mbps * duty,
-        codec_raw=codec_raw, raw_visual=raw_visual,
-        isp_duty=duty_of("isp", 1.0),
-        duty_npu=duty_of("npu", 0.0), duty_dsp=duty_of("dsp", 0.0),
-        duty_dram=duty_of("dram_bus", 0.0),
-        upload_duty=duty, brightness=vec["brightness"],
-        mcs_ebit_scale=jnp.take(jnp.asarray(_MCS_EBIT), mcs),
-        mcs_link_scale=jnp.take(jnp.asarray(_MCS_LINK), mcs),
-        r_npu_ht=rates.get("npu_ht", 0.0), r_npu_et=rates.get("npu_et", 0.0),
-        r_hwa_vio=rates.get("hwa_vio", 0.0),
-        r_dsp_asr=rates.get("dsp_asr", 0.0))
+    return _features_core(
+        platform, on, vec["compression"], vec["fps_scale"],
+        vec["upload_duty"], vec["brightness"], duty_of,
+        jnp.take(jnp.asarray(_MCS_EBIT), mcs),
+        jnp.take(jnp.asarray(_MCS_LINK), mcs))
+
+
+def _features_relaxed(platform: PlatformSpec, vec: dict,
+                      th: dict) -> Features:
+    """Differentiable feature path over relaxed (soft) discrete knobs.
+
+    `placement` holds per-primitive on-device probabilities; the
+    placement-indexed duty tables are interpolated multilinearly — the
+    exact expectation over the product-Bernoulli placement distribution,
+    which reduces to plain indexing at binary probabilities.  MCS scales
+    are mixed by `mcs_weights` (one-hot == `jnp.take`)."""
+    prim = platform.primitives
+    on = vec["placement"]
+    # (2^n, n) mask enumeration in placement-index order
+    masks = jnp.asarray([[idx >> j & 1 for j in range(len(prim))]
+                         for idx in range(1 << len(prim))],
+                        jnp.result_type(float))
+    w = jnp.prod(on * masks + (1.0 - on) * (1.0 - masks), axis=-1)
+
+    def duty_of(resource, default):
+        tab = platform.duty_table(resource, default)
+        return w @ jnp.asarray(tab)
+
+    mw = vec["mcs_weights"]
+    return _features_core(
+        platform, on, vec["compression"], vec["fps_scale"],
+        vec["upload_duty"], vec["brightness"], duty_of,
+        mw @ jnp.asarray(_MCS_EBIT), mw @ jnp.asarray(_MCS_LINK))
 
 
 # ---------------------------------------------------------------------------
@@ -338,6 +408,32 @@ def _engine(platform: PlatformSpec):
     axes = {"placement": 0, "compression": 0, "fps_scale": 0,
             "mcs_tier": 0, "upload_duty": 0, "brightness": 0}
     return jax.jit(jax.vmap(single, in_axes=(axes, None)))
+
+
+def _single_relaxed(platform: PlatformSpec, vec: dict, th: dict) -> dict:
+    """One relaxed design point -> loads/total/mbps (unjitted symbolic
+    core shared by the batched engine and the daysim gradient path)."""
+    comps = platform.components
+    rails = platform.rail_dict()
+    rail_eff = np.array([rails[c.rail] for c in comps], np.float32)
+    f = _features_relaxed(platform, vec, th)
+    loads = jnp.stack([LOAD_KINDS[c.load.kind](c.load.p(), f, th)
+                       for c in comps])
+    eff = jnp.minimum(jnp.asarray(rail_eff) * th["eff_scale"], 0.97)
+    delivered = loads / eff
+    return {"loads": loads, "pd_loss": jnp.sum(delivered - loads),
+            "total": jnp.sum(delivered), "mbps": f.mbps_eff}
+
+
+RELAXED_AXES = {"placement": 0, "compression": 0, "fps_scale": 0,
+                "mcs_weights": 0, "upload_duty": 0, "brightness": 0}
+
+
+@functools.lru_cache(maxsize=32)
+def _engine_relaxed(platform: PlatformSpec):
+    def single(vec, th):
+        return _single_relaxed(platform, vec, th)
+    return jax.jit(jax.vmap(single, in_axes=(RELAXED_AXES, None)))
 
 
 def _theta(platform: PlatformSpec, theta=None) -> dict:
@@ -435,3 +531,70 @@ def offloaded_mbps(platform: PlatformSpec, sset: ScenarioSet, theta=None):
 def category_breakdown(platform: PlatformSpec, sset: ScenarioSet,
                        theta=None) -> dict:
     return evaluate(platform, sset, theta).category_breakdown()
+
+
+# ---------------------------------------------------------------------------
+# relaxed (differentiable-in-every-knob) evaluation
+# ---------------------------------------------------------------------------
+
+def relax_vec(sset: ScenarioSet) -> dict:
+    """ScenarioSet -> relaxed knob vector (hard rows as a special case).
+
+    Placement becomes float probabilities (0/1 for a hard set), the MCS
+    tier becomes a one-hot weight row — at these values the relaxed
+    engine reproduces `evaluate` exactly, which is the parity contract
+    tests/test_design_grad.py asserts."""
+    dt = np.float64 if jax.config.jax_enable_x64 else np.float32
+    return {
+        "placement": jnp.asarray(sset.placement, dt),
+        "compression": jnp.asarray(sset.compression, dt),
+        "fps_scale": jnp.asarray(sset.fps_scale, dt),
+        "upload_duty": jnp.asarray(sset.upload_duty, dt),
+        "brightness": jnp.asarray(sset.brightness, dt),
+        "mcs_weights": jnp.asarray(
+            np.eye(len(MCS_TIERS), dtype=dt)[np.asarray(sset.mcs_tier)]),
+    }
+
+
+def _validate_relaxed(platform: PlatformSpec, vec: dict) -> None:
+    missing = set(RELAXED_AXES) - set(vec)
+    if missing:
+        raise ValueError(f"relaxed vec missing knobs {sorted(missing)}")
+    n_prim = len(platform.primitives)
+    if vec["placement"].shape[-1] != n_prim:
+        raise ValueError(
+            f"placement last dim {vec['placement'].shape[-1]} != "
+            f"platform {platform.name!r} primitive count {n_prim}")
+    if vec["mcs_weights"].shape[-1] != len(MCS_TIERS):
+        raise ValueError(f"mcs_weights last dim must be {len(MCS_TIERS)}")
+
+
+def evaluate_relaxed(platform: PlatformSpec, vec: dict,
+                     theta=None) -> dict:
+    """Batched relaxed evaluation: one jitted vmap call, differentiable
+    in EVERY knob (placement probabilities, compression, fps, duty,
+    brightness, MCS weights) as well as theta.
+
+    `vec` is the relaxed knob pytree (see `relax_vec` /
+    `design.device_vec`), all leaves sharing leading dim N.  Returns
+    {"loads": (N, C), "total": (N,), "pd_loss": (N,), "mbps": (N,)}.
+    """
+    _validate_relaxed(platform, vec)
+    return _engine_relaxed(platform)(vec, _theta_relaxed(platform, theta))
+
+
+def _theta_relaxed(platform: PlatformSpec, theta=None) -> dict:
+    """Theta merge that PRESERVES traced/64-bit leaves (unlike `_theta`,
+    which casts to float32 — fine for the data path, fatal for x64
+    finite-difference checks)."""
+    th = {k: jnp.asarray(v) for k, v in platform.theta_dict().items()}
+    if theta:
+        th.update({k: jnp.asarray(v) for k, v in theta.items()})
+    return th
+
+
+def total_mw_relaxed(platform: PlatformSpec, vec: dict, theta=None):
+    """(N,) delivered totals; `jax.grad`/`jax.vjp` flow through every
+    knob leaf — the substrate for `dse.sensitivity_map` and
+    `dse.gradient_descend`."""
+    return evaluate_relaxed(platform, vec, theta)["total"]

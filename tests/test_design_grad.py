@@ -1,0 +1,401 @@
+"""The unified differentiable design core (core/design.py):
+
+  * relaxed-engine parity with the int-indexed oracle at hard points,
+  * finite-difference gradient correctness (64-bit, subprocess) through
+    both the batched kernel and the day-scan incl. the straight-through
+    throttle path,
+  * two-node (glasses + puck) SoC/energy conservation,
+  * charging segments + thermal shutdown as a hard constraint,
+  * the shared row-cache of the daysim table precompute,
+  * projected-Adam `dse.gradient_descend`, `dse.sensitivity_map`
+    (one-vjp sensitivity grids), and the vmapped calibration ensemble.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aria2, calibrate, daysim, design, dse, scenarios
+from repro.core.design import DesignSpace, Knob
+from repro.core.scenarios import ScenarioSet
+
+
+# ---------------------------------------------------------------------------
+# relaxed engine == int-indexed oracle at hard points
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("platform", ["aria2", "aria2_display",
+                                      "rayban_cam"])
+def test_relaxed_engine_matches_hard_oracle(platform):
+    """Binary placements + one-hot MCS through the relaxed kernel are
+    bit-for-bit the int-indexed engine (the parity contract that lets
+    the relaxed path replace it)."""
+    plat = dse._plat(platform)
+    sset = ScenarioSet.grid(
+        placements=dse.all_placements(plat.supported_primitives()),
+        compressions=(2.0, 16.0), fps_scales=(1.0, 4.0),
+        mcs_tiers=(0, 1, 2), upload_duties=(0.4,), brightnesses=(0.5,),
+        primitives=plat.primitives)
+    rep = scenarios.evaluate(plat, sset)
+    out = scenarios.evaluate_relaxed(plat, scenarios.relax_vec(sset))
+    np.testing.assert_array_equal(np.asarray(rep.total_mw),
+                                  np.asarray(out["total"]))
+    np.testing.assert_array_equal(np.asarray(rep.offloaded_mbps),
+                                  np.asarray(out["mbps"]))
+    np.testing.assert_array_equal(np.asarray(rep.loads_mw),
+                                  np.asarray(out["loads"]))
+
+
+def test_relaxed_vec_validation():
+    plat = aria2.aria2_platform()
+    vec = scenarios.relax_vec(ScenarioSet.grid(placements=((),),
+                                               compressions=(8.0,),
+                                               fps_scales=(1.0,)))
+    bad = dict(vec)
+    bad.pop("mcs_weights")
+    with pytest.raises(ValueError, match="missing knobs"):
+        scenarios.evaluate_relaxed(plat, bad)
+    bad = dict(vec)
+    bad["placement"] = bad["placement"][:, :2]
+    with pytest.raises(ValueError, match="placement last dim"):
+        scenarios.evaluate_relaxed(plat, bad)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: jax.grad == finite differences to 1e-4 (relative), x64
+# ---------------------------------------------------------------------------
+
+def test_gradients_match_finite_differences_x64():
+    """Runs tests/_fd_x64_check.py in a fresh 64-bit process: central
+    differences vs jax.grad through scenarios.evaluate_relaxed AND the
+    daysim scan (smooth + straight-through throttle paths), 1e-4
+    relative."""
+    script = os.path.join(os.path.dirname(__file__), "_fd_x64_check.py")
+    res = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, timeout=560)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "FD_OK" in res.stdout
+
+
+def test_ste_threshold_gradients_point_the_right_way():
+    """On a day that dies of battery, raising soc_trip (throttle
+    earlier) must RAISE the smooth time-to-empty surrogate — the
+    straight-through surrogate carries a usable, correctly-signed
+    gradient where the hard forward is piecewise constant."""
+    f = daysim.relaxed_day_fn("aria2_display", "field_day",
+                              "battery_saver",
+                              daysim.DEFAULT_DESIGNS[0], dt_s=120.0)
+    pt = design.policy_point(daysim.get_policy("battery_saver"))
+    g = jax.grad(lambda p: f(p)["soft_tte_h"])(pt)
+    assert float(g["soc_trip"]) > 0.0
+    # and the relaxed forward is the exact hard integrator
+    tr = daysim.simulate("aria2_display", daysim.DEFAULT_DESIGNS[0],
+                         "field_day", "battery_saver", dt_s=120.0)
+    out = f(pt)
+    assert float(out["tte_h"]) == pytest.approx(
+        tr.summary["time_to_empty_h"], abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# two-node puck split: conservation + coupling
+# ---------------------------------------------------------------------------
+
+def test_puck_split_two_node_soc_conservation():
+    """Each node's SoC drop must equal its own integrated drain (no
+    energy teleports between the packs), and the puck must actually be
+    loaded by the WAN relay of the glasses' offloaded uplink."""
+    plat = dse._plat("aria2_puck_split")
+    puck = daysim.puck_for(plat)
+    bat_g = daysim.BatterySpec("big_glasses", 8000.0)
+    tr = daysim.simulate("aria2_puck_split", daysim.DEFAULT_DESIGNS[0],
+                         "desk_day", "none", dt_s=30.0, battery=bat_g)
+    h = tr.dt_s / 3600.0
+    assert tr.soc[-1] > 0.0 and tr.soc_puck[-1] > 0.0, \
+        "conservation check needs both cells to finish non-empty"
+    for soc_trace, drain, cap in (
+            (tr.soc, tr.drain_mw, bat_g.capacity_mwh),
+            (tr.soc_puck, tr.drain_puck_mw, puck.battery.capacity_mwh)):
+        drained_mwh = float((drain * h).sum())
+        dsoc = 1.0 - float(soc_trace[-1])
+        assert drained_mwh == pytest.approx(dsoc * cap, rel=2e-3), \
+            (drained_mwh, dsoc * cap)
+    assert float(tr.summary["end_soc_puck"]) == pytest.approx(
+        float(tr.soc_puck[-1]), abs=1e-6)
+    # puck load includes the WAN relay on top of its host-SoC base
+    assert tr.p_puck_mw[np.asarray(tr.valid) > 0].max() > puck.base_mw
+
+
+def test_variant_companion_merge_and_clear():
+    """variant(companion=...) merges overrides; an explicit {} clears
+    the pocket host entirely (single-node SKU derived from a split)."""
+    plat = dse._plat("aria2_puck_split")
+    tweaked = plat.variant("tweak", companion={"battery_mwh": 60.0})
+    assert tweaked.companion_dict()["base_mw"] == \
+        plat.companion_dict()["base_mw"]
+    assert tweaked.companion_dict()["battery_mwh"] == 60.0
+    cleared = plat.variant("single", companion={})
+    assert cleared.companion_dict() == {}
+    assert daysim.puck_for(cleared) is None
+    # None (default) inherits untouched
+    assert plat.variant("plain").companion == plat.companion
+
+
+def test_single_node_platforms_have_inert_puck():
+    tr = daysim.simulate("aria2_display", daysim.DEFAULT_DESIGNS[0],
+                         "desk_day", "none", dt_s=60.0)
+    assert np.all(tr.soc_puck == 1.0)
+    assert np.all(tr.p_puck_mw == 0.0)
+
+
+def test_either_node_emptying_ends_the_day():
+    """A starved puck pack kills the combo even with a full glasses
+    cell: time-to-empty is min over nodes."""
+    plat = dse._plat("aria2_puck_split")
+    tiny_puck = plat.variant("puck_tiny", companion={"battery_mwh": 60.0})
+    # simulate() accepts the spec directly — no registry registration,
+    # so no cross-test state leaks
+    tr = daysim.simulate(tiny_puck, daysim.DEFAULT_DESIGNS[0],
+                         "desk_day", "none", dt_s=60.0,
+                         battery=daysim.BatterySpec("big_glasses", 9000.0))
+    assert tr.summary["end_soc"] > 0.1          # glasses still charged
+    assert float(tr.soc_puck[-1]) == 0.0
+    assert tr.summary["time_to_empty_h"] < tr.summary["day_hours"]
+
+
+# ---------------------------------------------------------------------------
+# charging segments + thermal shutdown (hard constraint)
+# ---------------------------------------------------------------------------
+
+def test_dock_charging_raises_soc_and_survives():
+    tr = daysim.simulate("aria2_display", daysim.DEFAULT_DESIGNS[0],
+                         "commuter_dock", "none", dt_s=30.0)
+    assert np.any(np.diff(tr.soc) > 0), "dock segments must charge"
+    assert tr.soc.max() <= 1.0 + 1e-7
+    # same design, same day without the dock: strictly worse end SoC
+    plain = daysim.simulate("aria2_display", daysim.DEFAULT_DESIGNS[0],
+                            "commuter", "none", dt_s=30.0)
+    assert tr.summary["end_soc"] > plain.summary["end_soc"]
+    assert tr.summary["time_to_empty_h"] >= \
+        plain.summary["time_to_empty_h"]
+
+
+def test_charge_validation_and_roundtrip():
+    with pytest.raises(ValueError, match="charge_mw"):
+        daysim.DaySegment("bad", 1.0, charge_mw=-5.0)
+    s = daysim.DaySegment("dock", 2.0, charge_mw=1200.0)
+    assert daysim.DaySegment.from_dict(s.to_dict()) == s
+    # pre-charging serialized schedules still load (charge defaults 0)
+    d = s.to_dict()
+    d.pop("charge_mw")
+    assert daysim.DaySegment.from_dict(d).charge_mw == 0.0
+
+
+def test_thermal_shutdown_is_latched_and_hard():
+    """Above shutdown_c the device bricks for the rest of the day: power
+    drops to zero, survives() is False even though the cell never
+    emptied."""
+    hot = daysim.DaySchedule("furnace", (
+        daysim.DaySegment("blaze", 2.0, ambient_c=44.0, active=1.0,
+                          upload_duty=1.0, brightness=1.0),
+        daysim.DaySegment("cool", 2.0, ambient_c=20.0, active=0.3),
+    ))
+    tr = daysim.simulate("aria2_display", daysim.DEFAULT_DESIGNS[2],
+                         hot, "none", dt_s=30.0, shutdown_c=45.0)
+    assert tr.summary["shutdown"] == 1.0
+    first = int(np.argmax(tr.shut > 0.5))
+    assert np.all(tr.shut[first:] > 0.5), "shutdown must latch"
+    assert np.all(tr.p_mw[first + 1:] == 0.0)
+    assert tr.summary["end_soc"] > 0.0
+    assert tr.summary["time_to_empty_h"] < tr.summary["day_hours"]
+    rep = dse.day_pareto(platforms=("aria2_display",),
+                         designs=daysim.DEFAULT_DESIGNS[2:],
+                         schedules=(hot,), policies=("none",),
+                         dt_s=60.0, shutdown_c=45.0)
+    assert bool(rep.shutdown[0])
+    assert not bool(dse.survives_day(rep)[0])
+
+
+# ---------------------------------------------------------------------------
+# shared row-cache: one evaluate per platform, zero on a warm cache
+# ---------------------------------------------------------------------------
+
+def test_daysim_precompute_shares_one_cached_evaluate():
+    daysim.clear_row_cache()
+    daysim.build_combos(platforms=("aria2_display",),
+                        schedules=("commuter", "field_day"),
+                        policies=("none", "thermal_governor",
+                                  "battery_saver"))
+    stats = dict(daysim.CACHE_STATS)
+    # one batched evaluate for the whole platform, deduplicated rows
+    assert stats["evaluate_calls"] == 1
+    # policies share (design, segment, level-0) rows: dedup must beat
+    # the naive row count (3 designs x 2 schedules x (1+2+2 level rows
+    # x segs) + steady rows >> unique rows)
+    assert stats["misses"] < 3 * 2 * (5 * 6 + 1)
+    # a second identical build is served fully from cache
+    daysim.build_combos(platforms=("aria2_display",),
+                        schedules=("commuter", "field_day"),
+                        policies=("none", "thermal_governor",
+                                  "battery_saver"))
+    stats2 = dict(daysim.CACHE_STATS)
+    assert stats2["evaluate_calls"] == 1
+    assert stats2["misses"] == stats["misses"]
+    assert stats2["hits"] > stats["hits"]
+
+
+def test_scenarioset_dedupe_and_take_bounds():
+    sset = ScenarioSet.build([
+        {"on_device": (), "compression": 8.0},
+        {"on_device": ("asr",), "compression": 8.0},
+        {"on_device": (), "compression": 8.0},          # dup of row 0
+        {"on_device": ("asr",), "compression": 16.0},
+    ])
+    uniq, inv = sset.dedupe()
+    assert len(uniq) == 3
+    np.testing.assert_array_equal(uniq.row_matrix()[inv],
+                                  sset.row_matrix())
+    with pytest.raises(IndexError, match="out of range"):
+        sset.take([7])
+
+
+# ---------------------------------------------------------------------------
+# DesignSpace + projected Adam
+# ---------------------------------------------------------------------------
+
+def test_design_space_declarations():
+    sp = design.device_space(aria2.aria2_platform())
+    assert sp.knob("placement_logits").tag == design.DISCRETE
+    assert sp.knob("log2_compression").tag == design.CONTINUOUS
+    with pytest.raises(KeyError, match="unknown knob"):
+        sp.knob("nope")
+    with pytest.raises(ValueError, match="lo < hi"):
+        Knob("bad", 2.0, 1.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        DesignSpace((Knob("x", 0, 1), Knob("x", 0, 1)))
+    pt = sp.midpoint()
+    sp.validate(pt)
+    with pytest.raises(ValueError, match="keys mismatch"):
+        sp.validate({"x": 1.0})
+    # round-trip
+    assert DesignSpace.from_dict(sp.to_dict()) == sp
+    # clip projects every leaf into bounds
+    wild = {k: v + 100.0 for k, v in pt.items()}
+    clipped = sp.clip(wild)
+    for k in sp.names():
+        kn = sp.knob(k)
+        assert np.all(np.asarray(clipped[k]) <= kn.hi)
+
+
+def test_gradient_descend_converges_and_respects_init():
+    sp = DesignSpace((Knob("x", -2.0, 2.0), Knob("y", -1.0, 3.0)))
+
+    def loss(p):
+        return (p["x"] - 0.7) ** 2 + (p["y"] - 1.3) ** 2
+
+    res = dse.gradient_descend(sp, loss, n_restarts=4, steps=120,
+                               lr=0.1, seed=1)
+    assert res.best_loss < 1e-4
+    assert float(res.best_point["x"]) == pytest.approx(0.7, abs=0.01)
+    # bounds bind when the optimum is outside the box
+    res2 = dse.gradient_descend(
+        sp, lambda p: (p["x"] - 5.0) ** 2, n_restarts=2, steps=80,
+        lr=0.2)
+    assert float(res2.best_point["x"]) == pytest.approx(2.0, abs=1e-3)
+    # init seeds restart 0 (already optimal -> stays optimal)
+    res3 = dse.gradient_descend(
+        sp, loss, n_restarts=2, steps=1, lr=1e-6,
+        init={"x": jnp.asarray(0.7), "y": jnp.asarray(1.3)})
+    assert res3.best_loss < 1e-9
+
+
+def test_take_linear_and_ste_forward_exact():
+    tab = jnp.asarray([10.0, 20.0, 50.0])
+    for i in range(3):
+        assert float(design.take_linear(tab, jnp.asarray(float(i)))) \
+            == float(tab[i])
+    assert float(design.take_linear(tab, jnp.asarray(0.5))) == 15.0
+    # STE forward is the exact hard comparison...
+    assert float(design.ste_gt(jnp.asarray(1.0), 0.5, 4.0)) == 1.0
+    assert float(design.ste_gt(jnp.asarray(0.2), 0.5, 4.0)) == 0.0
+    # ...with a live surrogate gradient on both operands
+    g = jax.grad(lambda t: design.ste_gt(jnp.asarray(0.6), t, 4.0))(
+        jnp.asarray(0.5))
+    assert float(g) < 0.0
+
+
+# ---------------------------------------------------------------------------
+# sensitivity maps: per-scenario d mW / d knob in ONE vjp
+# ---------------------------------------------------------------------------
+
+def test_sensitivity_map_matches_per_point_grad():
+    plat = aria2.aria2_platform()
+    sset = ScenarioSet.grid(placements=((), ("hand_tracking",)),
+                            compressions=(4.0, 32.0),
+                            fps_scales=(1.0, 8.0))
+    sm = dse.sensitivity_map(plat, sset)
+    n = len(sset)
+    assert sm["total_mw"].shape == (n,)
+    assert sm["d_mw_d"]["placement"].shape == (n, 4)
+    # the vjp rows equal an independently-computed single-point grad
+    vec = scenarios.relax_vec(sset)
+    i = 3
+    g = jax.grad(lambda c: scenarios.total_mw_relaxed(
+        plat, {**vec, "compression": vec["compression"].at[i].set(c)}
+    )[i])(vec["compression"][i])
+    assert float(g) == pytest.approx(
+        float(sm["d_mw_d"]["compression"][i]), rel=1e-5)
+    # more compression always saves device power (wireless-dominated)
+    assert np.all(sm["d_mw_d"]["compression"] <= 0.0)
+    rows = dse.sensitivity_rows(sm, top=3)
+    assert len(rows) == 3 and "d_mw_d_placement" in rows[0]
+
+
+# ---------------------------------------------------------------------------
+# vmapped multi-restart calibration
+# ---------------------------------------------------------------------------
+
+def test_vmapped_restarts_match_sequential_loop():
+    z0s = calibrate.restart_starts(3, seed=2)
+    zs_s, loss_s = calibrate.fit_restarts_sequential(z0s, steps=25)
+    zs_v, loss_v = calibrate.fit_restarts_vmapped(z0s, steps=25)
+    np.testing.assert_allclose(np.asarray(zs_v), np.asarray(zs_s),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(loss_v, loss_s, rtol=1e-3)
+
+
+def test_fit_ensemble_posterior_shape():
+    ens = calibrate.fit_ensemble(n_restarts=3, steps=20)
+    assert len(ens["thetas"]) == 3
+    assert ens["losses"].shape == (3,)
+    assert ens["best_loss"] == pytest.approx(float(ens["losses"].min()))
+    for k in calibrate.FIT_KEYS:
+        p = ens["posterior"][k]
+        lo, hi = calibrate.BOUNDS[k]
+        assert lo <= p["best"] <= hi
+        assert p["std"] >= 0.0
+    w = ens["weights"]
+    assert w.sum() == pytest.approx(1.0)
+
+
+def test_queue_coeff_fit_recovers_trace_slope():
+    """The engine-aware fit must land near trace slope x rail
+    efficiency (the battery-side trace divided by the PD loss the
+    engine applies on top of load-side coefficients)."""
+    fitres = calibrate.fit_queue_coeff(steps=120)
+    q = fitres["queue_mw_per_duty"]
+    assert 25.0 < q < 50.0
+    # and the committed calibrated.json carries the fitted value
+    import json
+    cal = json.loads(calibrate.CAL_PATH.read_text())
+    assert cal["queue_mw_per_duty"] == pytest.approx(q, rel=0.05)
+
+
+def test_theta_space_is_a_design_space():
+    sp = calibrate.theta_space()
+    assert set(sp.names()) == set(calibrate.FIT_KEYS)
+    for k in calibrate.FIT_KEYS:
+        assert (sp.knob(k).lo, sp.knob(k).hi) == calibrate.BOUNDS[k]

@@ -277,4 +277,5 @@ def test_bench_smoke_mode_runs_clean():
     assert res.returncode == 0, res.stdout + res.stderr
     assert "joint_smoke" in res.stdout
     assert "daysim_smoke" in res.stdout
+    assert "grad_smoke" in res.stdout
     assert "ERROR" not in res.stdout
