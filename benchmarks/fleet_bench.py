@@ -1,0 +1,158 @@
+"""Fleet-scale population simulator benchmark (core/fleet.py).
+
+Times the sharded whole-population scan — every user's day advanced by
+ONE `jax.lax.scan` over `daysim._step_math` vmapped across users —
+against `fleet.reference_fleet`, the per-user Python loop over
+`daysim.reference_integrate`, and verifies the fleet-level decision
+content: autoscaled diurnal-curve pricing beats peak provisioning, and
+timezone spreading flattens the backend peak.
+
+Emits results/benchmarks/BENCH_fleet.json and returns (rows, derived)
+for benchmarks/run.py.
+
+BENCH_fleet.json schema (one JSON object):
+  n_users            int   sampled population integrated by the scan
+  n_steps            int   scan length at dt_s (longest archetype day)
+  dt_s               float integrator step
+  n_shards           int   mesh size the scan ran on (1 == CPU CI)
+  fleet_s            float best wall time of one fleet_day pass
+                           (post-warmup, tables + scan + summaries)
+  users_per_s_scan   float n_users / fleet_s
+  ref_users          int   users timed through the per-user Python loop
+  users_per_s_loop   float reference_fleet rate on those users
+  speedup            float users_per_s_scan / users_per_s_loop — the
+                           regression gate metric (>20% drop fails
+                           benchmarks/run.py)
+  survival_rate      float fraction of sampled users lasting the day
+  peak_pods          float worst diurnal bin at fleet_size users
+  autoscaled_usd     float $/day when capacity follows the curve
+  peak_provisioned_usd float $/day for a static worst-bin fleet
+  savings_pct        float peak-vs-autoscaled $/day delta (the
+                           capacity-planning headline)
+  tz_flattening      obj   same fleet forced into ONE timezone vs the
+                           world spread: single_tz_peak_pods,
+                           spread_peak_pods, peak_reduction_pct
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import replace
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+
+BENCH_DT_S = 60.0
+BENCH_USERS = 4096
+REF_USERS = 6
+FLEET_SIZE = 1e6
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _parity(rep, ref, np) -> None:
+    """The bench must not be comparing two different integrators."""
+    assert np.array_equal(rep.survives(), ref.survives())
+    assert np.array_equal(rep.time_to_empty_h, ref.time_to_empty_h)
+    assert np.allclose(rep.curve, ref.curve, rtol=1e-6,
+                       atol=1e-6 * max(1.0, float(ref.curve.max())))
+
+
+def run(n_repeats: int = 3):
+    import jax
+    import numpy as np
+    from repro.core import fleet
+
+    pop = fleet.sample_population(fleet.DEFAULT_POPULATION, BENCH_USERS,
+                                  key=0)
+    rep = fleet.fleet_day(pop, dt_s=BENCH_DT_S,
+                          fleet_size=FLEET_SIZE)       # warm: jit + rows
+    fleet_s = min(_timed(lambda: fleet.fleet_day(
+        pop, dt_s=BENCH_DT_S, fleet_size=FLEET_SIZE))
+        for _ in range(n_repeats))
+
+    sub = pop.take(np.arange(REF_USERS))
+    t0 = time.perf_counter()
+    ref = fleet.reference_fleet(sub, dt_s=BENCH_DT_S)
+    ref_s = time.perf_counter() - t0
+    _parity(fleet.fleet_day(sub, dt_s=BENCH_DT_S), ref, np)
+
+    users_scan = BENCH_USERS / fleet_s
+    users_loop = REF_USERS / ref_s
+    plan = rep.capacity_plan()
+
+    # the same fleet crammed into one timezone: the diurnal peak the
+    # backend would have to ride without geographic spreading
+    single = replace(fleet.DEFAULT_POPULATION, name="single_tz",
+                     tz_hours=(0.0,), tz_weights=None)
+    rep1 = fleet.fleet_day(single, BENCH_USERS, key=0, dt_s=BENCH_DT_S,
+                           fleet_size=FLEET_SIZE)
+    flat = {
+        "single_tz_peak_pods": round(float(rep1.curve_total.max()), 1),
+        "spread_peak_pods": round(float(rep.curve_total.max()), 1),
+        "peak_reduction_pct": round(
+            100.0 * (1.0 - rep.curve_total.max()
+                     / rep1.curve_total.max()), 1),
+    }
+
+    result = {
+        "n_users": BENCH_USERS,
+        "n_steps": int(round(max(rep.day_hours) * 3600.0 / BENCH_DT_S)),
+        "dt_s": BENCH_DT_S,
+        "n_shards": rep.n_shards,
+        "fleet_s": round(fleet_s, 3),
+        "users_per_s_scan": round(users_scan, 1),
+        "ref_users": REF_USERS,
+        "users_per_s_loop": round(users_loop, 2),
+        "speedup": round(users_scan / users_loop, 1),
+        "survival_rate": round(rep.survival_rate(), 4),
+        "peak_pods": round(plan["peak_pods"], 1),
+        "autoscaled_usd": round(plan["autoscaled"]["usd"], 0),
+        "peak_provisioned_usd": round(plan["peak_provisioned"]["usd"], 0),
+        "savings_pct": round(plan["savings_pct"], 1),
+        "tz_flattening": flat,
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "BENCH_fleet.json").write_text(json.dumps(result, indent=1))
+    derived = (f"{BENCH_USERS}users speedup={result['speedup']}x "
+               f"autoscale_saves={result['savings_pct']}% "
+               f"tz_flattens={flat['peak_reduction_pct']}%")
+    return [result], derived
+
+
+def smoke(n_users: int = 64):
+    """<=256 users at a coarse (but Euler-stable) dt: exercises sample
+    -> archetype compile -> sharded scan -> curve pricing -> per-user
+    loop parity inside the tier-1 time budget.  Writes nothing."""
+    import numpy as np
+    from repro.core import fleet
+
+    assert n_users <= 256
+    pop = fleet.sample_population(fleet.DEFAULT_POPULATION, n_users,
+                                  key=7)
+    rep = fleet.fleet_day(pop, dt_s=120.0)
+    assert np.all(np.isfinite(rep.curve))
+    assert rep.curve.shape == (fleet.DEFAULT_N_BINS, len(rep.streams))
+    assert float(rep.curve.sum()) > 0.0
+    plan = rep.capacity_plan()
+    assert plan["autoscaled"]["usd"] <= plan["peak_provisioned"]["usd"]
+    sub = pop.take(np.arange(3))
+    _parity(fleet.fleet_day(sub, dt_s=120.0),
+            fleet.reference_fleet(sub, dt_s=120.0), np)
+    return ([{"survival_rate": rep.survival_rate()}],
+            f"{n_users}users surv={rep.survival_rate():.2f} "
+            f"save={plan['savings_pct']:.0f}% parity_ok")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    rows, derived = run()
+    print((OUT / "BENCH_fleet.json").read_text())
+    print(derived)

@@ -28,6 +28,7 @@ GATED_METRICS = {
     "BENCH_backend.json": ("speedup", "higher"),
     "BENCH_daysim.json": ("speedup", "higher"),
     "BENCH_grad.json": ("calib_speedup", "higher"),
+    "BENCH_fleet.json": ("speedup", "higher"),
 }
 REGRESSION_TOLERANCE = 0.20
 
@@ -74,19 +75,21 @@ def main(argv=None) -> int:
                     help="16-point joint grid only; no baselines, no gate")
     args = ap.parse_args(argv)
 
-    from . import daysim_bench, dse_bench, grad_bench, joint_bench, \
-        kernel_benches, paper_benches, roofline
+    from . import daysim_bench, dse_bench, fleet_bench, grad_bench, \
+        joint_bench, kernel_benches, paper_benches, roofline
     if args.smoke:
         benches = [("joint_smoke", joint_bench.smoke),
                    ("backend_smoke", roofline.backend_smoke),
                    ("daysim_smoke", daysim_bench.smoke),
-                   ("grad_smoke", grad_bench.smoke)]
+                   ("grad_smoke", grad_bench.smoke),
+                   ("fleet_smoke", fleet_bench.smoke)]
     else:
         benches = [
             ("dse_batched_vs_loop", dse_bench.run),
             ("joint_pareto", joint_bench.run),
             ("daysim", daysim_bench.run),
             ("grad_descent", grad_bench.run),
+            ("fleet", fleet_bench.run),
             ("backend_roofline", roofline.backend_bench),
             ("table2_sensor_rates", paper_benches.table2_sensor_rates),
             ("fig3_power_composition", paper_benches.fig3_power_composition),

@@ -75,6 +75,11 @@ class BatterySpec:
     current is I = P / V(soc), so the I^2 R internal loss grows as the
     cell sags: the same mW load drains *more* SoC per second late in the
     day, which is exactly what a steady-state power number cannot see.
+
+    `fade` is the battery-age capacity fade fraction: an aged cell holds
+    `capacity_mwh * (1 - fade)`.  It is optional and JSON back-compat
+    (an absent key means no fade), so committed golden files and old
+    registry dumps keep loading unchanged.
     """
     name: str
     capacity_mwh: float
@@ -83,12 +88,25 @@ class BatterySpec:
     sag_v: float = 0.75
     knee_v: float = 0.30
     knee_sharpness: float = 12.0
+    fade: float = 0.0
 
     def __post_init__(self):
         if self.capacity_mwh <= 0:
             raise ValueError("capacity_mwh must be positive")
         if self.v_full - self.sag_v - self.knee_v <= 0:
             raise ValueError("voltage curve dips below zero at soc=0")
+        if not 0.0 <= self.fade < 1.0:
+            raise ValueError(f"fade={self.fade} outside [0, 1)")
+
+    @property
+    def effective_capacity_mwh(self) -> float:
+        """Age-derated capacity actually available to the integrator."""
+        return self.capacity_mwh * (1.0 - self.fade)
+
+    def aged(self, fade: float) -> "BatterySpec":
+        """The same cell at a given capacity-fade fraction."""
+        from dataclasses import replace
+        return replace(self, fade=float(fade))
 
     def voltage(self, soc):
         """Open-circuit-ish terminal voltage at state of charge `soc`."""
@@ -96,18 +114,22 @@ class BatterySpec:
                 - self.knee_v * jnp.exp(-self.knee_sharpness * soc))
 
     def to_dict(self) -> dict:
-        return {"name": self.name, "capacity_mwh": self.capacity_mwh,
-                "r_internal_ohm": self.r_internal_ohm,
-                "v_full": self.v_full, "sag_v": self.sag_v,
-                "knee_v": self.knee_v,
-                "knee_sharpness": self.knee_sharpness}
+        out = {"name": self.name, "capacity_mwh": self.capacity_mwh,
+               "r_internal_ohm": self.r_internal_ohm,
+               "v_full": self.v_full, "sag_v": self.sag_v,
+               "knee_v": self.knee_v,
+               "knee_sharpness": self.knee_sharpness}
+        if self.fade:
+            out["fade"] = self.fade
+        return out
 
     @classmethod
     def from_dict(cls, d: dict) -> "BatterySpec":
         return cls(d["name"], float(d["capacity_mwh"]),
                    float(d["r_internal_ohm"]), float(d["v_full"]),
                    float(d["sag_v"]), float(d["knee_v"]),
-                   float(d["knee_sharpness"]))
+                   float(d["knee_sharpness"]),
+                   float(d.get("fade", 0.0)))
 
 
 @dataclass(frozen=True)
@@ -270,6 +292,15 @@ class DaySchedule:
     def n_steps(self, dt_s: float) -> int:
         return sum(max(1, round(s.hours * 3600.0 / dt_s))
                    for s in self.segments)
+
+    def with_ambient_offset(self, offset_c: float) -> "DaySchedule":
+        """The same day shifted by a climate offset (every segment's
+        ambient moved by `offset_c` — hot-climate or wintertime users)."""
+        from dataclasses import replace
+        return DaySchedule(
+            f"{self.name}{offset_c:+.1f}C",
+            tuple(replace(s, ambient_c=s.ambient_c + offset_c)
+                  for s in self.segments))
 
     def to_dict(self) -> dict:
         return {"name": self.name,
@@ -602,7 +633,8 @@ def _step_math(carry, x, const):
            "level": jnp.round(level_f).astype(jnp.int32),
            "th_state": th_state, "soc_state": soc_state, "shut": shut,
            "p_mw": p_mw, "p_p_mw": p_p_mw, "drain_mw": drain_mw,
-           "drain_p_mw": drain_p_mw, "pods": pods}
+           "drain_p_mw": drain_p_mw, "pods": pods,
+           "act": act, "alive": alive}
     return new, out
 
 
@@ -674,7 +706,7 @@ def reference_integrate(tb: dict) -> dict:
     out = {k: [] for k in ("soc", "soc_p", "t_soc", "t_skin", "t_soc_p",
                            "t_skin_p", "level", "th_state", "soc_state",
                            "shut", "p_mw", "p_p_mw", "drain_mw",
-                           "drain_p_mw", "pods")}
+                           "drain_p_mw", "pods", "act", "alive")}
     for t in range(mw.shape[0]):
         if t_skin > c["temp_trip"]:
             th_state = f(1.0)
@@ -710,7 +742,8 @@ def reference_integrate(tb: dict) -> dict:
                "th_state": th_state, "soc_state": soc_state,
                "shut": shut, "p_mw": p_mw, "p_p_mw": p_p_mw,
                "drain_mw": drain_mw, "drain_p_mw": drain_p_mw,
-               "pods": act * f(pods_t[t, level]) * alive}
+               "pods": act * f(pods_t[t, level]) * alive,
+               "act": act, "alive": alive}
         for k, vv in row.items():
             out[k].append(vv)
     return {k: np.asarray(v, np.int32 if k == "level" else np.float32)
@@ -739,6 +772,11 @@ def _plat(p):
     return registry.get(p)
 
 
+# backend stream order shared by the per-stream pod tables below and the
+# fleet layer's diurnal load curves (core/fleet.py)
+STREAMS = tuple(offload.STREAM_SERVICE)
+
+
 @dataclass
 class _Combo:
     platform: PlatformSpec
@@ -751,6 +789,7 @@ class _Combo:
     mw_levels: np.ndarray = None        # (L, n_seg) filled by compile
     pods_levels: np.ndarray = None      # (L, n_seg)
     mbps_levels: np.ndarray = None      # (L, n_seg) gated uplink rate
+    pods_stream_levels: np.ndarray = None   # (L, n_seg, len(STREAMS))
     steady_mw: float = 0.0
 
     def label(self) -> dict:
@@ -850,14 +889,19 @@ def _compile_platform(plat: PlatformSpec, combos: list, n_users: float,
         bd = offload.pods_breakdown(sset, n_users=n_users, duty=1.0,
                                     results_dir=results_dir)
         for i, k in enumerate(fresh):
-            _ROW_CACHE[k] = (totals[i], float(bd.pods[i]), mbps[i])
+            _ROW_CACHE[k] = (totals[i], float(bd.pods[i]), mbps[i],
+                             *(float(bd.by_stream[s][i])
+                               for s in STREAMS))
     vals = np.asarray([_ROW_CACHE[k] for k in keys], np.float64)
     totals, pods, mbps = vals[:, 0], vals[:, 1], vals[:, 2]
+    streams = vals[:, 3:]
     for cb, (start, steady_i) in zip(combos, slices):
         n_seg, n_lvl = len(cb.schedule.segments), cb.policy.n_levels
         cb.mw_levels = totals[start:steady_i].reshape(n_lvl, n_seg)
         cb.pods_levels = pods[start:steady_i].reshape(n_lvl, n_seg)
         cb.mbps_levels = mbps[start:steady_i].reshape(n_lvl, n_seg)
+        cb.pods_stream_levels = streams[start:steady_i].reshape(
+            n_lvl, n_seg, len(STREAMS))
         cb.steady_mw = float(totals[steady_i])
 
 
@@ -868,7 +912,7 @@ def _battery_const(bat: BatterySpec, th: ThermalSpec, dt_s: float,
         pre + "knee_v": bat.knee_v,
         pre + "knee_sharp": bat.knee_sharpness,
         pre + "r_ohm": bat.r_internal_ohm,
-        pre + "dsoc_coeff": dt_s / (3600.0 * bat.capacity_mwh),
+        pre + "dsoc_coeff": dt_s / (3600.0 * bat.effective_capacity_mwh),
         pre + "g_soc_skin": 1.0 / th.r_soc_skin_k_per_w,
         pre + "g_skin_amb": 1.0 / th.r_skin_amb_k_per_w,
         pre + "dt_c_soc": dt_s / th.c_soc_j_per_k,
@@ -886,18 +930,23 @@ def _combo_tables(cb: _Combo, dt_s: float, n_steps: int,
     t = len(seg_idx)
     mw = cb.mw_levels                       # (L, n_seg)
     pods = cb.pods_levels
+    pods_s = cb.pods_stream_levels          # (L, n_seg, S)
     mw_p = (cb.puck.level_mw(cb.mbps_levels) if cb.puck is not None
             else np.zeros_like(mw))
     if mw.shape[0] < max_levels:            # pad levels with the last row
         pad = max_levels - mw.shape[0]
         mw = np.concatenate([mw, np.repeat(mw[-1:], pad, 0)])
         pods = np.concatenate([pods, np.repeat(pods[-1:], pad, 0)])
+        pods_s = np.concatenate([pods_s, np.repeat(pods_s[-1:], pad, 0)])
         mw_p = np.concatenate([mw_p, np.repeat(mw_p[-1:], pad, 0)])
+    n_streams = pods_s.shape[-1]
     step_mw = np.zeros((n_steps, max_levels), np.float32)
     step_pods = np.zeros((n_steps, max_levels), np.float32)
+    step_pods_s = np.zeros((n_steps, max_levels, n_streams), np.float32)
     step_mw_p = np.zeros((n_steps, max_levels), np.float32)
     step_mw[:t] = mw.T[seg_idx]
     step_pods[:t] = pods.T[seg_idx]
+    step_pods_s[:t] = pods_s.transpose(1, 0, 2)[seg_idx]
     step_mw_p[:t] = mw_p.T[seg_idx]
     amb = np.full(n_steps, cb.schedule.segments[-1].ambient_c, np.float32)
     amb[:t] = np.asarray([s.ambient_c for s in cb.schedule.segments],
@@ -937,7 +986,8 @@ def _combo_tables(cb: _Combo, dt_s: float, n_steps: int,
             dt_s, "p_"),
     }
     return {"step_mw": step_mw, "step_mw_p": step_mw_p,
-            "step_pods": step_pods, "ambient": amb,
+            "step_pods": step_pods, "step_pods_s": step_pods_s,
+            "ambient": amb,
             "active": active, "valid": valid, "charge": charge,
             "charge_p": charge_p, "act_mult": amult,
             "const": {k: np.float32(v) for k, v in const.items()}}
@@ -974,6 +1024,7 @@ class DayReport:
     dt_s: float
     front_mask: np.ndarray | None = None
     skipped: list = field(default_factory=list)
+    battery_fade: np.ndarray | None = None  # (N,) capacity-fade fraction
 
     def __len__(self) -> int:
         return len(self.combos)
@@ -1009,6 +1060,9 @@ class DayReport:
             "usd": round(cost["usd"], 2),
             "kgco2": round(cost["kgco2"], 1),
             "throttled_h": round(float(self.throttled_h[i]), 2),
+            **({"battery_fade": round(float(self.battery_fade[i]), 3)}
+               if self.battery_fade is not None
+               and self.battery_fade[i] else {}),
         }
 
     def rows(self) -> list:
@@ -1177,7 +1231,9 @@ def day_grid(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
     return DayReport(
         combos=[cb.label() for cb in combos],
         steady_mw=np.asarray([cb.steady_mw for cb in combos]),
-        n_users=n_users, dt_s=dt_s, skipped=skipped, **summ)
+        n_users=n_users, dt_s=dt_s, skipped=skipped,
+        battery_fade=np.asarray([cb.battery.fade for cb in combos]),
+        **summ)
 
 
 def simulate(platform, design: dict, schedule, policy="none",
@@ -1219,6 +1275,61 @@ def simulate(platform, design: dict, schedule, policy="none",
         drain_puck_mw=np.asarray(ys["drain_p_mw"][0]),
         pods=np.asarray(ys["pods"][0]), valid=tb["valid"],
         summary=summary)
+
+
+def simulate_users(platform, design: dict, schedule, policy="none", *,
+                   fades=None, ambient_offsets_c=None,
+                   dt_s: float = DEFAULT_DT_S,
+                   n_users_backend: float = 1.0,
+                   standby_mw: float = DEFAULT_STANDBY_MW,
+                   battery: BatterySpec | None = None,
+                   thermal: ThermalSpec | None = None, theta=None,
+                   results_dir=None,
+                   shutdown_c: float = DEFAULT_SHUTDOWN_C) -> DayReport:
+    """Batched-user day integration for ONE (platform, design, schedule,
+    policy) combo: users differ by battery age (capacity-fade fraction)
+    and ambient-climate offset, and every user's day runs through the
+    same vmapped scan.
+
+    The scenario rows are identical across users (age and climate touch
+    only the battery/thermal constants, never the steady-state knobs),
+    so the whole batch costs at most ONE `scenarios.evaluate` through
+    the row cache.  Per-user backend demand defaults to
+    `n_users_backend=1.0` — one wearable per row — so pod columns
+    aggregate user-by-user.  This is the small-N oracle-friendly entry;
+    `core/fleet.py` is the sharded population-scale path."""
+    fades = np.atleast_1d(np.asarray(
+        0.0 if fades is None else fades, np.float64))
+    offs = np.atleast_1d(np.asarray(
+        0.0 if ambient_offsets_c is None else ambient_offsets_c,
+        np.float64))
+    n = max(fades.size, offs.size)
+    fades = np.broadcast_to(fades, (n,))
+    offs = np.broadcast_to(offs, (n,))
+    plat = _plat(platform)
+    sched = _resolve(schedule, get_schedule, DaySchedule)
+    pol = _resolve(policy, get_policy, ThrottlePolicy)
+    bat = _batteries_arg(battery, plat.name)
+    therm = thermal or DEFAULT_THERMAL
+    puck = puck_for(plat)
+    combos = [_Combo(plat, design, sched.with_ambient_offset(float(o)),
+                     pol, bat.aged(float(f)), therm, puck)
+              for f, o in zip(fades, offs)]
+    _compile_platform(plat, combos, n_users_backend, theta, results_dir)
+    tables = batch_tables(combos, dt_s, standby_mw, shutdown_c)
+    ys = jax.block_until_ready(_integrate_batch(tables))
+    summ = _summarize(ys, {"valid": np.asarray(tables["valid"]),
+                           "active": np.asarray(tables["active"])}, dt_s)
+    labels = []
+    for cb, f, o in zip(combos, fades, offs):
+        lb = cb.label()
+        lb["ambient_offset_c"] = round(float(o), 2)
+        labels.append(lb)
+    return DayReport(
+        combos=labels,
+        steady_mw=np.asarray([cb.steady_mw for cb in combos]),
+        n_users=n_users_backend, dt_s=dt_s, skipped=[],
+        battery_fade=np.asarray(fades, np.float64), **summ)
 
 
 def compiled_tables(platform, design: dict, schedule, policy="none",

@@ -37,7 +37,7 @@ tie on one objective at better cost in another are kept.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
@@ -703,3 +703,66 @@ def platform_ablation(names=None, on_device=(), compression: float = 10.0,
     for r in rows:
         r["delta_mw_vs_baseline"] = round(r["total_mw"] - base_mw, 1)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# fleet-level fronts: population variants over ($/day, survival rate)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FleetFront:
+    """`fleet_pareto` output: one row per population variant plus the
+    non-dominated mask over (autoscaled fleet $/day minimized, survival
+    rate maximized)."""
+    rows: list
+    front_mask: np.ndarray
+
+    def front_rows(self) -> list:
+        return [r for r, m in zip(self.rows, self.front_mask) if m]
+
+
+def fleet_pareto(spec=None, variants=None, n_users: int = 1024, key=0,
+                 dt_s: float = 60.0, fleet_size: float = 1e6,
+                 **kw) -> FleetFront:
+    """SKU-mix / policy Pareto front at fleet scale: backend $/day vs
+    the fraction of users whose device survives the day.
+
+    Each variant is a `(name, PopulationSpec)` — by default every
+    (policy x design) override of `spec` via
+    `PopulationSpec.with_overrides` (designs a platform can't place
+    on-device keep that archetype's original design).  ONE population
+    sample (same key) is reused across variants, so fronts compare
+    policy/design choices on the identical fleet, and every variant
+    runs through the same sharded `fleet.fleet_day` scan.  Costs are
+    the autoscaled diurnal-curve pricing at `fleet_size` users."""
+    from . import daysim, fleet
+    if spec is None:
+        spec = fleet.DEFAULT_POPULATION
+    if variants is None:
+        variants = [(f"{pol}/{row['name']}",
+                     spec.with_overrides(f"{spec.name}:{pol}:"
+                                         f"{row['name']}",
+                                         policy=pol, design=row))
+                    for pol in daysim.DEFAULT_POLICIES
+                    for row in daysim.DEFAULT_DESIGNS]
+    pop = fleet.sample_population(spec, n_users, key)
+    rows = []
+    for name, vspec in variants:
+        vpop = replace(pop, spec=vspec)
+        rep = fleet.fleet_day(vpop, dt_s=dt_s, fleet_size=fleet_size,
+                              **kw)
+        plan = rep.capacity_plan()
+        rows.append({
+            "variant": name,
+            "survival_rate": rep.survival_rate(),
+            "usd_per_day": plan["autoscaled"]["usd"],
+            "peak_usd_per_day": plan["peak_provisioned"]["usd"],
+            "kg_co2_per_day": plan["autoscaled"]["kgco2"],
+            "peak_pods": plan["peak_pods"],
+            "trough_peak_ratio": plan["trough_peak_ratio"],
+            "tte_p50_h": plan["tte_quantiles_h"]["p50"],
+            "shutdowns": plan["shutdowns"],
+        })
+    pts = np.asarray([[r["usd_per_day"], r["survival_rate"]]
+                      for r in rows])
+    return FleetFront(rows, non_dominated(pts, maximize=(1,)))

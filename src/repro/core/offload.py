@@ -85,9 +85,14 @@ def usd_per_pod_hour() -> float:
 def pod_cost(pod_hours) -> dict:
     """pod-hours -> {pod_hours, energy_kwh, usd, kgco2}.
 
-    Accepts scalars or numpy arrays; the money figure is capex
-    amortization plus datacenter energy, carbon is energy only."""
+    Broadcasts over any array shape — a 24-bin diurnal load curve (or a
+    whole (combos, bins) grid) prices in ONE call; scalars still return
+    plain floats.  The money figure is capex amortization plus
+    datacenter energy, carbon is energy only.  Negative pod-hours are a
+    caller bug (a curve can only demand capacity) and raise."""
     ph = np.asarray(pod_hours, np.float64)
+    if ph.size and float(np.min(ph)) < 0.0:
+        raise ValueError(f"pod_hours must be >= 0, got min {np.min(ph)}")
     kwh = ph * POD_POWER_KW
     out = {"pod_hours": ph, "energy_kwh": kwh,
            "usd": ph * POD_CAPEX_USD_PER_HOUR + kwh * USD_PER_KWH,
@@ -95,6 +100,55 @@ def pod_cost(pod_hours) -> dict:
     if np.ndim(pod_hours) == 0:
         return {k: float(v) for k, v in out.items()}
     return out
+
+
+def _check_fleet_args(n_users: float, duty: float) -> None:
+    """Shared validation for every fleet-sizing entry: a non-positive
+    user count or an out-of-range duty silently zeroed (or negated!)
+    every pod figure downstream before this check existed."""
+    if not n_users > 0:
+        raise ValueError(f"n_users must be > 0, got {n_users}")
+    if not 0.0 <= duty <= 1.0:
+        raise ValueError(f"duty={duty} outside [0, 1]")
+
+
+def curve_cost(pods_by_hour, bin_hours: float = 1.0) -> dict:
+    """Price a diurnal backend load curve: autoscaled vs peak-provisioned.
+
+    `pods_by_hour` is a (B,) pods-vs-hour-of-day curve (average pods
+    active during each bin) or (B, S) per-stream curves, summed over
+    streams first.  Two provisioning strategies priced via `pod_cost`:
+
+      autoscaled        — capacity follows the curve; pod-hours/day is
+                          the curve integral (sum * bin_hours)
+      peak_provisioned  — static fleet sized for the worst bin running
+                          all day (the per-user worst-case answer a
+                          steady-state model gives)
+
+    The trough/peak ratio is the flatness headline: 1.0 means timezone
+    spreading has fully flattened the day and autoscaling buys nothing.
+    """
+    curve = np.asarray(pods_by_hour, np.float64)
+    if curve.ndim == 2:
+        curve = curve.sum(axis=1)
+    if curve.ndim != 1 or curve.size == 0:
+        raise ValueError(f"expected a (B,) or (B, S) curve, "
+                         f"got shape {np.shape(pods_by_hour)}")
+    if float(curve.min()) < 0.0:
+        raise ValueError("curve has negative pods")
+    peak = float(curve.max())
+    trough = float(curve.min())
+    auto_ph = float(curve.sum() * bin_hours)
+    peak_ph = peak * curve.size * bin_hours
+    auto, prov = pod_cost(auto_ph), pod_cost(peak_ph)
+    return {
+        "peak_pods": peak, "trough_pods": trough,
+        "trough_peak_ratio": trough / peak if peak > 0 else 1.0,
+        "autoscaled": auto, "peak_provisioned": prov,
+        "savings_usd": prov["usd"] - auto["usd"],
+        "savings_pct": (100.0 * (1.0 - auto["usd"] / prov["usd"])
+                        if prov["usd"] > 0 else 0.0),
+    }
 
 
 @dataclass(frozen=True)
@@ -215,6 +269,7 @@ def size_fleet(sc: Scenario, n_users: float = 1e6,
     Rows sized from the fallback capacity carry note="missing_artifact" —
     pods are always finite.
     """
+    _check_fleet_args(n_users, duty)
     rows = []
     eff_duty = duty * getattr(sc, "upload_duty", 1.0)
     table = capacity_table(results_dir)
@@ -297,6 +352,7 @@ def pods_breakdown(sset: ScenarioSet, n_users: float = 1e6,
     the sensor frame-rate knob; signal/context streams are frame-rate
     independent.
     """
+    _check_fleet_args(n_users, duty)
     table = capacity_table(results_dir)
     asr_on = np.asarray(sset.placement, np.float64)[
         :, sset.primitives.index("asr")]
@@ -335,6 +391,7 @@ def pods_relaxed(vec: dict, n_users: float = 1e6, duty: float = 0.35,
     the vec's leading shape."""
     import jax.numpy as jnp
     from .platform import PRIMITIVES as _P
+    _check_fleet_args(n_users, duty)
     prim = primitives or _P
     table = capacity_table(results_dir)
     asr_p = vec["placement"][..., prim.index("asr")]

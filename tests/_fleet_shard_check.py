@@ -1,0 +1,34 @@
+"""Subprocess body for the shard-invariance test: run with
+XLA_FLAGS=--xla_force_host_platform_device_count=2 so jax sees two CPU
+devices BEFORE import, then check 2-shard == 1-shard on an odd-sized
+population (exercises the zero-weight padding path).  Prints SHARD_OK
+on success; any assertion kills the process non-zero."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax                                                # noqa: E402
+import numpy as np                                        # noqa: E402
+
+from repro.core import fleet                              # noqa: E402
+
+assert jax.local_device_count() == 2, jax.local_device_count()
+
+pop = fleet.sample_population(fleet.DEFAULT_POPULATION, 11, key=3)
+r1 = fleet.fleet_day(pop, dt_s=120.0, n_shards=1)
+r2 = fleet.fleet_day(pop, dt_s=120.0, n_shards=2)
+assert r2.n_shards == 2
+assert np.array_equal(r1.time_to_empty_h, r2.time_to_empty_h)
+assert np.array_equal(r1.survives(), r2.survives())
+assert np.array_equal(r1.shutdown, r2.shutdown)
+assert np.array_equal(r1.peak_skin_c, r2.peak_skin_c)
+assert np.allclose(r1.curve, r2.curve, rtol=1e-6,
+                   atol=1e-6 * max(1.0, float(r1.curve.max())))
+
+# same key -> same sampled fleet, independent of the mesh
+pop2 = fleet.sample_population(fleet.DEFAULT_POPULATION, 11, key=3)
+for k in ("archetype", "tz_hours", "ambient_offset_c", "fade"):
+    assert np.array_equal(getattr(pop, k), getattr(pop2, k)), k
+
+print("SHARD_OK")

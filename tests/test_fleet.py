@@ -1,0 +1,340 @@
+"""Fleet population simulator (core/fleet.py) + its satellites.
+
+The load-bearing test is aggregation parity: the sharded/vmapped fleet
+scan must reproduce a per-user Python loop over
+`daysim.reference_integrate` — survival flags bit-identical, curve bins
+to 1e-6 — on an 8-user population drawn from the default spec.  Around
+it: PopulationSpec JSON round-trips, explicit-key sampling
+reproducibility (incl. across shard_map mesh sizes, via subprocess),
+`offload.pod_cost` broadcasting/validation, `curve_cost` pricing math,
+and `BatterySpec` capacity-fade back-compat.
+"""
+import json
+import os
+import subprocess
+import sys
+from dataclasses import replace
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import daysim, dse, fleet, offload
+from repro.core.daysim import BatterySpec
+
+REPO = Path(__file__).resolve().parent.parent
+
+DT_S = 60.0
+
+
+@pytest.fixture(scope="module")
+def pop8():
+    return fleet.sample_population(fleet.DEFAULT_POPULATION, 8, key=0)
+
+
+@pytest.fixture(scope="module")
+def pair(pop8):
+    return (fleet.fleet_day(pop8, dt_s=DT_S),
+            fleet.reference_fleet(pop8, dt_s=DT_S))
+
+
+# ---------------------------------------------------------------------------
+# parity: the scan vs the per-user reference loop
+# ---------------------------------------------------------------------------
+
+def test_parity_survival_bit_identical(pair):
+    rep, ref = pair
+    assert np.array_equal(rep.survives(), ref.survives())
+    assert np.array_equal(rep.shutdown, ref.shutdown)
+    assert np.array_equal(rep.time_to_empty_h, ref.time_to_empty_h)
+    assert np.array_equal(rep.peak_skin_c, ref.peak_skin_c)
+
+
+def test_parity_curve_bins_1e6(pair):
+    rep, ref = pair
+    assert rep.curve.shape == ref.curve.shape \
+        == (fleet.DEFAULT_N_BINS, len(daysim.STREAMS))
+    scale = max(1.0, float(ref.curve.max()))
+    assert np.allclose(rep.curve, ref.curve, rtol=1e-6,
+                       atol=1e-6 * scale)
+    assert np.allclose(rep.pod_hours, ref.pod_hours, rtol=1e-6,
+                       atol=1e-9)
+
+
+def test_parity_mixed_survival(pair):
+    """The default population must exercise BOTH branches — users who
+    die mid-day and users who finish — or the parity above is vacuous."""
+    rep, _ = pair
+    assert 0 < rep.survives().sum() < len(rep)
+
+
+def test_curve_is_active_pods_only(pair):
+    rep, _ = pair
+    assert float(rep.curve.min()) >= 0.0
+    assert float(rep.curve.sum()) > 0.0
+    # rescaling the fleet rescales the curve linearly, nothing else
+    big = fleet.fleet_day(rep.population, dt_s=DT_S, fleet_size=8000.0)
+    assert np.allclose(big.curve, rep.curve * 1000.0, rtol=1e-12)
+    assert np.array_equal(big.time_to_empty_h, rep.time_to_empty_h)
+
+
+# ---------------------------------------------------------------------------
+# PopulationSpec: JSON round-trip + validation
+# ---------------------------------------------------------------------------
+
+def test_population_spec_json_roundtrip():
+    spec = fleet.DEFAULT_POPULATION
+    back = fleet.PopulationSpec.from_dict(
+        json.loads(json.dumps(spec.to_dict())))
+    assert back == spec
+
+
+def test_population_spec_roundtrip_inline_objects():
+    """Archetypes holding schedule/policy OBJECTS (not registry names)
+    embed their dicts and come back equal."""
+    a = fleet.ArchetypeSpec(
+        "inline", 1.0, "aria2_display", daysim.DEFAULT_DESIGNS[0],
+        daysim.get_schedule("commuter"),
+        daysim.get_policy("battery_saver"))
+    spec = fleet.PopulationSpec("p", (a,), tz_hours=(0.0, 5.5))
+    back = fleet.PopulationSpec.from_dict(
+        json.loads(json.dumps(spec.to_dict())))
+    assert back == spec
+    assert back.archetypes[0].resolve_schedule().name == "commuter"
+
+
+def test_spec_validation():
+    a = fleet.DEFAULT_POPULATION.archetypes[0]
+    with pytest.raises(ValueError, match="weight"):
+        replace(a, weight=0.0)
+    with pytest.raises(ValueError, match="fade"):
+        replace(a, fade=(0.2, 1.0))
+    with pytest.raises(ValueError, match="lo > hi"):
+        replace(a, ambient_offset_c=(5.0, -5.0))
+    with pytest.raises(ValueError, match="wake_hour"):
+        replace(a, wake_hour=24.5)
+    with pytest.raises(ValueError, match="archetype"):
+        fleet.PopulationSpec("empty", ())
+    with pytest.raises(ValueError, match="tz_weights"):
+        fleet.PopulationSpec("bad", (a,), tz_hours=(0.0, 1.0),
+                             tz_weights=(1.0,))
+
+
+def test_unsupported_design_rejected():
+    bad = fleet.ArchetypeSpec(
+        "bad", 1.0, "rayban_cam", daysim.DEFAULT_DESIGNS[2],  # edge_heavy
+        "commuter_dock")
+    with pytest.raises(ValueError, match="on-device"):
+        fleet.fleet_day(fleet.PopulationSpec("p", (bad,)), 4, key=0,
+                        dt_s=120.0)
+
+
+# ---------------------------------------------------------------------------
+# sampling: explicit key threading, reproducibility, ranges
+# ---------------------------------------------------------------------------
+
+def test_sampling_reproducible_and_key_sensitive():
+    p1 = fleet.sample_population(fleet.DEFAULT_POPULATION, 64, key=42)
+    p2 = fleet.sample_population(fleet.DEFAULT_POPULATION, 64, key=42)
+    p3 = fleet.sample_population(fleet.DEFAULT_POPULATION, 64, key=43)
+    for k in ("archetype", "tz_hours", "ambient_offset_c", "fade"):
+        assert np.array_equal(getattr(p1, k), getattr(p2, k)), k
+    assert any(not np.array_equal(getattr(p1, k), getattr(p3, k))
+               for k in ("archetype", "tz_hours", "ambient_offset_c",
+                         "fade"))
+
+
+def test_sampling_respects_archetype_ranges():
+    spec = fleet.DEFAULT_POPULATION
+    pop = fleet.sample_population(spec, 256, key=1)
+    assert pop.archetype.min() >= 0
+    assert pop.archetype.max() < spec.n_archetypes
+    assert set(np.unique(pop.tz_hours)) <= set(spec.tz_hours)
+    for i, a in enumerate(spec.archetypes):
+        m = pop.archetype == i
+        assert np.all(pop.fade[m] >= a.fade[0] - 1e-12)
+        assert np.all(pop.fade[m] <= a.fade[1] + 1e-12)
+        assert np.all(pop.ambient_offset_c[m]
+                      >= a.ambient_offset_c[0] - 1e-12)
+        assert np.all(pop.ambient_offset_c[m]
+                      <= a.ambient_offset_c[1] + 1e-12)
+
+
+def test_sampling_rejects_bad_n():
+    with pytest.raises(ValueError, match="n must be > 0"):
+        fleet.sample_population(fleet.DEFAULT_POPULATION, 0, key=0)
+
+
+def test_population_take(pop8):
+    sub = pop8.take(np.asarray([1, 3]))
+    assert len(sub) == 2
+    assert sub.archetype[0] == pop8.archetype[1]
+    assert sub.fade[1] == pop8.fade[3]
+
+
+def test_shard_invariance_subprocess():
+    """Same key + same fleet on a 2-device mesh == single device, down
+    to bit-identical survival (XLA_FLAGS must be set before jax loads,
+    hence the subprocess)."""
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=2"}
+    res = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "_fleet_shard_check.py")],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "SHARD_OK" in res.stdout
+
+
+def test_n_shards_must_fit_devices():
+    with pytest.raises(ValueError, match="n_shards"):
+        fleet.fleet_day(fleet.DEFAULT_POPULATION, 8, key=0,
+                        n_shards=jax_devices() + 1)
+
+
+def jax_devices() -> int:
+    import jax
+    return jax.local_device_count()
+
+
+# ---------------------------------------------------------------------------
+# offload satellites: pod_cost broadcasting + fleet-arg validation
+# ---------------------------------------------------------------------------
+
+def test_pod_cost_broadcasts_over_curves():
+    curve = np.asarray([1.0, 2.0, 0.5])
+    out = offload.pod_cost(curve)
+    assert out["usd"].shape == (3,)
+    scalar = offload.pod_cost(2.0)
+    assert isinstance(scalar["usd"], float)
+    assert np.isclose(out["usd"][1], scalar["usd"])
+    assert np.isclose(out["kgco2"][1], scalar["kgco2"])
+
+
+def test_pod_cost_rejects_negative():
+    with pytest.raises(ValueError, match="pod_hours"):
+        offload.pod_cost(np.asarray([1.0, -0.5]))
+
+
+def test_fleet_sizing_validation():
+    from repro.core import aria2
+    with pytest.raises(ValueError, match="n_users"):
+        offload.size_fleet(aria2.FULL_OFFLOAD, n_users=0)
+    with pytest.raises(ValueError, match="duty"):
+        offload.size_fleet(aria2.FULL_OFFLOAD, n_users=10, duty=1.5)
+    with pytest.raises(ValueError, match="n_users"):
+        offload.pods_relaxed({}, n_users=-5)
+
+
+def test_curve_cost_pricing_math():
+    curve = np.asarray([1.0, 3.0, 2.0, 2.0])
+    out = offload.curve_cost(curve, bin_hours=6.0)
+    assert out["peak_pods"] == 3.0 and out["trough_pods"] == 1.0
+    assert np.isclose(out["trough_peak_ratio"], 1 / 3)
+    assert np.isclose(out["autoscaled"]["pod_hours"], 8.0 * 6.0)
+    assert np.isclose(out["peak_provisioned"]["pod_hours"], 3.0 * 24.0)
+    assert out["savings_usd"] > 0
+    # (B, S) per-stream curves sum over streams first
+    out2 = offload.curve_cost(np.stack([curve / 2, curve / 2], 1),
+                              bin_hours=6.0)
+    assert np.isclose(out2["autoscaled"]["usd"],
+                      out["autoscaled"]["usd"])
+    with pytest.raises(ValueError, match="negative"):
+        offload.curve_cost(np.asarray([1.0, -1.0]))
+    with pytest.raises(ValueError, match="curve"):
+        offload.curve_cost(np.zeros((0,)))
+
+
+# ---------------------------------------------------------------------------
+# BatterySpec capacity fade (satellite): JSON back-compat + dynamics
+# ---------------------------------------------------------------------------
+
+def test_battery_fade_json_backcompat():
+    bat = BatterySpec("cell", 1000.0)
+    assert "fade" not in bat.to_dict()            # absent key == no fade
+    assert BatterySpec.from_dict(bat.to_dict()).fade == 0.0
+    aged = bat.aged(0.2)
+    assert aged.to_dict()["fade"] == 0.2
+    assert BatterySpec.from_dict(aged.to_dict()) == aged
+    assert np.isclose(aged.effective_capacity_mwh, 800.0)
+    with pytest.raises(ValueError, match="fade"):
+        BatterySpec("cell", 1000.0, fade=1.0)
+
+
+def test_fade_shortens_day_and_shows_on_report():
+    rep = daysim.simulate_users(
+        "aria2_display", daysim.DEFAULT_DESIGNS[0], "commuter",
+        "battery_saver", fades=[0.0, 0.4], dt_s=120.0)
+    assert rep.time_to_empty_h[1] < rep.time_to_empty_h[0]
+    assert rep.battery_fade is not None
+    assert rep.row(1)["battery_fade"] == 0.4
+    assert "battery_fade" not in rep.row(0)       # zero fade stays quiet
+
+
+def test_ambient_offset_heats_the_day():
+    rep = daysim.simulate_users(
+        "aria2_display", daysim.DEFAULT_DESIGNS[0], "commuter",
+        ambient_offsets_c=[0.0, 8.0], dt_s=120.0)
+    assert rep.peak_skin_c[1] > rep.peak_skin_c[0] + 4.0
+
+
+# ---------------------------------------------------------------------------
+# fleet_pareto + variant overrides
+# ---------------------------------------------------------------------------
+
+def test_with_overrides_respects_placement_support():
+    spec = fleet.DEFAULT_POPULATION
+    edge = daysim.DEFAULT_DESIGNS[2]              # vio+eye+asr+hand
+    v = spec.with_overrides("v", policy="none", design=edge)
+    by_name = {a.name: a for a in v.archetypes}
+    assert by_name["power_user"].design["name"] == "edge_heavy"
+    # rayban_cam can only run asr on-device -> keeps its own design
+    assert by_name["desk_lite"].design["name"] \
+        == spec.archetypes[1].design["name"]
+    assert all(a.policy == "none" for a in v.archetypes)
+
+
+def test_fleet_pareto_smoke():
+    variants = [
+        ("saver", fleet.DEFAULT_POPULATION.with_overrides(
+            "saver", policy="battery_saver")),
+        ("none", fleet.DEFAULT_POPULATION.with_overrides(
+            "none", policy="none")),
+    ]
+    ff = dse.fleet_pareto(variants=variants, n_users=16, key=0,
+                          dt_s=120.0, fleet_size=1e6)
+    assert len(ff.rows) == 2
+    assert ff.front_mask.any()
+    r = ff.rows[0]
+    assert {"variant", "survival_rate", "usd_per_day",
+            "peak_usd_per_day", "trough_peak_ratio"} <= set(r)
+    assert r["usd_per_day"] <= r["peak_usd_per_day"]
+    assert all(np.isfinite(x["usd_per_day"]) for x in ff.rows)
+
+
+# ---------------------------------------------------------------------------
+# report plumbing
+# ---------------------------------------------------------------------------
+
+def test_capacity_plan_and_archetype_stats(pair):
+    rep, _ = pair
+    plan = rep.capacity_plan()
+    assert plan["autoscaled"]["usd"] <= plan["peak_provisioned"]["usd"]
+    assert 0.0 <= plan["trough_peak_ratio"] <= 1.0
+    assert plan["survival_rate"] == round(rep.survival_rate(), 4)
+    rows = rep.by_archetype()
+    assert sum(r["users"] for r in rows) == len(rep)
+    assert all(0.0 <= r["survival_rate"] <= 1.0 for r in rows)
+
+
+def test_timezone_binning_phase_shift():
+    """One archetype, one user per timezone: shifting the timezone
+    rotates the SAME demand curve around the clock."""
+    a = replace(fleet.DEFAULT_POPULATION.archetypes[0],
+                ambient_offset_c=(0.0, 0.0), fade=(0.0, 0.0))
+    mk = lambda tz: fleet.PopulationSpec("one", (a,), tz_hours=(tz,))
+    r0 = fleet.fleet_day(mk(0.0), 1, key=0, dt_s=120.0)
+    r6 = fleet.fleet_day(mk(-6.0), 1, key=0, dt_s=120.0)
+    # tz -6 shifts the user's local day 6h later in UTC
+    assert np.allclose(np.roll(r0.curve_total, 6), r6.curve_total,
+                       rtol=1e-6, atol=1e-9)
+    assert np.array_equal(r0.time_to_empty_h, r6.time_to_empty_h)

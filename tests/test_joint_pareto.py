@@ -278,4 +278,5 @@ def test_bench_smoke_mode_runs_clean():
     assert "joint_smoke" in res.stdout
     assert "daysim_smoke" in res.stdout
     assert "grad_smoke" in res.stdout
+    assert "fleet_smoke" in res.stdout
     assert "ERROR" not in res.stdout
