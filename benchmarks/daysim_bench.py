@@ -24,8 +24,13 @@ BENCH_daysim.json schema (one JSON object):
                           integrator vs the per-step loop at equal
                           work; the regression gate metric (>20% drop
                           fails benchmarks/run.py)
-  day_pareto_ms     float one full-grid dse.day_pareto pass, cold
-                          (includes jit compile + table building)
+  day_pareto_ms     float one full-grid dse.day_pareto pass with the
+                          fused pipeline warm (the interactive-query
+                          latency; gated lower-is-better — >20% growth
+                          fails benchmarks/run.py)
+  day_pareto_cold_ms float first fused pass: trace + XLA compile of the
+                          whole tables->scan->front program + host
+                          index assembly (ungated; compile-dominated)
   front_size        int   members of the (time-to-empty, peak skin,
                           pod-hours) non-dominated front
   throttle_flip     obj   a (platform, schedule) where the best
@@ -106,7 +111,10 @@ def run(n_repeats: int = 5):
 
     t0 = time.perf_counter()
     rep = dse.day_pareto(dt_s=BENCH_DT_S)       # compiles + full grid
-    day_pareto_ms = (time.perf_counter() - t0) * 1e3
+    day_pareto_cold_ms = (time.perf_counter() - t0) * 1e3
+    day_pareto_ms = min(
+        _timed(lambda: dse.day_pareto(dt_s=BENCH_DT_S))
+        for _ in range(n_repeats)) * 1e3        # warm: compiled program
     n = len(rep)
 
     # integrator head-to-head at equal work: the vmapped lax.scan over
@@ -143,6 +151,7 @@ def run(n_repeats: int = 5):
         "python_ms": round(python_ms, 2),
         "speedup": round(speedup, 1),
         "day_pareto_ms": round(day_pareto_ms, 1),
+        "day_pareto_cold_ms": round(day_pareto_cold_ms, 1),
         "front_size": int(rep.front_mask.sum()),
         "throttle_flip": flip,
         "dynamics_flip": dyn,
@@ -151,6 +160,7 @@ def run(n_repeats: int = 5):
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "BENCH_daysim.json").write_text(json.dumps(result, indent=1))
     derived = (f"{n}combos speedup={result['speedup']}x "
+               f"pareto={result['day_pareto_ms']}ms "
                f"front={result['front_size']} "
                f"throttle_flip={'yes' if flip else 'NO'} "
                f"dynamics_flip={'yes' if dyn else 'NO'}")

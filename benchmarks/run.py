@@ -21,14 +21,17 @@ from pathlib import Path
 
 OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
 
-# BENCH file -> (metric key, sense); "higher" means a drop is a regression
+# BENCH file -> ((metric key, sense), ...); "higher" means a drop is a
+# regression, "lower" that growth is (latency-style metrics)
 GATED_METRICS = {
-    "BENCH_dse.json": ("speedup", "higher"),
-    "BENCH_joint.json": ("points_per_s", "higher"),
-    "BENCH_backend.json": ("speedup", "higher"),
-    "BENCH_daysim.json": ("speedup", "higher"),
-    "BENCH_grad.json": ("calib_speedup", "higher"),
-    "BENCH_fleet.json": ("speedup", "higher"),
+    "BENCH_dse.json": (("speedup", "higher"),),
+    "BENCH_joint.json": (("points_per_s", "higher"),),
+    "BENCH_backend.json": (("speedup", "higher"),),
+    "BENCH_daysim.json": (("speedup", "higher"),
+                          ("day_pareto_ms", "lower")),
+    "BENCH_grad.json": (("calib_speedup", "higher"),),
+    "BENCH_fleet.json": (("speedup", "higher"),),
+    "BENCH_twin.json": (("warm_query_ms", "lower"),),
 }
 REGRESSION_TOLERANCE = 0.20
 
@@ -48,24 +51,31 @@ def _load_baselines() -> dict:
 
 def _check_regressions(baselines: dict) -> list[str]:
     msgs = []
-    for fname, (key, sense) in GATED_METRICS.items():
-        base = baselines.get(fname, {}).get(key)
+    for fname, gates in GATED_METRICS.items():
         f = OUT / fname
-        if base is None or not f.exists():
+        if not f.exists():
             continue
-        new = json.loads(f.read_text()).get(key)
-        if new is None or float(base) <= 0:
-            continue
-        ratio = float(new) / float(base)
-        regressed = (ratio < 1.0 - REGRESSION_TOLERANCE
-                     if sense == "higher"
-                     else ratio > 1.0 + REGRESSION_TOLERANCE)
-        if regressed:
-            msgs.append(f"{fname}:{key} {base} -> {new} "
-                        f"({100 * (ratio - 1):+.1f}%)")
-            # keep the pre-run baseline on disk so the regression cannot
-            # absorb itself into the next run's comparison point
-            f.write_text(json.dumps(baselines[fname], indent=1))
+        fresh = json.loads(f.read_text())
+        rolled_back = False
+        for key, sense in gates:
+            base = baselines.get(fname, {}).get(key)
+            if base is None or float(base) <= 0:
+                continue
+            new = fresh.get(key)
+            if new is None:
+                continue
+            ratio = float(new) / float(base)
+            regressed = (ratio < 1.0 - REGRESSION_TOLERANCE
+                         if sense == "higher"
+                         else ratio > 1.0 + REGRESSION_TOLERANCE)
+            if regressed:
+                msgs.append(f"{fname}:{key} {base} -> {new} "
+                            f"({100 * (ratio - 1):+.1f}%)")
+                if not rolled_back:
+                    # keep the pre-run baseline on disk so the regression
+                    # cannot absorb itself into the next run's comparison
+                    f.write_text(json.dumps(baselines[fname], indent=1))
+                    rolled_back = True
     return msgs
 
 
@@ -76,18 +86,20 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from . import daysim_bench, dse_bench, fleet_bench, grad_bench, \
-        joint_bench, kernel_benches, paper_benches, roofline
+        joint_bench, kernel_benches, paper_benches, roofline, twin_bench
     if args.smoke:
         benches = [("joint_smoke", joint_bench.smoke),
                    ("backend_smoke", roofline.backend_smoke),
                    ("daysim_smoke", daysim_bench.smoke),
                    ("grad_smoke", grad_bench.smoke),
-                   ("fleet_smoke", fleet_bench.smoke)]
+                   ("fleet_smoke", fleet_bench.smoke),
+                   ("twin_smoke", twin_bench.smoke)]
     else:
         benches = [
             ("dse_batched_vs_loop", dse_bench.run),
             ("joint_pareto", joint_bench.run),
             ("daysim", daysim_bench.run),
+            ("twin", twin_bench.run),
             ("grad_descent", grad_bench.run),
             ("fleet", fleet_bench.run),
             ("backend_roofline", roofline.backend_bench),

@@ -1,0 +1,137 @@
+"""Interactive design-twin benchmark (serving/twin.py + the fused
+day-Pareto pipeline).
+
+Times the question the twin exists to answer: how fast is a what-if
+once the grid program is warm?  The cold query pays tracing + host
+index assembly once; every subsequent value-level query re-pushes small
+host arrays through the compiled executable.  The committed
+`warm_query_ms` is the interactivity regression gate (lower is better,
+>20% growth fails benchmarks/run.py).
+
+BENCH_twin.json schema (one JSON object):
+  n_combos         int   design points per query (full default grid)
+  n_steps          int   scan length at dt_s
+  dt_s             float integrator step
+  cold_query_ms    float first query: trace + compile + host assembly
+  warm_query_ms    float best repeat query (pipeline-cache path) — the
+                         gate metric, lower is better
+  whatif_query_ms  float best value-changed query (new thresholds, warm
+                         executable: host reassembly + device run)
+  xla_step_us      float warm_query_ms amortized per (combo x step)
+  pallas_step_us   float same for backend="pallas" on a reduced grid
+                         (interpret mode off-TPU; indicative only)
+  front_size       int   non-dominated set size of the base grid
+  traces           int   retraces counted across the timed warm/what-if
+                         queries (the zero-retrace contract: must be 0)
+
+    PYTHONPATH=src python benchmarks/twin_bench.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+
+BENCH_DT_S = 20.0
+
+
+def _best_ms(fn, n: int = 5) -> float:
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def run(n_repeats: int = 5):
+    from repro.core import daysim
+    from repro.serving.twin import DesignTwin
+
+    t0 = time.perf_counter()
+    twin = DesignTwin(dt_s=BENCH_DT_S)          # warm=True pays the cold
+    cold_query_ms = (time.perf_counter() - t0) * 1e3
+    rep = twin.query()
+    n, steps = len(rep), int(round(rep.day_hours.max() * 3600 / BENCH_DT_S))
+
+    traces0 = daysim.EXEC_STATS["traces"]
+    warm_query_ms = _best_ms(twin.query, n_repeats)
+
+    gov = daysim.get_policy("thermal_governor")
+    trips = iter(range(100))                    # fresh values every call
+
+    def whatif():
+        twin.query(policies=("none", dataclasses.replace(
+            gov, name=f"g{next(trips)}",
+            temp_trip_c=39.0 + 0.01 * next(trips)), "battery_saver"))
+
+    whatif()                                    # first value change
+    whatif_query_ms = _best_ms(whatif, n_repeats)
+    traces = daysim.EXEC_STATS["traces"] - traces0
+
+    # pallas kernel path on a reduced grid (interpret mode on CPU is an
+    # emulation — indicative, not hardware-representative)
+    pt = DesignTwin(platforms=("aria2_display",), dt_s=60.0,
+                    backend="pallas")
+    p_rep = pt.query()
+    pallas_ms = _best_ms(pt.query, 3)
+    p_steps = int(round(p_rep.day_hours.max() * 3600 / 60.0))
+
+    result = {
+        "n_combos": n,
+        "n_steps": steps,
+        "dt_s": BENCH_DT_S,
+        "cold_query_ms": round(cold_query_ms, 1),
+        "warm_query_ms": round(warm_query_ms, 2),
+        "whatif_query_ms": round(whatif_query_ms, 2),
+        "xla_step_us": round(warm_query_ms * 1e3 / (n * steps), 3),
+        "pallas_step_us": round(pallas_ms * 1e3
+                                / (len(p_rep) * p_steps), 3),
+        "front_size": int(rep.front_mask.sum()),
+        "traces": traces,
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "BENCH_twin.json").write_text(json.dumps(result, indent=1))
+    derived = (f"{n}combos warm={result['warm_query_ms']}ms "
+               f"whatif={result['whatif_query_ms']}ms "
+               f"cold={result['cold_query_ms']:.0f}ms "
+               f"traces={traces}")
+    return rep.front_rows(), derived
+
+
+def smoke():
+    """Small-grid twin pass: warm-up, repeat query, one value what-if;
+    asserts the zero-retrace warm contract.  Writes nothing."""
+    from repro.core import daysim
+    from repro.serving.twin import DesignTwin
+
+    twin = DesignTwin(platforms=("aria2_display",),
+                      designs=daysim.DEFAULT_DESIGNS[:2],
+                      schedules=("commuter",), dt_s=60.0)
+    twin.query()
+    before = daysim.EXEC_STATS["traces"]
+    twin.query()
+    twin.what_if(policy=dataclasses.replace(
+        daysim.get_policy("thermal_governor"), name="smoke",
+        temp_trip_c=41.0))
+    assert daysim.EXEC_STATS["traces"] == before + 1  # 1-policy reshape
+    twin.what_if(policy=dataclasses.replace(
+        daysim.get_policy("thermal_governor"), name="smoke2",
+        temp_trip_c=42.0))
+    assert daysim.EXEC_STATS["traces"] == before + 1  # then warm
+    rep = twin.query()
+    assert daysim.EXEC_STATS["traces"] == before + 1
+    return rep.front_rows(), (f"{len(rep)}combos "
+                              f"warm={twin.stats.last_ms:.0f}ms "
+                              f"0retrace ok")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    rows, derived = run()
+    print((OUT / "BENCH_twin.json").read_text())
+    print(derived)

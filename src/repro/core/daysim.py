@@ -41,9 +41,25 @@ Schedules and policies are declarative data: JSON round-trip
 `get_policy`).  `reference_integrate` is the pure-Python per-step
 oracle — parity-tested against the scan and the baseline for
 `benchmarks/daysim_bench.py`.
+
+Two evaluation engines share the step math.  The **legacy** path
+(`_compile_platform` + `batch_tables` + the standalone vmapped scan)
+builds numpy tables on the host — it is the bit-compatibility oracle.
+The **fused** path (`day_grid(engine="fused")`, default under
+`dse.day_pareto`) compiles the whole chain — scenario row stages,
+the (N, T, L) table gather, the day scan (`lax.scan` or the
+`kernels/day_scan.py` pallas step via `backend="pallas"`),
+`_summarize_jax`, and `dse.non_dominated_jax` — into ONE device
+program with donated inputs (off-CPU), cached two ways: `_EXEC_CACHE`
+keyed by grid *shape* (value-level what-ifs reuse a warm executable,
+zero retraces — `EXEC_STATS` counts) and `_PIPELINES` keyed by grid
+*values* (identical queries skip host assembly entirely).  Front masks
+and survival flags are bit-identical across engines; see
+`serving/twin.py` for the interactive query surface.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 
 import jax
@@ -790,6 +806,7 @@ class _Combo:
     pods_levels: np.ndarray = None      # (L, n_seg)
     mbps_levels: np.ndarray = None      # (L, n_seg) gated uplink rate
     pods_stream_levels: np.ndarray = None   # (L, n_seg, len(STREAMS))
+    mw_p_levels: np.ndarray = None      # (L, n_seg) puck active power
     steady_mw: float = 0.0
 
     def label(self) -> dict:
@@ -844,33 +861,136 @@ def clear_row_cache() -> None:
     CACHE_STATS.update(hits=0, misses=0, evaluate_calls=0)
 
 
+# host cache of COMPILED executables: the `_ROW_CACHE` idea extended to
+# `jax.jit` artifacts.  Keys carry the full static signature (platform
+# specs, grid shape, backend); values are jit wrappers built once per
+# signature, so a warm twin query does zero tracing and zero host table
+# work.  EXEC_STATS["traces"] is bumped INSIDE the traced bodies (i.e.
+# at trace time only) — the compile-stability tests assert it stays
+# flat across warm same-shaped queries.
+_EXEC_CACHE: dict = {}
+_PIPELINES: dict = {}
+_PIPELINES_MAX = 32
+EXEC_STATS = {"hits": 0, "misses": 0, "traces": 0}
+
+
+def _cached_executable(key, build):
+    """Fetch (or build) the compiled callable for one static signature."""
+    fn = _EXEC_CACHE.get(key)
+    if fn is None:
+        EXEC_STATS["misses"] += 1
+        fn = _EXEC_CACHE[key] = build()
+    else:
+        EXEC_STATS["hits"] += 1
+    return fn
+
+
+def clear_exec_cache() -> None:
+    _EXEC_CACHE.clear()
+    _PIPELINES.clear()
+    EXEC_STATS.update(hits=0, misses=0, traces=0)
+
+
+def _jit_pipeline(fn):
+    """Jit wrapper for the fused day program.
+
+    The per-query `dyn` pytree (arg 0) is donated on accelerator
+    backends: it is re-pushed from host masters on every query, so its
+    device buffers are dead after the call and XLA may reuse them for
+    the (N, T, L) gathered tables.  CPU runs (tests/CI) do not support
+    buffer donation — jit plain there to avoid the warning."""
+    if jax.default_backend() == "cpu":
+        return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=32)
+def _row_stage(plat: PlatformSpec):
+    """Pure on-device table stage for one platform (jit-composable).
+
+    Maps a batched knob vector straight to the per-row quantities the
+    day tables need — glasses total mW, gated uplink Mbps, puck active
+    mW, backend pods (total and per stream) — entirely in float32 on
+    the device.  Both consumers trace the SAME closure: the legacy
+    `_compile_platform` path jits it standalone (`_row_eval`), and the
+    fused day pipeline inlines it between the row gather and the scan,
+    which is what keeps the two paths' tables bit-identical."""
+    eng = scenarios.batched_fn(plat)
+    asr_j = plat.primitives.index("asr")
+
+    def stage(vec, th, rates, gate_scale, p_base, p_wan):
+        out = eng(vec, th)
+        pods, pods_s = offload.pods_streams_device(
+            vec["placement"][:, asr_j], vec["fps_scale"],
+            vec["upload_duty"], rates, gate_scale)
+        mw_p = p_base + p_wan * out["mbps"]
+        return out["total"], out["mbps"], mw_p, pods, pods_s
+
+    return stage
+
+
+def _puck_coeffs(plat: PlatformSpec) -> tuple:
+    """(base+link mW, mW/Mbps) of the platform's puck (0, 0 if none)."""
+    puck = puck_for(plat)
+    if puck is None:
+        return 0.0, 0.0
+    return puck.base_mw + puck.wan_link_mw, puck.wan_mw_per_mbps
+
+
+def _row_eval(plat: PlatformSpec, rows: list, n_users: float,
+              theta=None, results_dir=None) -> np.ndarray:
+    """Evaluate fresh scenario rows through the jitted device table
+    stage; returns (R, 4 + S) float64 columns
+    [total_mw, pods, mbps, *per-stream pods, mw_puck]."""
+    sset = ScenarioSet.build(rows, primitives=plat.primitives)
+    scenarios._validate(plat, sset)
+    rr = offload.stream_rates(results_dir)
+    p_base, p_wan = _puck_coeffs(plat)
+    fn = _cached_executable(("rows", plat),
+                            lambda: jax.jit(_row_stage(plat)))
+    total, mbps, mw_p, pods, pods_s = fn(
+        sset.vec(), scenarios._theta(plat, theta),
+        jnp.asarray(rr["tok_per_cap"], jnp.float32),
+        jnp.float32(n_users),       # duty=1.0, the daysim convention
+        jnp.float32(p_base), jnp.float32(p_wan))
+    jax.block_until_ready(total)
+    return np.column_stack([
+        np.asarray(total, np.float64), np.asarray(pods, np.float64),
+        np.asarray(mbps, np.float64), np.asarray(pods_s, np.float64),
+        np.asarray(mw_p, np.float64)])
+
+
+def _combo_rows(cb: "_Combo", rows: list) -> tuple:
+    """Append one combo's scenario rows (levels x segments + the steady
+    reference row) to `rows`; returns its (start, steady) offsets."""
+    start = len(rows)
+    for level in range(cb.policy.n_levels):
+        act = cb.policy.action(level)
+        rows.extend(_design_row(cb.design, seg, act)
+                    for seg in cb.schedule.segments)
+    # steady-state reference row: the design at nominal always-on
+    # knobs (duty 1, display off) — the number the old engines report
+    rows.append(_design_row(cb.design, DaySegment("steady", 1.0),
+                            ThrottleAction()))
+    return start, len(rows) - 1
+
+
 def _compile_platform(plat: PlatformSpec, combos: list, n_users: float,
                       theta=None, results_dir=None) -> None:
     """Fill mw/pods/mbps level tables for every combo of one platform.
 
     Rows are deduplicated (`_row_key`) and served from the module-level
     `_ROW_CACHE`; only rows never seen for this (platform, theta,
-    n_users, results_dir) context hit the engine — at most ONE batched
-    `scenarios.evaluate` + ONE vectorized pods pass per call, and zero
-    on a warm cache."""
+    n_users, results_dir) context hit the device table stage — at most
+    ONE `_row_eval` call per compile, and zero on a warm cache.  The
+    cache is bounded by FIFO eviction of the oldest-inserted rows once
+    `_ROW_CACHE_MAX` is crossed (never a wholesale clear: a sweep that
+    crosses the limit keeps its hit rate on the rows it still reuses)."""
     if not combos:
         return
     rows, slices = [], []
     for cb in combos:
-        start = len(rows)
-        for level in range(cb.policy.n_levels):
-            act = cb.policy.action(level)
-            rows.extend(_design_row(cb.design, seg, act)
-                        for seg in cb.schedule.segments)
-        # steady-state reference row: the design at nominal always-on
-        # knobs (duty 1, display off) — the number the old engines report
-        rows.append(_design_row(cb.design, DaySegment("steady", 1.0),
-                                ThrottleAction()))
-        slices.append((start, len(rows) - 1))
-    # evict BEFORE membership checks: clearing after computing hits
-    # would drop entries this very call still indexes below
-    if len(_ROW_CACHE) > _ROW_CACHE_MAX:
-        _ROW_CACHE.clear()
+        slices.append(_combo_rows(cb, rows))
     ctx = (_ctx_id(plat, theta, n_users, results_dir),)
     keys = [ctx + _row_key(r) for r in rows]
     fresh: dict = {}
@@ -880,21 +1000,14 @@ def _compile_platform(plat: PlatformSpec, combos: list, n_users: float,
     CACHE_STATS["hits"] += sum(k in _ROW_CACHE for k in keys)
     CACHE_STATS["misses"] += len(fresh)
     if fresh:
-        sset = ScenarioSet.build(list(fresh.values()),
-                                 primitives=plat.primitives)
-        rep = scenarios.evaluate(plat, sset, theta)
+        fvals = _row_eval(plat, list(fresh.values()), n_users, theta,
+                          results_dir)
         CACHE_STATS["evaluate_calls"] += 1
-        totals = np.asarray(rep.total_mw, np.float64)
-        mbps = np.asarray(rep.offloaded_mbps, np.float64)
-        bd = offload.pods_breakdown(sset, n_users=n_users, duty=1.0,
-                                    results_dir=results_dir)
         for i, k in enumerate(fresh):
-            _ROW_CACHE[k] = (totals[i], float(bd.pods[i]), mbps[i],
-                             *(float(bd.by_stream[s][i])
-                               for s in STREAMS))
+            _ROW_CACHE[k] = tuple(fvals[i])
     vals = np.asarray([_ROW_CACHE[k] for k in keys], np.float64)
     totals, pods, mbps = vals[:, 0], vals[:, 1], vals[:, 2]
-    streams = vals[:, 3:]
+    streams, mw_p = vals[:, 3:-1], vals[:, -1]
     for cb, (start, steady_i) in zip(combos, slices):
         n_seg, n_lvl = len(cb.schedule.segments), cb.policy.n_levels
         cb.mw_levels = totals[start:steady_i].reshape(n_lvl, n_seg)
@@ -902,7 +1015,12 @@ def _compile_platform(plat: PlatformSpec, combos: list, n_users: float,
         cb.mbps_levels = mbps[start:steady_i].reshape(n_lvl, n_seg)
         cb.pods_stream_levels = streams[start:steady_i].reshape(
             n_lvl, n_seg, len(STREAMS))
+        cb.mw_p_levels = mw_p[start:steady_i].reshape(n_lvl, n_seg)
         cb.steady_mw = float(totals[steady_i])
+    # bounded FIFO eviction AFTER serving this call (evicting before
+    # the value extraction above could drop entries this call indexes)
+    while len(_ROW_CACHE) > _ROW_CACHE_MAX:
+        del _ROW_CACHE[next(iter(_ROW_CACHE))]
 
 
 def _battery_const(bat: BatterySpec, th: ThermalSpec, dt_s: float,
@@ -920,6 +1038,29 @@ def _battery_const(bat: BatterySpec, th: ThermalSpec, dt_s: float,
     }
 
 
+def _combo_const(cb: _Combo, dt_s: float, standby_mw: float,
+                 shutdown_c: float) -> dict:
+    """Scan-constant scalars for one combo (policy thresholds + battery/
+    thermal coefficients) — shared verbatim by the numpy table builder
+    and the fused device pipeline so both scans see identical consts."""
+    return {
+        "temp_trip": cb.policy.temp_trip_c,
+        "temp_clear": cb.policy.temp_clear_c,
+        "soc_trip": cb.policy.soc_trip, "soc_clear": cb.policy.soc_clear,
+        "max_level": float(cb.policy.n_levels - 1),
+        "standby_mw": standby_mw,
+        "shutdown_c": shutdown_c,
+        "ste_beta_c": STE_BETA_C, "ste_beta_soc": STE_BETA_SOC,
+        "has_puck": 1.0 if cb.puck is not None else 0.0,
+        "p_standby_mw": cb.puck.standby_mw if cb.puck is not None else 0.0,
+        **_battery_const(cb.battery, cb.thermal, dt_s),
+        **_battery_const(
+            cb.puck.battery if cb.puck is not None else cb.battery,
+            cb.puck.thermal if cb.puck is not None else cb.thermal,
+            dt_s, "p_"),
+    }
+
+
 def _combo_tables(cb: _Combo, dt_s: float, n_steps: int,
                   max_levels: int, standby_mw: float,
                   shutdown_c: float = DEFAULT_SHUTDOWN_C) -> dict:
@@ -931,8 +1072,14 @@ def _combo_tables(cb: _Combo, dt_s: float, n_steps: int,
     mw = cb.mw_levels                       # (L, n_seg)
     pods = cb.pods_levels
     pods_s = cb.pods_stream_levels          # (L, n_seg, S)
-    mw_p = (cb.puck.level_mw(cb.mbps_levels) if cb.puck is not None
-            else np.zeros_like(mw))
+    # puck active power comes from the device table stage (one f32 FMA
+    # per row, cached alongside the other columns); fall back to the
+    # host expression for combos filled by out-of-tree code
+    if cb.mw_p_levels is not None:
+        mw_p = cb.mw_p_levels
+    else:
+        mw_p = (cb.puck.level_mw(cb.mbps_levels) if cb.puck is not None
+                else np.zeros_like(mw))
     if mw.shape[0] < max_levels:            # pad levels with the last row
         pad = max_levels - mw.shape[0]
         mw = np.concatenate([mw, np.repeat(mw[-1:], pad, 0)])
@@ -969,22 +1116,7 @@ def _combo_tables(cb: _Combo, dt_s: float, n_steps: int,
     amult = np.ones(max_levels, np.float32)
     for lv in range(1, cb.policy.n_levels):
         amult[lv:] = cb.policy.action(lv).active_mult
-    const = {
-        "temp_trip": cb.policy.temp_trip_c,
-        "temp_clear": cb.policy.temp_clear_c,
-        "soc_trip": cb.policy.soc_trip, "soc_clear": cb.policy.soc_clear,
-        "max_level": float(cb.policy.n_levels - 1),
-        "standby_mw": standby_mw,
-        "shutdown_c": shutdown_c,
-        "ste_beta_c": STE_BETA_C, "ste_beta_soc": STE_BETA_SOC,
-        "has_puck": 1.0 if cb.puck is not None else 0.0,
-        "p_standby_mw": cb.puck.standby_mw if cb.puck is not None else 0.0,
-        **_battery_const(cb.battery, cb.thermal, dt_s),
-        **_battery_const(
-            cb.puck.battery if cb.puck is not None else cb.battery,
-            cb.puck.thermal if cb.puck is not None else cb.thermal,
-            dt_s, "p_"),
-    }
+    const = _combo_const(cb, dt_s, standby_mw, shutdown_c)
     return {"step_mw": step_mw, "step_mw_p": step_mw_p,
             "step_pods": step_pods, "step_pods_s": step_pods_s,
             "ambient": amb,
@@ -1071,7 +1203,12 @@ class DayReport:
 
     def front_indices(self) -> np.ndarray:
         if self.front_mask is None:
-            raise ValueError("front_mask not set; use dse.day_pareto")
+            raise ValueError(
+                "DayReport.front_mask is not set — this report was built "
+                "without a Pareto pass.  Build the report with "
+                "dse.day_pareto(...) (or daysim.day_grid(..., "
+                "with_front=True)) to fill the non-dominated front "
+                "before calling front_indices()/front_rows().")
         return np.flatnonzero(self.front_mask)
 
     def front_rows(self) -> list:
@@ -1156,20 +1293,20 @@ DEFAULT_SCHEDULES = ("commuter", "field_day", "desk_day")
 DEFAULT_POLICIES = ("none", "thermal_governor", "battery_saver")
 
 
-def build_combos(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
-                 schedules=DEFAULT_SCHEDULES, policies=DEFAULT_POLICIES,
-                 n_users: float = 1e6, battery=None,
-                 thermal: ThermalSpec | None = None, theta=None,
-                 results_dir=None) -> tuple:
-    """Enumerate runnable combos and pre-compile their level tables (one
-    batched steady-state evaluate + pods pass per platform).  Returns
-    (combos, skipped); designs whose placement a platform cannot run
-    on-device are skipped, mirroring the engine's placement check."""
+def _enumerate_combos(platforms, designs, schedules, policies,
+                      battery=None, thermal=None) -> tuple:
+    """Resolve grid axes into per-platform combo groups (no tables yet).
+
+    Returns ([(plat, [combo, ...]), ...], skipped) — the shared front
+    half of `build_combos` (which fills host tables) and the fused
+    device pipeline (which never does).  Designs whose placement a
+    platform cannot run on-device are skipped, mirroring the engine's
+    placement check."""
     schedules = [_resolve(s, get_schedule, DaySchedule)
                  for s in schedules]
     policies = [_resolve(p, get_policy, ThrottlePolicy) for p in policies]
     therm = thermal or DEFAULT_THERMAL
-    combos, skipped = [], []
+    groups, skipped = [], []
     for p in platforms:
         plat = _plat(p)
         supported = set(plat.supported_primitives())
@@ -1185,6 +1322,23 @@ def build_combos(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
             plat_combos.extend(
                 _Combo(plat, d, sched, pol, bat, therm, puck)
                 for sched in schedules for pol in policies)
+        groups.append((plat, plat_combos))
+    return groups, skipped
+
+
+def build_combos(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
+                 schedules=DEFAULT_SCHEDULES, policies=DEFAULT_POLICIES,
+                 n_users: float = 1e6, battery=None,
+                 thermal: ThermalSpec | None = None, theta=None,
+                 results_dir=None) -> tuple:
+    """Enumerate runnable combos and pre-compile their level tables (one
+    batched steady-state evaluate + pods pass per platform).  Returns
+    (combos, skipped); designs whose placement a platform cannot run
+    on-device are skipped, mirroring the engine's placement check."""
+    groups, skipped = _enumerate_combos(platforms, designs, schedules,
+                                        policies, battery, thermal)
+    combos = []
+    for plat, plat_combos in groups:
         _compile_platform(plat, plat_combos, n_users, theta, results_dir)
         combos.extend(plat_combos)
     if not combos:
@@ -1206,13 +1360,255 @@ def batch_tables(combos: list, dt_s: float = DEFAULT_DT_S,
                                   *per)
 
 
+# ---------------------------------------------------------------------------
+# the fused day pipeline: tables -> scan -> objectives -> front, ONE program
+# ---------------------------------------------------------------------------
+
+def _summarize_jax(ys: dict, valid, active, dt_s) -> dict:
+    """Device mirror of `_summarize`: (N, T) traces -> (N,) objectives.
+
+    Same expressions in the same op order, float32 on the device — the
+    integer-step quantities (time-to-empty, day hours) and trace maxima
+    are exact in f32, so survival flags and front masks agree bit for
+    bit with the host oracle."""
+    soc, soc_p, shut = ys["soc"], ys["soc_p"], ys["shut"]
+    vb = valid > 0.0
+    day_steps = jnp.sum(valid, axis=1)
+    # either node emptying — or the thermal hard-kill — ends the day
+    dead = (jnp.minimum(soc, soc_p) <= 0.0) | (shut > 0.5)
+    hit = jnp.any(dead, axis=1)
+    first = jnp.argmax(dead, axis=1).astype(soc.dtype) + 1.0
+    tte = jnp.where(hit, first, day_steps) * dt_s / 3600.0
+    peak = jnp.max(jnp.where(vb, ys["t_skin"], -jnp.inf), axis=1)
+    peak_p = jnp.max(jnp.where(vb, ys["t_skin_p"], -jnp.inf), axis=1)
+    # capture-hours degraded by the policy while the device was still
+    # alive (time after the cell empties is lost outright, not throttled)
+    alive = ~jnp.concatenate([jnp.zeros_like(dead[:, :1]),
+                              dead[:, :-1]], axis=1)
+    throttled = ((ys["level"] > 0) & vb & alive) * active
+    drain = ys["drain_mw"] + ys["drain_p_mw"]
+    return {
+        "day_hours": day_steps * dt_s / 3600.0,
+        "time_to_empty_h": tte,
+        "end_soc": soc[:, -1],
+        "end_soc_puck": soc_p[:, -1],
+        "peak_skin_c": peak,
+        "peak_skin_puck_c": peak_p,
+        "pod_hours": jnp.sum(ys["pods"], axis=1) * dt_s / 3600.0,
+        "throttled_h": jnp.sum(throttled, axis=1) * dt_s / 3600.0,
+        "energy_mwh": jnp.sum(drain, axis=1) * dt_s / 3600.0,
+        "shutdown": shut[:, -1] > 0.5,
+    }
+
+
+def _design_key(d: dict) -> tuple:
+    """Hashable identity of a design dict (value-level, order-free)."""
+    return tuple(sorted((k, tuple(v) if isinstance(v, (list, tuple))
+                         else v) for k, v in d.items()))
+
+
+@dataclass
+class _Pipeline:
+    """One assembled fused-day query: host masters + device indices +
+    the compiled program.  `dyn` is re-pushed from numpy every call
+    (donation-safe); `ix` stays resident on the device."""
+    combos: list
+    skipped: list
+    dyn: dict               # numpy masters, pushed per query
+    ix: dict                # device-resident gather indices / step data
+    fn: object              # jitted fused(dyn, ix) -> summary dict
+
+
+def _build_fused(plats: tuple, backend: str):
+    """Build the (unjitted) fused day program for one grid signature.
+
+    The traced body runs scenario row stages (one per platform), gathers
+    the (N, T, L) step tables on the device, integrates the vmapped day
+    scan (XLA `lax.scan` or the pallas `day_scan` kernel), reduces
+    objectives, and extracts the non-dominated front — tables never
+    visit the host.  `EXEC_STATS["traces"]` is bumped by the Python
+    body, i.e. at trace time only: warm same-shaped queries leave it
+    untouched, which is the zero-retrace contract the twin tests pin."""
+    stages = [_row_stage(p) for p in plats]
+    if backend == "pallas":
+        from ..kernels.day_scan import day_scan
+    elif backend != "xla":
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"expected 'xla' or 'pallas'")
+
+    def fused(dyn, ix):
+        EXEC_STATS["traces"] += 1
+        outs = []
+        for stage, g in zip(stages, dyn["groups"]):
+            total, mbps, mw_p, pods, _ = stage(
+                g["vec"], g["theta"], dyn["rates"], dyn["gate"],
+                g["p_base"], g["p_wan"])
+            outs.append((total, mw_p, pods))
+        total = jnp.concatenate([o[0] for o in outs])
+        mw_p = jnp.concatenate([o[1] for o in outs])
+        pods = jnp.concatenate([o[2] for o in outs])
+        # (N, T, L) row gather: combo row base + level stride + segment
+        rows_ntl = ix["lvl_row"][:, None, :] + ix["seg_of"][:, :, None]
+        tables = {"step_mw": total[rows_ntl],
+                  "step_mw_p": mw_p[rows_ntl],
+                  "step_pods": pods[rows_ntl],
+                  "act_mult": dyn["act_mult"],
+                  "ambient": ix["ambient"], "active": ix["active"],
+                  "valid": ix["valid"], "charge": ix["charge"],
+                  "charge_p": ix["charge_p"], "const": dyn["const"]}
+        if backend == "pallas":
+            ys = day_scan(tables)
+        else:
+            ys = jax.vmap(_integrate_one)(tables)
+        summ = _summarize_jax(ys, ix["valid"], ix["active"], dyn["dt_s"])
+        summ["steady_mw"] = total[ix["steady_of"]]
+        from . import dse
+        obj = jnp.stack([summ["time_to_empty_h"], summ["peak_skin_c"],
+                         summ["pod_hours"]], axis=1)
+        summ["front_mask"] = dse.non_dominated_jax(obj, maximize=(0,))
+        return summ
+
+    return fused
+
+
+def _fused_pipeline(platforms, designs, schedules, policies, dt_s,
+                    n_users, standby_mw, battery, thermal, theta,
+                    results_dir, shutdown_c, backend) -> _Pipeline:
+    """Assemble (or fetch) the fused pipeline for one fully-valued query.
+
+    Two cache tiers back the interactive twin: `_PIPELINES` (FIFO,
+    value-keyed) returns the whole assembled pipeline — repeated
+    identical queries skip even the host-side index build — and
+    `_EXEC_CACHE` (signature-keyed) shares the compiled program across
+    queries that differ only in VALUES (policy thresholds, design knobs,
+    schedule ambients), so a what-if delta re-pushes small host arrays
+    and calls a warm executable: zero tracing, zero host table work."""
+    groups, skipped = _enumerate_combos(platforms, designs, schedules,
+                                        policies, battery, thermal)
+    combos = [cb for _, grp in groups for cb in grp]
+    if not combos:
+        raise ValueError("no runnable (platform, design) combos")
+    key = (tuple((plat, tuple((_design_key(cb.design), cb.schedule,
+                               cb.policy, cb.battery, cb.thermal)
+                              for cb in grp))
+                 for plat, grp in groups),
+           float(dt_s), float(n_users), float(standby_mw),
+           _theta_key(theta), str(results_dir), float(shutdown_c),
+           backend)
+    pipe = _PIPELINES.get(key)
+    if pipe is not None:
+        return pipe
+
+    T = max(cb.schedule.n_steps(dt_s) for cb in combos)
+    L = max(cb.policy.n_levels for cb in combos)
+    rr = offload.stream_rates(results_dir)
+    grp_dyn, theta_keys, row_counts = [], [], []
+    lvl_row, seg_of, steady_of = [], [], []
+    ambs, acts, vals, chgs, chgs_p, amults, consts = \
+        [], [], [], [], [], [], []
+    base = 0
+    for plat, grp in groups:
+        rows, slices = [], []
+        for cb in grp:
+            slices.append(_combo_rows(cb, rows))
+        sset = ScenarioSet.build(rows, primitives=plat.primitives)
+        scenarios._validate(plat, sset)
+        th = plat.theta_dict()
+        if theta:
+            th.update(theta)
+        p_base, p_wan = _puck_coeffs(plat)
+        grp_dyn.append({
+            "vec": {"placement": sset.placement,
+                    "compression": sset.compression,
+                    "fps_scale": sset.fps_scale,
+                    "mcs_tier": sset.mcs_tier,
+                    "upload_duty": sset.upload_duty,
+                    "brightness": sset.brightness},
+            "theta": {k: np.float32(v) for k, v in th.items()},
+            "p_base": np.float32(p_base), "p_wan": np.float32(p_wan)})
+        theta_keys.append(tuple(sorted(th)))
+        row_counts.append(len(rows))
+        for cb, (start, steady_i) in zip(grp, slices):
+            segs = cb.schedule.segments
+            n_seg, n_lvl = len(segs), cb.policy.n_levels
+            seg_steps = [max(1, round(s.hours * 3600.0 / dt_s))
+                         for s in segs]
+            seg_idx = np.repeat(np.arange(n_seg), seg_steps)
+            t = len(seg_idx)
+            so = np.full(T, n_seg - 1, np.int32)   # pad: last segment
+            so[:t] = seg_idx
+            seg_of.append(so)
+            lv = np.minimum(np.arange(L), n_lvl - 1)  # pad: last level
+            lvl_row.append((base + start + lv * n_seg).astype(np.int32))
+            steady_of.append(base + steady_i)
+            amb = np.full(T, segs[-1].ambient_c, np.float32)
+            amb[:t] = np.asarray([s.ambient_c for s in segs],
+                                 np.float32)[seg_idx]
+            ambs.append(amb)
+            act = np.zeros(T, np.float32)
+            act[:t] = np.asarray([s.active for s in segs],
+                                 np.float32)[seg_idx]
+            acts.append(act)
+            val = np.zeros(T, np.float32)
+            val[:t] = 1.0
+            vals.append(val)
+            cap_g = cb.battery.capacity_mwh
+            cap_p = (cb.puck.battery.capacity_mwh
+                     if cb.puck is not None else 0.0)
+            share_g = cap_g / (cap_g + cap_p) if cap_p else 1.0
+            seg_charge = np.asarray([s.charge_mw for s in segs],
+                                    np.float32)[seg_idx]
+            chg = np.zeros(T, np.float32)
+            chg_p = np.zeros(T, np.float32)
+            chg[:t] = seg_charge * np.float32(share_g)
+            chg_p[:t] = seg_charge * np.float32(1.0 - share_g)
+            chgs.append(chg)
+            chgs_p.append(chg_p)
+            amult = np.ones(L, np.float32)
+            for l in range(1, n_lvl):
+                amult[l:] = cb.policy.action(l).active_mult
+            amults.append(amult)
+            consts.append(_combo_const(cb, dt_s, standby_mw, shutdown_c))
+        base += len(rows)
+
+    dyn = {"groups": tuple(grp_dyn),
+           "rates": np.asarray(rr["tok_per_cap"], np.float32),
+           "gate": np.float32(n_users),
+           "act_mult": np.stack(amults),
+           "const": {k: np.asarray([c[k] for c in consts], np.float32)
+                     for k in consts[0]},
+           "dt_s": np.float32(dt_s)}
+    ix = {"lvl_row": jnp.asarray(np.stack(lvl_row)),
+          "seg_of": jnp.asarray(np.stack(seg_of)),
+          "steady_of": jnp.asarray(np.asarray(steady_of, np.int32)),
+          "ambient": jnp.asarray(np.stack(ambs)),
+          "active": jnp.asarray(np.stack(acts)),
+          "valid": jnp.asarray(np.stack(vals)),
+          "charge": jnp.asarray(np.stack(chgs)),
+          "charge_p": jnp.asarray(np.stack(chgs_p))}
+
+    plats = tuple(plat for plat, _ in groups)
+    sig = ("fused", plats, backend, tuple(theta_keys),
+           tuple(row_counts), len(combos), T, L,
+           len(rr["tok_per_cap"]))
+    fn = _cached_executable(
+        sig, lambda: _jit_pipeline(_build_fused(plats, backend)))
+    pipe = _Pipeline(combos, skipped, dyn, ix, fn)
+    _PIPELINES[key] = pipe
+    while len(_PIPELINES) > _PIPELINES_MAX:
+        del _PIPELINES[next(iter(_PIPELINES))]
+    return pipe
+
+
 def day_grid(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
              schedules=DEFAULT_SCHEDULES, policies=DEFAULT_POLICIES,
              dt_s: float = DEFAULT_DT_S, n_users: float = 1e6,
              standby_mw: float = DEFAULT_STANDBY_MW, battery=None,
              thermal: ThermalSpec | None = None, theta=None,
              results_dir=None,
-             shutdown_c: float = DEFAULT_SHUTDOWN_C) -> DayReport:
+             shutdown_c: float = DEFAULT_SHUTDOWN_C,
+             engine: str = "legacy", backend: str = "xla",
+             with_front: bool = False) -> DayReport:
     """Simulate every (platform x design x schedule x policy) combo
     through ONE vmapped `jax.lax.scan`.
 
@@ -1220,7 +1616,43 @@ def day_grid(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
     (recorded in `report.skipped`), mirroring the steady-state engine's
     placement validation.  `battery` may be a single BatterySpec or a
     {platform_name: BatterySpec} map; defaults come from `BATTERIES`.
-    """
+
+    `engine="legacy"` (default here) compiles host-cached numpy tables
+    and runs the standalone jitted scan; `engine="fused"` runs the whole
+    chain — scenario tables, scan, objectives, front — as one
+    device-resident jitted program served from the compiled-executable
+    cache (`dse.day_pareto` defaults to it).  `backend` selects the
+    fused scan implementation ("xla" `lax.scan` or the "pallas"
+    `kernels.day_scan` step kernel); `with_front=True` fills
+    `front_mask` (on the device, via `dse.non_dominated_jax`, when
+    fused).  Both engines produce bit-identical survival flags and
+    front masks — parity-tested in tests/test_twin.py."""
+    if engine == "fused":
+        pipe = _fused_pipeline(platforms, designs, schedules, policies,
+                               dt_s, n_users, standby_mw, battery,
+                               thermal, theta, results_dir, shutdown_c,
+                               backend)
+        dyn = jax.tree_util.tree_map(jnp.asarray, pipe.dyn)
+        summ = dict(pipe.fn(dyn, pipe.ix))
+        jax.block_until_ready(summ["shutdown"])
+        front = np.asarray(summ.pop("front_mask"))
+        steady = np.asarray(summ.pop("steady_mw"), np.float64)
+        host = {k: (np.asarray(v) if v.dtype == bool
+                    else np.asarray(v, np.float64))
+                for k, v in summ.items()}
+        rep = DayReport(
+            combos=[cb.label() for cb in pipe.combos],
+            steady_mw=steady, n_users=n_users, dt_s=dt_s,
+            skipped=pipe.skipped,
+            battery_fade=np.asarray([cb.battery.fade
+                                     for cb in pipe.combos]),
+            **host)
+        if with_front:
+            rep.front_mask = front
+        return rep
+    if engine != "legacy":
+        raise ValueError(f"unknown engine {engine!r}; "
+                         f"expected 'fused' or 'legacy'")
     combos, skipped = build_combos(platforms, designs, schedules,
                                    policies, n_users, battery, thermal,
                                    theta, results_dir)
@@ -1228,12 +1660,17 @@ def day_grid(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
     ys = jax.block_until_ready(_integrate_batch(tables))
     summ = _summarize(ys, {"valid": np.asarray(tables["valid"]),
                            "active": np.asarray(tables["active"])}, dt_s)
-    return DayReport(
+    rep = DayReport(
         combos=[cb.label() for cb in combos],
         steady_mw=np.asarray([cb.steady_mw for cb in combos]),
         n_users=n_users, dt_s=dt_s, skipped=skipped,
         battery_fade=np.asarray([cb.battery.fade for cb in combos]),
         **summ)
+    if with_front:
+        from . import dse
+        rep.front_mask = dse.non_dominated(rep.objectives(),
+                                           maximize=(0,))
+    return rep
 
 
 def simulate(platform, design: dict, schedule, policy="none",

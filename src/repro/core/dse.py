@@ -196,6 +196,42 @@ def non_dominated(points, maximize: tuple = (), block: int = 2048
     return mask
 
 
+def non_dominated_jax(points, maximize: tuple = ()):
+    """Jax-native non-dominated mask — `non_dominated` for traced arrays.
+
+    Jit-composable dominance filter over an (N, K) device matrix with
+    EXACTLY the numpy filters' tie semantics (q dominates p iff q <= p
+    everywhere and q < p somewhere; exact duplicates are all kept), so a
+    fused day pipeline extracts the front without leaving the device.
+    Sort-pruned like `non_dominated`: rows are lexsorted (column 0
+    primary — any dominator sorts strictly earlier), and each row is
+    tested only against its strict predecessors, which cuts the
+    candidate set of the dense O(N^2 K) comparison in half and makes
+    the earlier/later mask the exact dominance direction.  Parity with
+    `_non_dominated_dense` is asserted in tests on random grids with
+    engineered ties and duplicates."""
+    pts = jnp.asarray(points)
+    if pts.ndim != 2:
+        raise ValueError(f"expected (N, K) objectives, got {pts.shape}")
+    n, k = pts.shape
+    if n == 0:
+        return jnp.zeros(0, bool)
+    sign = np.ones(k, pts.dtype if pts.dtype != bool else np.float32)
+    for c in maximize:
+        sign[c] = -1.0
+    pts = pts * sign
+    # jnp.lexsort: LAST key is primary, so feed columns k-1 .. 0 —
+    # the same ascending-by-col-0-then-1-... order as np.lexsort(pts.T[::-1])
+    order = jnp.lexsort([pts[:, c] for c in range(k - 1, -1, -1)])
+    spts = pts[order]
+    le = (spts[:, None, :] <= spts[None, :, :]).all(-1)  # le[j,i]: q_j<=p_i
+    lt = (spts[:, None, :] < spts[None, :, :]).any(-1)
+    idx = jnp.arange(n)
+    earlier = idx[:, None] < idx[None, :]   # j strictly before i in sort
+    dominated = (le & lt & earlier).any(axis=0)
+    return jnp.zeros(n, bool).at[order].set(~dominated)
+
+
 def pareto(compressions=(4, 10, 20, 40), platform=None):
     """Placement x compression -> non-dominated (power, bandwidth) points.
 
@@ -405,22 +441,36 @@ def co_optimize(rep: JointReport, pod_budget: float | None = None,
 # ---------------------------------------------------------------------------
 
 def day_pareto(platforms=None, designs=None, schedules=None, policies=None,
-               **kw):
+               engine: str = "fused", **kw):
     """Day-level Pareto front over (time-to-empty h, peak skin °C,
     backend pod-hours).
 
     Every (platform x design x schedule x policy) combo integrates
     through daysim's ONE vmapped `jax.lax.scan` (battery SoC + 2-node
-    thermal RC + throttle hysteresis), and the 3-objective non-dominated
-    set is extracted with the shared blockwise `non_dominated` filter
-    (time-to-empty is maximized).  Returns the `daysim.DayReport` with
-    `front_mask` filled; `report.front_rows()` carries $ / kgCO2 via the
-    offload cost model."""
+    thermal RC + throttle hysteresis) and the 3-objective non-dominated
+    set is extracted (time-to-empty maximized).  With the default
+    `engine="fused"` the whole chain — scenario tables, day scan,
+    objectives, dominance filter — runs as one device-resident jitted
+    program (`daysim.day_grid(engine="fused")` + `non_dominated_jax`),
+    served from daysim's compiled-executable cache so repeat queries of
+    the same grid shape do zero tracing and zero host table work.
+    `engine="legacy"` is the pre-fusion oracle path: host-cached numpy
+    tables, the standalone scan, and the blockwise numpy
+    `non_dominated` — kept bit-compatible (front mask and survival
+    flags) and parity-tested against the fused program.  Returns the
+    `daysim.DayReport` with `front_mask` filled; `report.front_rows()`
+    carries $ / kgCO2 via the offload cost model."""
     from . import daysim
     args = {k: v for k, v in (("platforms", platforms),
                               ("designs", designs),
                               ("schedules", schedules),
                               ("policies", policies)) if v is not None}
+    if engine == "fused":
+        return daysim.day_grid(**args, engine="fused", with_front=True,
+                               **kw)
+    if engine != "legacy":
+        raise ValueError(f"unknown engine {engine!r}; "
+                         f"expected 'fused' or 'legacy'")
     rep = daysim.day_grid(**args, **kw)
     rep.front_mask = non_dominated(rep.objectives(), maximize=(0,))
     return rep

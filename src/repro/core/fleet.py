@@ -12,7 +12,10 @@ user's day through ONE `jax.lax.scan`:
 
   * per-archetype power/pod tables are compiled once through the
     existing batched steady-state engine (`daysim._compile_platform`,
-    at most one `scenarios.evaluate` per platform via the row cache);
+    which since the fused-pipeline refactor evaluates rows on-device
+    through the cached `scenarios.batched_fn` row stage — one jitted
+    batched evaluate per platform, shared with `dse.day_pareto`'s fused
+    program, with the host FIFO row cache deduplicating across calls);
   * the scan state is the whole population — each step gathers the
     archetype's (level, segment) tables per user, applies the user's
     climate offset and battery-age derating, and advances the SAME

@@ -19,6 +19,11 @@ is scanned ONCE (module-level cache per directory), so the timed joint /
 fleet hot paths never touch the filesystem per call.  Streams may list
 several candidate serving archs (STREAM_CANDIDATES); the table picks the
 min-pods candidate, preferring artifact-backed capacities over fallbacks.
+
+`pods_breakdown` is the numpy host oracle; `stream_rates` +
+`pods_streams_device` factor the same math into a cached static-rate
+vector and a pure jnp function, so daysim's fused pipeline computes
+per-stream pods inside its compiled program.
 """
 from __future__ import annotations
 
@@ -375,6 +380,56 @@ def pods_breakdown(sset: ScenarioSet, n_users: float = 1e6,
             active[s] = ones > 0.0
     pods = np.sum(np.stack(list(by.values())), axis=0)
     return PodsBreakdown(pods, by, archs, cells, sources, active)
+
+
+def stream_rates(results_dir=None) -> dict:
+    """Host-resolved per-stream serving rates for the device pods path.
+
+    One CapacityTable pass (cached per directory) collapses each
+    stream's candidate cells to a single tokens-per-capacity rate, in
+    `STREAM_SERVICE` order — the only part of fleet sizing that needs
+    the filesystem.  Returns {"streams": tuple, "tok_per_cap": (S,)
+    float64, "archs"/"cells"/"sources": dicts}; feed `tok_per_cap` to
+    `pods_streams_device` as a traced input so a jitted pipeline can
+    swap capacity tables without retracing."""
+    table = capacity_table(results_dir)
+    streams, rates, archs, cells, sources = [], [], {}, {}, {}
+    for s, (arch0, cell0, tok) in STREAM_SERVICE.items():
+        arch, cell, cap, source = table.resolve(
+            STREAM_CANDIDATES.get(s, ((arch0, cell0),)))
+        streams.append(s)
+        rates.append(tok / cap)
+        archs[s], cells[s], sources[s] = arch, cell, source
+    return {"streams": tuple(streams),
+            "tok_per_cap": np.asarray(rates, np.float64),
+            "archs": archs, "cells": cells, "sources": sources}
+
+
+def pods_streams_device(asr_on, fps_scale, upload_duty, tok_per_cap,
+                        gate_scale):
+    """Jit-composable per-stream backend pods (the device table stage).
+
+    Mirrors `pods_breakdown`'s per-row math on jnp arrays so it can be
+    inlined in a larger jitted program: `gate_scale` is the
+    `n_users * duty` prefactor (traced scalar), `tok_per_cap` the (S,)
+    rates from `stream_rates` in `STREAM_SERVICE` order, `asr_on` /
+    `fps_scale` / `upload_duty` per-row (R,) knob columns.  Returns
+    ((R,) total pods, (R, S) per-stream pods).  The audio stream is
+    masked where ASR runs on-device and RGB->VLM ingest scales down
+    with the frame-rate knob, exactly as in the numpy oracle."""
+    import jax.numpy as jnp
+    gate = gate_scale * upload_duty
+    fps = jnp.maximum(fps_scale, 1.0)
+    cols = []
+    for si, s in enumerate(STREAM_SERVICE):
+        x = gate * tok_per_cap[si]
+        if s == "rgb":
+            x = x / fps
+        elif s == "audio":
+            x = x * (1.0 - asr_on)
+        cols.append(x)
+    pods_s = jnp.stack(cols, axis=-1)
+    return jnp.sum(pods_s, axis=-1), pods_s
 
 
 def pods_relaxed(vec: dict, n_users: float = 1e6, duty: float = 0.35,

@@ -17,6 +17,12 @@ instead of ~768 Python evaluations with `float()` host round-trips.
 
 Everything stays differentiable in theta, so calibration and sensitivity
 run `jax.grad` straight through the batched evaluator.
+
+`evaluate`/`evaluate_batched` are the jitted public entries;
+`batched_fn(platform)` exposes the same vmapped kernel UNjitted so
+larger programs (daysim's fused day-Pareto pipeline, its row stage)
+can inline it into their own traced body instead of paying a separate
+dispatch per call.
 """
 from __future__ import annotations
 
@@ -390,8 +396,21 @@ def _npu(p, f, th):
 # compiled batch engine (one per platform, cached)
 # ---------------------------------------------------------------------------
 
+ENGINE_AXES = {"placement": 0, "compression": 0, "fps_scale": 0,
+               "mcs_tier": 0, "upload_duty": 0, "brightness": 0}
+
+
 @functools.lru_cache(maxsize=32)
-def _engine(platform: PlatformSpec):
+def batched_fn(platform: PlatformSpec):
+    """UNJITTED vmapped engine core for one platform.
+
+    The returned `fn(vec, th) -> {"loads", "pd_loss", "total", "mbps"}`
+    is jit-composable: callers may inline it inside a larger jitted
+    program (the daysim fused day pipeline traces it between the row
+    gather and the day scan so tables never leave the device), or wrap
+    it in their own `jax.jit` — `_engine` below is exactly that wrapper.
+    Both paths trace the SAME closure, so row values agree bit for bit
+    up to XLA fusion context."""
     comps = platform.components
     rails = platform.rail_dict()
     rail_eff = np.array([rails[c.rail] for c in comps], np.float32)
@@ -405,9 +424,24 @@ def _engine(platform: PlatformSpec):
         return {"loads": loads, "pd_loss": jnp.sum(delivered - loads),
                 "total": jnp.sum(delivered), "mbps": f.mbps_eff}
 
-    axes = {"placement": 0, "compression": 0, "fps_scale": 0,
-            "mcs_tier": 0, "upload_duty": 0, "brightness": 0}
-    return jax.jit(jax.vmap(single, in_axes=(axes, None)))
+    return jax.vmap(single, in_axes=(ENGINE_AXES, None))
+
+
+@functools.lru_cache(maxsize=32)
+def _engine(platform: PlatformSpec):
+    return jax.jit(batched_fn(platform))
+
+
+def evaluate_batched(platform: PlatformSpec, vec: dict, theta=None) -> dict:
+    """Jit-composable batch evaluation on raw knob vectors.
+
+    Unlike `evaluate` (which round-trips through ScenarioSet/BatchReport
+    and is an un-composable jit boundary), this takes the knob-vector
+    pytree directly (see `ScenarioSet.vec`) and returns device arrays
+    {"loads": (N, C), "pd_loss": (N,), "total": (N,), "mbps": (N,)}.
+    Safe to call under an enclosing `jax.jit` trace with traced `vec` /
+    `theta` leaves."""
+    return batched_fn(platform)(vec, _theta(platform, theta))
 
 
 def _single_relaxed(platform: PlatformSpec, vec: dict, th: dict) -> dict:

@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from . import day_scan as _day
 from . import flash_attention as _fa
 from . import ssd_scan as _ssd
 
@@ -34,3 +35,9 @@ def flash_attention(q, k, v, *, causal=True, window=None, block_q=512,
 def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=None):
     interp = (not _on_tpu()) if interpret is None else interpret
     return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def day_scan(tables, *, chunk=128, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _day.day_scan(tables, chunk=chunk, interpret=interp)

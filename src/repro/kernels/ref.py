@@ -17,3 +17,10 @@ def ssd_scan_ref(x, dt, A, B, C):
     """Sequential SSD recurrence (the 'linear form')."""
     y, _ = _ssd.ssd_reference(x, dt, A, B, C)
     return y
+
+
+def day_scan_ref(tables):
+    """Vmapped `daysim._integrate_one` day scan, restricted to the
+    fused kernel's output set."""
+    from .day_scan import day_scan_ref as _ref
+    return _ref(tables)

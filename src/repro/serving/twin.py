@@ -1,0 +1,137 @@
+"""Interactive design twin: a what-if query engine over the fused
+day-Pareto pipeline.
+
+The fused pipeline (`dse.day_pareto(engine="fused")`) compiles the whole
+scenario-tables → day-scan → objectives → non-dominated-front chain into
+one device program keyed by grid SHAPE, not grid values.  `DesignTwin`
+holds a base grid (platforms x designs x schedules x policies plus
+dt_s / n_users / backend), warms that program once at construction, and
+then answers value-level what-ifs — swap a policy threshold, a design
+knob, a schedule — by re-pushing the small host arrays through the
+already-compiled executable: zero retraces, milliseconds per query
+(vs seconds for the pre-fusion host path).
+
+`query(**grid_overrides)` runs one full grid and returns the DayReport
+with the front attached; `what_if(design=..., policy=...)` is the
+single-combo ergonomic wrapper (singular axes become 1-tuples).
+`submit`/`run` give the twin the same admission-queue shape as
+`serving.engine.Server` so a UI or batch driver can enqueue what-ifs
+and drain them in slot-sized batches.  `TwinStats` tracks query count,
+latency, and the executable-cache hit/miss/trace deltas — the
+zero-retrace-when-warm contract is pinned by tests/test_twin.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+from ..core import daysim, dse
+
+
+@dataclass
+class WhatIf:
+    """One queued what-if: override kwargs in, report + latency out."""
+    qid: int
+    overrides: dict
+    report: object = None
+    ms: float = 0.0
+
+
+@dataclass
+class TwinStats:
+    queries: int = 0
+    exec_hits: int = 0          # warm executable reuses
+    exec_misses: int = 0        # compiles triggered by our queries
+    traces: int = 0             # actual retraces (0 when warm)
+    last_ms: float = 0.0
+    total_ms: float = 0.0
+
+    @property
+    def mean_ms(self) -> float:
+        return self.total_ms / self.queries if self.queries else 0.0
+
+
+class DesignTwin:
+    """Warm, device-resident model of the design space; ask it questions.
+
+    Base-grid axes default to the daysim defaults; any constructor
+    kwarg accepted by `dse.day_pareto` (battery, thermal, theta,
+    standby_mw, ...) rides along into every query.  `backend` selects
+    the day integrator ("xla" scan or the "pallas" fused-step kernel).
+    """
+
+    _SINGULAR = {"platform": "platforms", "design": "designs",
+                 "schedule": "schedules", "policy": "policies"}
+
+    def __init__(self, platforms=None, designs=None, schedules=None,
+                 policies=None, *, dt_s: float = daysim.DEFAULT_DT_S,
+                 n_users: float = 1e6, backend: str = "xla",
+                 slots: int = 4, warm: bool = True, **grid_kw):
+        self.base = {k: v for k, v in (("platforms", platforms),
+                                       ("designs", designs),
+                                       ("schedules", schedules),
+                                       ("policies", policies))
+                     if v is not None}
+        self.base.update(dt_s=dt_s, n_users=n_users, backend=backend,
+                         **grid_kw)
+        self.slots = slots
+        self.queue: list[WhatIf] = []
+        self.stats = TwinStats()
+        self._qid = 0
+        if warm:
+            self.query()
+
+    def query(self, **overrides) -> daysim.DayReport:
+        """Run one full grid through the fused pipeline and time it.
+
+        Overrides replace base-grid entries wholesale (axes are tuples,
+        scalars are scalars).  Executable-cache deltas from the call are
+        folded into `self.stats`."""
+        args = dict(self.base)
+        args.update(overrides)
+        before = dict(daysim.EXEC_STATS)
+        t0 = time.perf_counter()
+        rep = dse.day_pareto(engine="fused", **args)
+        ms = (time.perf_counter() - t0) * 1e3
+        st = self.stats
+        st.queries += 1
+        st.exec_hits += daysim.EXEC_STATS["hits"] - before["hits"]
+        st.exec_misses += daysim.EXEC_STATS["misses"] - before["misses"]
+        st.traces += daysim.EXEC_STATS["traces"] - before["traces"]
+        st.last_ms = ms
+        st.total_ms += ms
+        return rep
+
+    def what_if(self, **overrides) -> daysim.DayReport:
+        """`query` with ergonomic singular axes: `what_if(policy=p)`
+        pins that axis to the single value (a 1-tuple); plural/scalar
+        kwargs pass through unchanged."""
+        args = {}
+        for k, v in overrides.items():
+            plural = self._SINGULAR.get(k)
+            if plural is not None:
+                args[plural] = (v,)
+            else:
+                args[k] = v
+        return self.query(**args)
+
+    # -- admission queue (the serving.engine.Server shape) ----------------
+    def submit(self, **overrides) -> int:
+        """Enqueue a what-if; returns its query id."""
+        self._qid += 1
+        self.queue.append(WhatIf(self._qid, overrides))
+        return self._qid
+
+    def run(self, max_steps: int = 64) -> list[WhatIf]:
+        """Drain the queue in slot-sized batches (at most `max_steps`
+        queries); each finished WhatIf carries its report + latency."""
+        finished: list[WhatIf] = []
+        while self.queue and max_steps > 0:
+            batch = self.queue[: min(self.slots, max_steps)]
+            self.queue = self.queue[len(batch):]
+            for wi in batch:
+                wi.report = self.what_if(**wi.overrides)
+                wi.ms = self.stats.last_ms
+                finished.append(wi)
+                max_steps -= 1
+        return finished

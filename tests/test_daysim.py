@@ -340,3 +340,31 @@ def test_steady_state_winner_loses_the_day(day):
         if found:
             break
     assert found
+
+
+def test_row_cache_fifo_eviction(monkeypatch):
+    """The host row cache evicts oldest-first past _ROW_CACHE_MAX but
+    never wholesale-clears: a rebuild straddling the limit keeps its hit
+    rate on the rows it still reuses, and the cache stays bounded."""
+    daysim.clear_row_cache()
+    grid = dict(platforms=("rayban_cam",),
+                designs=({"name": "d0", "on_device": ()},
+                         {"name": "d1", "on_device": (),
+                          "compression": 20.0}),
+                schedules=("commuter",), policies=("none",))
+    daysim.build_combos(**grid)
+    n_rows = len(daysim._ROW_CACHE)
+    assert n_rows > 4
+    monkeypatch.setattr(daysim, "_ROW_CACHE_MAX", n_rows - 2)
+
+    daysim.CACHE_STATS.update(hits=0, misses=0)
+    daysim.build_combos(**grid)                     # warm pass, then trim
+    assert len(daysim._ROW_CACHE) == n_rows - 2     # bounded FIFO
+    assert daysim.CACHE_STATS["misses"] == 0        # served before evict
+
+    daysim.CACHE_STATS.update(hits=0, misses=0)
+    daysim.build_combos(**grid)                     # straddles the limit
+    assert len(daysim._ROW_CACHE) == n_rows - 2
+    assert daysim.CACHE_STATS["misses"] == 2        # only evictees refill
+    assert daysim.CACHE_STATS["hits"] > 0           # partial reuse kept
+    daysim.clear_row_cache()

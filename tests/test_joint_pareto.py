@@ -279,4 +279,5 @@ def test_bench_smoke_mode_runs_clean():
     assert "daysim_smoke" in res.stdout
     assert "grad_smoke" in res.stdout
     assert "fleet_smoke" in res.stdout
+    assert "twin_smoke" in res.stdout
     assert "ERROR" not in res.stdout

@@ -68,6 +68,53 @@ def test_flash_attention_vs_model_path():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
 
 
+@pytest.fixture(scope="module")
+def day_tables():
+    """Batched day tables for a small grid that exercises throttling
+    (thermal governor), puck split (two-node SKU) and the offload-only
+    short schedule — the paths the fused day kernel must reproduce."""
+    from repro.core import daysim
+    combos, _ = daysim.build_combos(
+        platforms=("aria2_display", "aria2_puck_split"),
+        designs=({"name": "hot", "on_device": ("slam", "asr"),
+                  "compression": 10.0},
+                 {"name": "lean", "on_device": ()}),
+        schedules=("commuter",),
+        policies=("none", "thermal_governor", "battery_saver"))
+    assert combos
+    return daysim.batch_tables(combos, dt_s=60.0)
+
+
+@pytest.mark.parametrize("chunk", [32, 128])
+def test_day_scan_parity(day_tables, chunk):
+    """Pallas fused step (interpret) vs the vmapped lax.scan oracle:
+    SoC / pods / throttle level bit-exact, thermal traces to f32 ulp."""
+    from repro.kernels.day_scan import day_scan
+    out = day_scan(day_tables, chunk=chunk, interpret=True)
+    want = ref.day_scan_ref(day_tables)
+    # discrete outputs (throttle level, shutdown latch) must agree exactly
+    assert np.array_equal(np.asarray(out["level"]),
+                          np.asarray(want["level"]))
+    np.testing.assert_array_equal(np.asarray(out["shut"]),
+                                  np.asarray(want["shut"]))
+    # continuous traces to f32 ulp (fused-multiply rounding differs)
+    for k in ("soc", "soc_p", "pods", "t_skin", "t_skin_p",
+              "drain_mw", "drain_p_mw"):
+        np.testing.assert_allclose(np.asarray(out[k]),
+                                   np.asarray(want[k]),
+                                   rtol=1e-6, atol=1e-4, err_msg=k)
+
+
+def test_day_scan_ops_dispatch(day_tables):
+    """The jit'd ops wrapper returns the same pytree as the direct call."""
+    out = ops.day_scan(day_tables)
+    want = ref.day_scan_ref(day_tables)
+    assert set(out) == set(want)
+    np.testing.assert_allclose(np.asarray(out["soc"]),
+                               np.asarray(want["soc"]),
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_kernel_grad_smoke():
     """Kernels are used in serving; ensure at least VJP-able via ref path
     interchange (oracle equivalence implies the swap is training-safe)."""

@@ -1,0 +1,192 @@
+"""The fused day-Pareto pipeline and its interactive twin.
+
+Pins the refactor's three contracts: (1) the fused device program is
+bit-compatible with the legacy host path on the quantities that drive
+decisions (front mask, survival flags); (2) warm same-shaped queries
+never retrace (`daysim.EXEC_STATS["traces"]` stays put); (3) the
+jax-native dominance filter matches the numpy oracles' tie semantics
+exactly."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import daysim, dse
+from repro.serving.twin import DesignTwin
+
+DT = 60.0       # coarse steps keep the module fast; parity is per-step
+
+
+@pytest.fixture(scope="module")
+def fused_day():
+    return dse.day_pareto(dt_s=DT)
+
+
+@pytest.fixture(scope="module")
+def legacy_day():
+    return dse.day_pareto(dt_s=DT, engine="legacy")
+
+
+# ---------------------------------------------------------------------------
+# fused vs legacy parity
+# ---------------------------------------------------------------------------
+
+def test_front_mask_bit_identical(fused_day, legacy_day):
+    assert np.array_equal(fused_day.front_mask, legacy_day.front_mask)
+    assert fused_day.front_mask.sum() >= 1
+
+
+def test_survival_flags_bit_identical(fused_day, legacy_day):
+    assert np.array_equal(fused_day.survives(), legacy_day.survives())
+    assert np.array_equal(fused_day.shutdown, legacy_day.shutdown)
+
+
+def test_combo_labels_and_objectives_match(fused_day, legacy_day):
+    assert fused_day.combos == legacy_day.combos
+    assert fused_day.skipped == legacy_day.skipped
+    # exact f32 equality on trace extrema; the f64-host vs f32-device
+    # summation difference only touches accumulated sums (~1e-7 rel)
+    for k in ("end_soc", "peak_skin_c", "steady_mw", "day_hours"):
+        np.testing.assert_array_equal(getattr(fused_day, k),
+                                      getattr(legacy_day, k), err_msg=k)
+    for k in ("time_to_empty_h", "pod_hours", "energy_mwh",
+              "throttled_h"):
+        np.testing.assert_allclose(getattr(fused_day, k),
+                                   getattr(legacy_day, k),
+                                   rtol=1e-5, atol=1e-5, err_msg=k)
+
+
+def test_pallas_backend_matches_xla(fused_day):
+    rep = dse.day_pareto(dt_s=DT, backend="pallas")
+    assert np.array_equal(rep.front_mask, fused_day.front_mask)
+    assert np.array_equal(rep.survives(), fused_day.survives())
+
+
+# ---------------------------------------------------------------------------
+# compile stability / the twin
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def twin(fused_day):
+    return DesignTwin(dt_s=DT)
+
+
+def test_warm_queries_zero_retrace(twin):
+    """Same-shaped queries after warm-up reuse the compiled executable:
+    the trace counter (bumped only inside a trace) must not move."""
+    twin.query()                                    # ensure warm
+    before = dict(daysim.EXEC_STATS)
+    for _ in range(3):
+        twin.query()
+    pol = dataclasses.replace(daysim.get_policy("thermal_governor"),
+                              name="hot", temp_trip_c=41.0)
+    twin.query(policies=("none", pol, "battery_saver"))   # value change
+    after = daysim.EXEC_STATS
+    assert after["traces"] == before["traces"]
+    # identical repeats short-circuit at the pipeline cache; the value
+    # change reassembles host arrays but HITS the warm executable
+    assert after["hits"] > before["hits"]
+
+
+def test_warm_query_is_fast(twin):
+    twin.query()
+    assert twin.stats.last_ms < 1000.0      # ~20 ms typical; CI slack
+
+
+def test_what_if_singular_axes(twin):
+    rep = twin.what_if(platform="aria2_display",
+                       policy="thermal_governor")
+    assert {cb["platform"] for cb in rep.combos} == {"aria2_display"}
+    assert {cb["policy"] for cb in rep.combos} == {"thermal_governor"}
+    assert rep.front_mask is not None
+
+
+def test_twin_queue_slots(twin):
+    qids = [twin.submit(policy=dataclasses.replace(
+        daysim.get_policy("thermal_governor"), name=f"g{trip}",
+        temp_trip_c=trip)) for trip in (39.0, 40.0, 41.0)]
+    assert len(twin.queue) == 3
+    first = twin.run(max_steps=2)           # capped below slot size
+    assert [w.qid for w in first] == qids[:2]
+    assert len(twin.queue) == 1             # un-run what-if stays queued
+    rest = twin.run()
+    assert [w.qid for w in rest] == qids[2:] and not twin.queue
+    for w in first + rest:
+        assert w.report is not None and w.ms > 0.0
+
+
+def test_pipeline_cache_value_keyed():
+    """Identical grids share one _Pipeline entry; the FIFO stays bounded."""
+    n0 = len(daysim._PIPELINES)
+    dse.day_pareto(dt_s=DT)
+    dse.day_pareto(dt_s=DT)
+    assert len(daysim._PIPELINES) <= max(n0 + 1, daysim._PIPELINES_MAX)
+
+
+# ---------------------------------------------------------------------------
+# non_dominated_jax vs the numpy oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,maximize,seed", [
+    (64, 2, (), 0),
+    (128, 3, (0,), 1),
+    (257, 3, (0, 2), 2),
+    (32, 4, (1,), 3),
+])
+def test_non_dominated_jax_random(n, k, maximize, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, k)).astype(np.float32)
+    # quantize to force plenty of exact ties along every column
+    pts = np.round(pts * 4) / 4
+    want = dse.non_dominated(pts, maximize=maximize)
+    got = np.asarray(dse.non_dominated_jax(pts, maximize=maximize))
+    assert np.array_equal(got, want)
+
+
+def test_non_dominated_jax_duplicates_kept():
+    """Exact duplicates of a front point are all kept (no self-domination),
+    matching `_non_dominated_dense`."""
+    pts = np.array([[0.0, 1.0], [0.0, 1.0], [1.0, 0.0], [1.0, 1.0],
+                    [0.0, 1.0]], np.float32)
+    want = dse._non_dominated_dense(pts)
+    got = np.asarray(dse.non_dominated_jax(pts))
+    assert np.array_equal(got, want)
+    assert got.tolist() == [True, True, True, False, True]
+
+
+def test_non_dominated_jax_jit_composable():
+    import jax
+    import jax.numpy as jnp
+    pts = np.random.default_rng(7).normal(size=(50, 3)).astype(np.float32)
+    f = jax.jit(lambda p: dse.non_dominated_jax(p, maximize=(0,)))
+    assert np.array_equal(np.asarray(f(jnp.asarray(pts))),
+                          dse.non_dominated(pts, maximize=(0,)))
+
+
+# ---------------------------------------------------------------------------
+# error paths
+# ---------------------------------------------------------------------------
+
+def test_front_indices_error_names_day_pareto():
+    rep = daysim.day_grid(platforms=("rayban_cam",),
+                          designs=({"name": "d", "on_device": ()},),
+                          schedules=("commuter",), policies=("none",),
+                          dt_s=DT)
+    with pytest.raises(ValueError, match=r"dse\.day_pareto"):
+        rep.front_indices()
+    with pytest.raises(ValueError, match=r"dse\.day_pareto"):
+        rep.front_rows()
+
+
+def test_survives_day_rejects_report_plus_kwargs(fused_day):
+    with pytest.raises(TypeError, match="one or the other"):
+        dse.survives_day(fused_day, dt_s=DT)
+
+
+def test_unknown_engine_and_backend_raise():
+    with pytest.raises(ValueError, match="unknown engine"):
+        dse.day_pareto(engine="magic", dt_s=DT)
+    with pytest.raises(ValueError, match="unknown engine"):
+        daysim.day_grid(engine="magic", dt_s=DT)
+    with pytest.raises(ValueError, match="unknown backend"):
+        dse.day_pareto(backend="cuda", dt_s=DT)
