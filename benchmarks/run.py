@@ -14,7 +14,10 @@ paths themselves are exercised inside the tier-1 time budget.
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
 import json
+import math
 import sys
 import time
 from pathlib import Path
@@ -49,6 +52,14 @@ def _load_baselines() -> dict:
     return out
 
 
+def _as_finite(value) -> float | None:
+    try:
+        v = float(value)
+    except (TypeError, ValueError):
+        return None
+    return v if math.isfinite(v) else None
+
+
 def _check_regressions(baselines: dict) -> list[str]:
     msgs = []
     for fname, gates in GATED_METRICS.items():
@@ -58,11 +69,29 @@ def _check_regressions(baselines: dict) -> list[str]:
         fresh = json.loads(f.read_text())
         rolled_back = False
         for key, sense in gates:
-            base = baselines.get(fname, {}).get(key)
-            if base is None or float(base) <= 0:
+            # a gated metric that vanishes or goes NaN must fail loudly:
+            # a silent skip here is indistinguishable from a pass
+            if key not in fresh:
+                msgs.append(f"{fname}: gated metric {key!r} missing "
+                            "from fresh results — the bench stopped "
+                            "emitting it")
                 continue
-            new = fresh.get(key)
+            new = _as_finite(fresh[key])
             if new is None:
+                msgs.append(f"{fname}: gated metric {key!r} is "
+                            f"non-finite or non-numeric "
+                            f"({fresh[key]!r})")
+                continue
+            raw_base = baselines.get(fname, {}).get(key)
+            if raw_base is None:
+                continue        # first run: nothing committed to gate on
+            base = _as_finite(raw_base)
+            if base is None:
+                msgs.append(f"{fname}: committed baseline for {key!r} "
+                            f"is non-finite or non-numeric "
+                            f"({raw_base!r}) — refresh the baseline")
+                continue
+            if base <= 0:
                 continue
             ratio = float(new) / float(base)
             regressed = (ratio < 1.0 - REGRESSION_TOLERANCE
@@ -133,6 +162,22 @@ def main(argv=None) -> int:
             derived = f"ERROR:{type(e).__name__}:{e}"
             failed = True
         print(f"{name},{us:.0f},{derived}")
+    if args.smoke:
+        # static-analysis gate: new reprolint findings (not suppressed,
+        # not in the committed analysis_baseline.json) fail the smoke run
+        t0 = time.perf_counter()
+        from repro.analysis.__main__ import main as lint_main
+        root = Path(__file__).resolve().parent.parent
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            rc = lint_main([str(root / "src" / "repro"), "--format=json",
+                            f"--baseline={root / 'analysis_baseline.json'}"])
+        (OUT / "reprolint.json").write_text(buf.getvalue())
+        us = (time.perf_counter() - t0) * 1e6
+        derived = ("clean" if rc == 0 else
+                   "NEW FINDINGS (see results/benchmarks/reprolint.json)")
+        print(f"reprolint,{us:.0f},{derived}")
+        failed = failed or rc != 0
     if not args.smoke:
         regressions = _check_regressions(baselines)
         for msg in regressions:

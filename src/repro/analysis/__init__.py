@@ -1,0 +1,47 @@
+"""repro.analysis — reprolint: contract-aware static analysis.
+
+An AST-based lint pass (stdlib only) that mechanically enforces the
+JAX invariants this codebase's correctness and power numbers rest on.
+A lightweight intra-package call graph tells rules which functions are
+reachable from jitted/scanned bodies, so "no host sync" is checked
+where it matters and nowhere else.
+
+Rules
+-----
+==== =====================================================================
+R001 retrace hazards: jit/vmap built in loops or per call, Python
+     branching on traced args, unhashable static args
+R002 host syncs / host side effects inside the device-hot set
+     (everything reachable from ``daysim._build_fused``'s fused body,
+     ``lax.scan`` bodies, and the fleet step math)
+R003 RNG discipline: no ``np.random.*``; jax keys are never consumed
+     twice without a split/fold_in, never constant inside a step
+R004 unit-suffix dimensional analysis over ``_mw/_mwh/_h/_s/_c/_mbps/
+     _pods`` names; units derive through ``*`` and ``/``
+R005 cache-key hygiene for ``_EXEC_CACHE``/``_PIPELINES``/
+     ``_ROW_CACHE``/``lru_cache`` keys
+R006 scan-body allocation (concatenate/list-append per step) and
+     float64 drift inside the f32 traced pipeline
+==== =====================================================================
+
+CLI
+---
+::
+
+    python -m repro.analysis [paths ...]        # default: src/repro
+        --format {text,json,github}             # default text
+        --baseline PATH | --no-baseline         # default: auto-discover
+                                                # analysis_baseline.json
+        --write-baseline PATH                   # grandfather current set
+        --rules R002,R003                       # subset of rules
+        --fix-suggestions                       # R003/R004 rewrites
+        --list-rules
+
+Exit status is non-zero iff there are *new* findings — not suppressed
+by an inline ``# repro: ignore[R00x]: reason`` comment and not present
+in the committed ``analysis_baseline.json``.  The tier-1 self-scan test
+(tests/test_analysis.py) pins the committed tree to zero new findings.
+"""
+from .engine import AnalysisResult, analyze, collect_files  # noqa: F401
+from .findings import Finding, load_baseline, write_baseline  # noqa: F401
+from .rules import RULES  # noqa: F401

@@ -1,0 +1,936 @@
+"""The six repro-specific rules (R001–R006).
+
+Each rule is a function ``rule(ctx) -> list[Finding]`` registered in
+``RULES`` with the contract it guards.  Rules lean on the package call
+graph (``ctx.hot`` / ``ctx.scan_bodies``) instead of re-deriving
+reachability themselves, and every heuristic is deliberately
+conservative: an expression the rule cannot prove problematic is
+ignored, because a suppression-heavy linter stops being read.
+"""
+from __future__ import annotations
+
+import ast
+import collections
+import re
+
+from .callgraph import dotted_name
+from .findings import Finding
+
+RULES: dict[str, "Rule"] = {}
+
+
+class Rule:
+    def __init__(self, rule_id, title, contract, fn):
+        self.id = rule_id
+        self.title = title
+        self.contract = contract
+        self.fn = fn
+
+    def run(self, ctx):
+        return self.fn(ctx)
+
+
+def rule(rule_id, title, contract):
+    def deco(fn):
+        RULES[rule_id] = Rule(rule_id, title, contract, fn)
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def own_nodes(fnode):
+    """Walk a function body without descending into nested defs."""
+    stack = list(ast.iter_child_nodes(fnode))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, _FUNC_NODES):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def ordered_own_nodes(fnode):
+    """Lexical-order variant (for linear dataflow like key tracking)."""
+    out = []
+
+    def rec(node):
+        for child in ast.iter_child_nodes(node):
+            out.append(child)
+            if not isinstance(child, _FUNC_NODES):
+                rec(child)
+
+    rec(fnode)
+    return out
+
+
+def param_names(fnode) -> set:
+    a = fnode.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def _resolve(fctx, node) -> str | None:
+    return fctx.mod.resolve(dotted_name(node))
+
+
+def _finding(rule_id, fctx, node, message, suggestion=""):
+    return Finding(rule_id, fctx.path, node.lineno,
+                   getattr(node, "col_offset", 0), message,
+                   suggestion=suggestion)
+
+
+def _enclosing_chain(ctx, info):
+    """FuncInfo ancestry, innermost first (including `info`)."""
+    chain = []
+    q = info.qualname
+    while q is not None and q in ctx.graph.functions:
+        chain.append(ctx.graph.functions[q])
+        q = ctx.graph.functions[q].parent
+    return chain
+
+
+# ---------------------------------------------------------------------------
+# R001 — retrace hazards
+# ---------------------------------------------------------------------------
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval",
+                 "weak_type"}
+_STATIC_CALLS = {"len", "isinstance", "getattr", "hasattr", "type"}
+_UNHASHABLE_DEFAULTS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                        ast.DictComp, ast.SetComp)
+
+
+def _in_loop(fctx, node, stop_at_func=True):
+    p = fctx.parent_of(node)
+    while p is not None:
+        if isinstance(p, (ast.For, ast.AsyncFor, ast.While)):
+            return True
+        if stop_at_func and isinstance(p, _FUNC_NODES):
+            return False
+        p = fctx.parent_of(p)
+    return False
+
+
+def _chain_cached(ctx, fctx, node):
+    """Is this AST site inside an lru_cache'd builder (or a lambda fed
+    to a *cache* helper like daysim._cached_executable)?"""
+    p = node
+    while p is not None:
+        if isinstance(p, _FUNC_NODES):
+            info = ctx.func_of_node(p)
+            if info is not None and any(
+                    a.cached for a in _enclosing_chain(ctx, info)):
+                return True
+            if isinstance(p, ast.Lambda):
+                gp = fctx.parent_of(p)
+                if isinstance(gp, ast.Call):
+                    name = dotted_name(gp.func) or ""
+                    if "cache" in name.lower():
+                        return True
+        p = fctx.parent_of(p)
+    return False
+
+
+def _chain_traced(ctx, fctx, node):
+    """Is this AST site inside a function that is itself traced?  A
+    jit/grad wrapper built inside a traced body is inlined into the
+    enclosing trace — it cannot cause extra retraces of its own."""
+    p = node
+    while p is not None:
+        if isinstance(p, _FUNC_NODES):
+            info = ctx.func_of_node(p)
+            if info is not None and any(
+                    a.traced for a in _enclosing_chain(ctx, info)):
+                return True
+        p = fctx.parent_of(p)
+    return False
+
+
+def _dynamic_param_uses(fctx, test, params):
+    """Param Names used *by value* (not via static attrs) in a test."""
+    hits = []
+    for node in ast.walk(test):
+        if not (isinstance(node, ast.Name) and node.id in params
+                and isinstance(node.ctx, ast.Load)):
+            continue
+        parent = fctx.parent_of(node)
+        if (isinstance(parent, ast.Attribute)
+                and parent.attr in _STATIC_ATTRS):
+            continue
+        if (isinstance(parent, ast.Call)
+                and (dotted_name(parent.func) or "") in _STATIC_CALLS):
+            continue
+        if (isinstance(parent, ast.Compare)
+                and all(isinstance(op, (ast.Is, ast.IsNot))
+                        for op in parent.ops)):
+            continue
+        hits.append(node)
+    return hits
+
+
+@rule("R001", "retrace hazards",
+      "zero-retrace warm queries: jit/vmap must be constructed once, "
+      "static args must hash, traced values must not feed Python "
+      "control flow")
+def r001(ctx):
+    out = []
+    for fctx in ctx.files:
+        for node in ast.walk(fctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            kind = ctx.graph.tracer_kind(fctx.mod, node.func)
+            if kind not in ("jit", "vmap", "grad"):
+                continue
+            if _chain_cached(ctx, fctx, node):
+                continue
+            if _chain_traced(ctx, fctx, node):
+                continue
+            parent = fctx.parent_of(node)
+            if (kind == "vmap" and isinstance(parent, ast.Call)
+                    and parent.func is node):
+                # immediately-invoked vmap(lambda)(xs) — a one-shot
+                # batched init, not a cached callable being rebuilt
+                continue
+            if _in_loop(fctx, node, stop_at_func=False):
+                out.append(_finding(
+                    "R001", fctx, node,
+                    f"jax.{kind} constructed inside a loop — every "
+                    "iteration builds (and may retrace) a fresh "
+                    "callable; hoist it or cache the wrapped function"))
+            elif (node.args and isinstance(node.args[0], ast.Lambda)
+                  and ctx.enclosing_function(fctx, node) is not None):
+                out.append(_finding(
+                    "R001", fctx, node,
+                    f"fresh jax.{kind}(lambda ...) built per call — the "
+                    "trace cache is keyed by function identity, so every "
+                    "invocation retraces; hoist the jitted callable or "
+                    "memoize the builder"))
+            # unhashable static args on the wrapped function
+            static_names = _static_argnames(node)
+            if static_names:
+                target = ctx.graph.resolve_callee(
+                    fctx.mod, None, node.args[0] if node.args else None)
+                if target:
+                    fn = ctx.graph.functions[target].node
+                    out.extend(_unhashable_static(fctx, fn, static_names))
+        # decorator form: @functools.partial(jax.jit, static_argnames=...)
+        for node in ast.walk(fctx.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            for deco in node.decorator_list:
+                if (isinstance(deco, ast.Call)
+                        and (dotted_name(deco.func) or "")
+                        .endswith("partial")
+                        and deco.args
+                        and ctx.graph.tracer_kind(fctx.mod, deco.args[0])
+                        == "jit"):
+                    names = _static_argnames(deco)
+                    out.extend(_unhashable_static(fctx, node, names))
+    # Python branching on traced arguments, in directly-traced bodies
+    for qual in sorted(ctx.graph.traced_functions()):
+        info = ctx.graph.functions[qual]
+        fctx = ctx.file_of(info)
+        if fctx is None or isinstance(info.node, ast.Lambda):
+            continue
+        params = param_names(info.node)
+        for node in own_nodes(info.node):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            for use in _dynamic_param_uses(fctx, node.test, params):
+                out.append(_finding(
+                    "R001", fctx, node,
+                    f"Python-level branch on traced argument "
+                    f"`{use.id}` in `{info.name}` — the branch is "
+                    "frozen at trace time and forces a retrace per "
+                    "value; use jnp.where/lax.cond or hoist the value "
+                    "to a static argument"))
+    return out
+
+
+def _static_argnames(call: ast.Call):
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return [v.value]
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return [e.value for e in v.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)]
+    return []
+
+
+def _unhashable_static(fctx, fnode, static_names):
+    out = []
+    a = fnode.args
+    pos = a.posonlyargs + a.args
+    defaults = dict(zip([p.arg for p in pos[len(pos) - len(a.defaults):]],
+                        a.defaults))
+    defaults.update({p.arg: d for p, d in zip(a.kwonlyargs, a.kw_defaults)
+                     if d is not None})
+    for name in static_names:
+        d = defaults.get(name)
+        if d is not None and isinstance(d, _UNHASHABLE_DEFAULTS):
+            out.append(_finding(
+                "R001", fctx, d,
+                f"static arg `{name}` defaults to an unhashable "
+                "container — jit static args are cache keys and must "
+                "hash; use a tuple/frozen value"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R002 — host syncs / host side effects inside the device-hot set
+# ---------------------------------------------------------------------------
+
+_HOST_CALLS = {
+    "numpy.asarray": "numpy.asarray materializes on the host",
+    "numpy.array": "numpy.array materializes on the host",
+    "numpy.frombuffer": "numpy.frombuffer reads host memory",
+    "jax.device_get": "jax.device_get forces a device->host transfer",
+}
+_HOST_METHODS = {
+    "item": ".item() blocks on the device and pulls a scalar",
+    "tolist": ".tolist() pulls the whole array to the host",
+    "block_until_ready": ".block_until_ready() is a host "
+                         "synchronization point",
+}
+_SCALARIZERS = {"float", "int", "bool", "complex"}
+
+
+def _refs_params(expr, params) -> bool:
+    """Does the expression read any parameter of the hot function?
+    Host calls over trace-time constants (platform tables, static shape
+    math) constant-fold into the program and are fine; only data that
+    flows in through the traced signature can actually sync."""
+    return any(isinstance(n, ast.Name) and n.id in params
+               and isinstance(n.ctx, ast.Load)
+               for n in ast.walk(expr))
+
+
+@rule("R002", "host sync in hot path",
+      "the fused day pipeline, scan bodies, and fleet step math stay "
+      "device-resident: no transfers, scalarizations, or host side "
+      "effects inside functions reachable from the traced roots")
+def r002(ctx):
+    out = []
+    for qual in sorted(ctx.hot):
+        info = ctx.graph.functions[qual]
+        fctx = ctx.file_of(info)
+        if fctx is None:
+            continue
+        params = (param_names(info.node)
+                  if not isinstance(info.node, ast.Module) else set())
+        for node in own_nodes(info.node):
+            if isinstance(node, ast.Call):
+                full = _resolve(fctx, node.func) or ""
+                if (full in _HOST_CALLS
+                        and any(_refs_params(a, params)
+                                for a in node.args)):
+                    out.append(_finding(
+                        "R002", fctx, node,
+                        f"{_HOST_CALLS[full]} inside hot function "
+                        f"`{info.name}` (reachable from a traced root)"))
+                    continue
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _HOST_METHODS
+                        and not node.args
+                        and _refs_params(node.func.value, params)):
+                    out.append(_finding(
+                        "R002", fctx, node,
+                        f"{_HOST_METHODS[node.func.attr]} inside hot "
+                        f"function `{info.name}`"))
+                    continue
+                if (isinstance(node.func, ast.Name)
+                        and node.func.id in _SCALARIZERS
+                        and node.args
+                        and not isinstance(node.args[0], ast.Constant)
+                        and _refs_params(node.args[0], params)):
+                    out.append(_finding(
+                        "R002", fctx, node,
+                        f"{node.func.id}() on a possibly-traced value "
+                        f"inside hot function `{info.name}` — "
+                        "scalarization is a blocking host sync (and a "
+                        "TracerConversionError under jit)"))
+                    continue
+                if (isinstance(node.func, ast.Name)
+                        and node.func.id == "print"):
+                    out.append(_finding(
+                        "R002", fctx, node,
+                        f"print() inside hot function `{info.name}` "
+                        "runs at trace time only (or syncs the host); "
+                        "use jax.debug.print if intentional"))
+                    continue
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets
+                           if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    base = t
+                    while isinstance(base, (ast.Subscript, ast.Attribute)):
+                        base = base.value
+                    if (isinstance(base, ast.Name) and base is not t
+                            and base.id in fctx.mod.globals):
+                        out.append(_finding(
+                            "R002", fctx, node,
+                            f"mutation of module-level `{base.id}` "
+                            f"inside hot function `{info.name}` — runs "
+                            "at trace time only; warm calls skip it"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R003 — RNG discipline
+# ---------------------------------------------------------------------------
+
+_NP_RANDOM_EQUIV = {
+    "rand": "jax.random.uniform(key, shape)",
+    "random": "jax.random.uniform(key, shape)",
+    "randn": "jax.random.normal(key, shape)",
+    "standard_normal": "jax.random.normal(key, shape)",
+    "normal": "jax.random.normal(key, shape) * sigma + mu",
+    "uniform": "jax.random.uniform(key, shape, minval=, maxval=)",
+    "randint": "jax.random.randint(key, shape, low, high)",
+    "integers": "jax.random.randint(key, shape, low, high)",
+    "choice": "jax.random.choice(key, a, shape)",
+    "permutation": "jax.random.permutation(key, x)",
+    "shuffle": "jax.random.permutation(key, x)",
+    "seed": "thread an explicit key: key = jax.random.key(seed)",
+    "RandomState": "thread an explicit key: key = jax.random.key(seed)",
+    "default_rng": "thread an explicit key: key = jax.random.key(seed)",
+}
+_KEY_PRODUCERS = {"PRNGKey", "key", "split", "fold_in", "clone",
+                  "wrap_key_data"}
+
+
+@rule("R003", "RNG discipline",
+      "pure-key sampling: all randomness flows through explicitly "
+      "threaded jax.random keys — no numpy/global RNG state, no key "
+      "consumed twice without an intervening split/fold_in")
+def r003(ctx):
+    out = []
+    for fctx in ctx.files:
+        for node in ast.walk(fctx.tree):
+            dotted = dotted_name(node) if isinstance(
+                node, ast.Attribute) else None
+            if dotted is None:
+                continue
+            full = fctx.mod.resolve(dotted) or ""
+            if full.startswith("numpy.random."):
+                leaf = full.rsplit(".", 1)[-1]
+                # only flag the outermost np.random attribute chain;
+                # Generator/BitGenerator/SeedSequence leaves are type
+                # names (annotations), not RNG state consumption
+                parent = fctx.parent_of(node)
+                if (isinstance(parent, ast.Attribute)
+                        or leaf in ("SeedSequence", "Generator",
+                                    "BitGenerator")):
+                    continue
+                sug = _NP_RANDOM_EQUIV.get(
+                    leaf, "use jax.random with an explicit key")
+                out.append(_finding(
+                    "R003", fctx, node,
+                    f"np.random.{leaf} — numpy RNG state is invisible "
+                    "to jax tracing and breaks the pure-key sampling "
+                    "contract", suggestion=sug))
+        # inline constant-key consumption + per-function key dataflow
+        for info in ctx.functions_in(fctx):
+            out.extend(_key_dataflow(fctx, info))
+    return out
+
+
+def _jax_random_leaf(fctx, call) -> str | None:
+    if not isinstance(call, ast.Call):
+        return None
+    full = _resolve(fctx, call.func) or ""
+    if full.startswith("jax.random."):
+        return full.rsplit(".", 1)[-1]
+    return None
+
+
+_KEYISH_PARAM = re.compile(r"(^|_)keys?$")
+
+
+def _key_dataflow(fctx, info):
+    out = []
+    keyvars: dict[str, int] = {}            # name -> generation
+    key_assign_depth: dict[str, int] = {}   # name -> loop depth at bind
+    # parameters named like keys participate: consuming a passed-in key
+    # twice is the same correlated-samples bug as a local one
+    for p in sorted(param_names(info.node)):
+        if _KEYISH_PARAM.search(p):
+            keyvars[p] = 1
+            key_assign_depth[p] = 0
+    uses = collections.Counter()            # (name, gen, idx) -> count
+    depth = 0
+    nodes = ordered_own_nodes(info.node)
+    loop_spans = [(n.lineno, getattr(n, "end_lineno", n.lineno))
+                  for n in nodes
+                  if isinstance(n, (ast.For, ast.AsyncFor, ast.While))]
+
+    def loop_depth_at(node):
+        return sum(1 for lo, hi in loop_spans
+                   if lo < node.lineno <= hi)
+
+    for node in nodes:
+        if isinstance(node, ast.Call):
+            leaf = _jax_random_leaf(fctx, node)
+            if leaf and leaf not in _KEY_PRODUCERS and node.args:
+                arg = node.args[0]
+                inner = _jax_random_leaf(fctx, arg)
+                if (inner in ("PRNGKey", "key") and arg.args
+                        and isinstance(arg.args[0], ast.Constant)):
+                    out.append(_finding(
+                        "R003", fctx, node,
+                        f"jax.random.{leaf} consumes a constant "
+                        f"key built inline — every call draws the "
+                        "same values",
+                        suggestion="thread a key argument and derive "
+                        "per-use keys: jax.random.fold_in(key, step)"))
+                ref = None
+                if isinstance(arg, ast.Name) and arg.id in keyvars:
+                    ref = (arg.id, keyvars[arg.id], None)
+                elif (isinstance(arg, ast.Subscript)
+                      and isinstance(arg.value, ast.Name)
+                      and arg.value.id in keyvars
+                      and isinstance(arg.slice, ast.Constant)):
+                    ref = (arg.value.id, keyvars[arg.value.id],
+                           arg.slice.value)
+                if ref is not None:
+                    uses[ref] += 1
+                    d = loop_depth_at(node)
+                    if uses[ref] > 1:
+                        out.append(_finding(
+                            "R003", fctx, node,
+                            f"key `{ref[0]}` consumed again without an "
+                            "intervening split — correlated samples",
+                            suggestion=f"{ref[0]}_a, {ref[0]}_b = "
+                            f"jax.random.split({ref[0]})"))
+                    elif d > key_assign_depth.get(ref[0], d):
+                        out.append(_finding(
+                            "R003", fctx, node,
+                            f"key `{ref[0]}` consumed inside a loop but "
+                            "bound outside it — every iteration draws "
+                            "identical values",
+                            suggestion=f"fold the loop index in: "
+                            f"jax.random.fold_in({ref[0]}, i)"))
+        if isinstance(node, ast.Assign):
+            produced = _jax_random_leaf(fctx, node.value) in _KEY_PRODUCERS
+            for t in node.targets:
+                names = ([t] if isinstance(t, ast.Name)
+                         else list(t.elts)
+                         if isinstance(t, (ast.Tuple, ast.List)) else [])
+                for el in names:
+                    if not isinstance(el, ast.Name):
+                        continue
+                    if produced:
+                        keyvars[el.id] = keyvars.get(el.id, 0) + 1
+                        key_assign_depth[el.id] = loop_depth_at(node)
+                    elif el.id in keyvars:
+                        keyvars[el.id] += 1   # rebound: new generation
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R004 — unit-suffix dimensional analysis
+# ---------------------------------------------------------------------------
+
+_UNIT_TOKENS = {"mw", "kw", "mwh", "kwh", "h", "s", "ms", "c", "mbps",
+                "pods", "usd", "hz", "kgco2"}
+_UNIT_ALIASES = {"hour": "h", "hours": "h", "sec": "s", "secs": "s"}
+_DECOMPOSE = {"mwh": ("mw", "h"), "kwh": ("kw", "h")}
+
+
+def _base_counter(token):
+    c = collections.Counter()
+    for t in _DECOMPOSE.get(token, (token,)):
+        c[t] += 1
+    return c
+
+
+def _u_combine(a, b, sign):
+    """Signed unit algebra.  Counter's own ``+``/``-`` drop non-positive
+    counts, which silently erases denominator units (``mw/mbps`` would
+    collapse to ``mw``); this keeps negative exponents and only drops
+    exact zeros."""
+    c = collections.Counter(a)
+    for t, n in b.items():
+        c[t] += sign * n
+    for t in [t for t, n in c.items() if n == 0]:
+        del c[t]
+    return c
+
+
+def parse_unit(ident: str):
+    """Unit Counter for an identifier, None if it carries no unit.
+
+    ``usd_per_kwh``-style names divide; the final ``_``-token otherwise
+    decides (``bin_hours`` -> h).  Returns the string ``"ambiguous"``
+    for names like ``pods_s`` where the trailing ``s`` reads as seconds
+    but the stem is itself a unit (pluralization collision).
+    """
+    ident = ident.lower()
+    if "_per_" in ident:
+        left, _, right = ident.rpartition("_per_")
+        lu = parse_unit(left)
+        ru = parse_unit(right.split("_")[0])
+        if (isinstance(lu, collections.Counter)
+                and isinstance(ru, collections.Counter)):
+            return _u_combine(lu, ru, -1)
+        return None
+    tokens = ident.split("_")
+    last = _UNIT_ALIASES.get(tokens[-1], tokens[-1])
+    if last not in _UNIT_TOKENS:
+        return None
+    # a bare one/two-letter identifier ("h", "s", "c", "kw") is far more
+    # often a loop variable / kwargs dict than a unit — require a stem
+    if len(tokens) == 1 and last in ("h", "s", "c", "kw", "ms"):
+        return None
+    if (last == "s" and len(tokens) >= 2
+            and _UNIT_ALIASES.get(tokens[-2], tokens[-2]) in _UNIT_TOKENS):
+        return "ambiguous"
+    return _base_counter(last)
+
+
+def _unit_str(c: collections.Counter) -> str:
+    num = "*".join(sorted(t for t, n in c.items() for _ in range(n)
+                          if n > 0)) or "1"
+    den = "*".join(sorted(t for t, n in c.items() for _ in range(-n)
+                          if n < 0))
+    return f"{num}/{den}" if den else num
+
+
+def _expr_unit(node):
+    """Counter, None (unknown), or "ambiguous". Literals launder units
+    (they are how conversions are written), so any constant factor
+    makes the whole product unknown."""
+    if isinstance(node, ast.Name):
+        return parse_unit(node.id)
+    if isinstance(node, ast.Attribute):
+        return parse_unit(node.attr)
+    if isinstance(node, ast.Subscript):
+        if (isinstance(node.slice, ast.Constant)
+                and isinstance(node.slice.value, str)):
+            return parse_unit(node.slice.value)
+        return _expr_unit(node.value)       # x_mwh[i] keeps x's unit
+    if isinstance(node, ast.UnaryOp):
+        return _expr_unit(node.operand)
+    if isinstance(node, ast.BinOp):
+        lu, ru = _expr_unit(node.left), _expr_unit(node.right)
+        if "ambiguous" in (lu, ru):
+            return None
+        if isinstance(node.op, ast.Mult):
+            if lu is None or ru is None:
+                return None
+            return _u_combine(lu, ru, 1)
+        if isinstance(node.op, ast.Div):
+            if lu is None or ru is None:
+                return None
+            return _u_combine(lu, ru, -1)
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            # the +/- check itself happens in r004; propagate left
+            return lu if lu is not None else ru
+        return None
+    return None
+
+
+def _counters(*units):
+    return all(isinstance(u, collections.Counter) for u in units)
+
+
+_R004_SUGGEST = {
+    frozenset(("h", "s")): "convert explicitly (`x_s / 3600.0` or "
+                           "`x_h * 3600.0`) and name the result's unit",
+    frozenset(("mw", "mwh")): "integrate or differentiate over time "
+                              "first: `p_mw * dt_h -> e_mwh`",
+    frozenset(("kw", "mw")): "rescale explicitly (`x_kw * 1e3 -> x_mw`)",
+    frozenset(("kwh", "mwh")): "rescale explicitly "
+                               "(`x_kwh * 1e3 -> x_mwh`)",
+}
+
+
+def _suggest(lu, ru):
+    key = frozenset(_unit_str(lu).split("*") + _unit_str(ru).split("*"))
+    for pair, s in _R004_SUGGEST.items():
+        if pair <= key:
+            return s
+    return "align the units explicitly before combining, or rename " \
+           "the identifier to its true unit"
+
+
+@rule("R004", "unit-suffix mixing",
+      "the _mw/_mwh/_h/_s/_c/_mbps/_pods naming convention is "
+      "load-bearing: adding, subtracting, or comparing identifiers "
+      "with incompatible unit suffixes is a power-accounting bug")
+def r004(ctx):
+    out = []
+    for fctx in ctx.files:
+        for node in ast.walk(fctx.tree):
+            if isinstance(node, ast.BinOp) and isinstance(
+                    node.op, (ast.Add, ast.Sub)):
+                lu, ru = _expr_unit(node.left), _expr_unit(node.right)
+                if _counters(lu, ru) and lu != ru:
+                    out.append(_finding(
+                        "R004", fctx, node,
+                        f"`{_unit_str(lu)}` {'+' if isinstance(node.op, ast.Add) else '-'} "
+                        f"`{_unit_str(ru)}` mixes incompatible units",
+                        suggestion=_suggest(lu, ru)))
+            elif isinstance(node, ast.Compare):
+                lu = _expr_unit(node.left)
+                for comp in node.comparators:
+                    ru = _expr_unit(comp)
+                    if _counters(lu, ru) and lu != ru:
+                        out.append(_finding(
+                            "R004", fctx, node,
+                            f"comparison between `{_unit_str(lu)}` and "
+                            f"`{_unit_str(ru)}` — incompatible units",
+                            suggestion=_suggest(lu, ru)))
+            elif isinstance(node, ast.Assign):
+                if (len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)):
+                    tu = parse_unit(node.targets[0].id)
+                    vu = _expr_unit(node.value)
+                    if _counters(tu, vu) and tu != vu:
+                        out.append(_finding(
+                            "R004", fctx, node,
+                            f"`{node.targets[0].id}` declares "
+                            f"`{_unit_str(tu)}` but the right-hand side "
+                            f"derives `{_unit_str(vu)}`",
+                            suggestion=_suggest(tu, vu)))
+            # ambiguous unit names at definition sites
+            amb = None
+            if (isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Store)
+                    and parse_unit(node.id) == "ambiguous"):
+                amb = node.id
+            elif isinstance(node, ast.arg) and \
+                    parse_unit(node.arg) == "ambiguous":
+                amb = node.arg
+            elif (isinstance(node, ast.Dict)):
+                for k in node.keys:
+                    if (isinstance(k, ast.Constant)
+                            and isinstance(k.value, str)
+                            and parse_unit(k.value) == "ambiguous"):
+                        out.append(_finding(
+                            "R004", fctx, k,
+                            f"`{k.value}` reads as "
+                            f"{k.value.rsplit('_', 1)[0]}-seconds under "
+                            "the suffix convention — ambiguous "
+                            "pluralization",
+                            suggestion="rename (e.g. "
+                            f"`{k.value.rsplit('_', 1)[0]}_stream`) or "
+                            "spell the unit out"))
+            if amb is not None:
+                out.append(_finding(
+                    "R004", fctx, node,
+                    f"`{amb}` reads as {amb.rsplit('_', 1)[0]}-seconds "
+                    "under the suffix convention — ambiguous "
+                    "pluralization",
+                    suggestion=f"rename (e.g. "
+                    f"`{amb.rsplit('_', 1)[0]}_stream`) or spell the "
+                    "unit out"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R005 — cache-key hygiene
+# ---------------------------------------------------------------------------
+
+_CACHE_NAME_RE = re.compile(r"CACHE|PIPELINES|TABLES|CTX_IDS")
+_ARRAY_MAKERS = {"numpy.asarray", "numpy.array", "jax.numpy.asarray",
+                 "jax.numpy.array", "jax.device_put"}
+_UNHASHABLE_ANN = {"list", "dict", "set", "bytearray",
+                   "numpy.ndarray", "jax.Array", "jax.numpy.ndarray"}
+
+
+def _key_expr_problems(fctx, expr):
+    problems = []
+    wrapped = set()
+    for node in ast.walk(expr):
+        if (isinstance(node, ast.Call)
+                and (dotted_name(node.func) or "").rsplit(".", 1)[-1]
+                in ("tuple", "frozenset")):
+            wrapped.update(ast.walk(node))
+    for node in ast.walk(expr):
+        if node in wrapped:
+            continue
+        if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp)):
+            problems.append((node, "unhashable container in cache key"))
+        elif isinstance(node, ast.Call):
+            full = _resolve(fctx, node.func) or ""
+            if full in _ARRAY_MAKERS:
+                problems.append((
+                    node, "array-valued cache-key component — arrays "
+                    "are unhashable and value-carrying"))
+            elif full == "id" or (isinstance(node.func, ast.Name)
+                                  and node.func.id == "id"):
+                problems.append((
+                    node, "id()-keyed cache entry — object identity "
+                    "outlives the object; key by value instead"))
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "tobytes"):
+                problems.append((
+                    node, "raw array bytes as cache key — value-"
+                    "carrying buffer; key by the static signature "
+                    "(shape, dtype) instead"))
+    return problems
+
+
+@rule("R005", "cache-key hygiene",
+      "_EXEC_CACHE/_PIPELINES/_ROW_CACHE/lru_cache keys must be "
+      "hashable, value-stable, and free of array payloads — a bad key "
+      "either crashes, leaks, or silently aliases distinct programs")
+def r005(ctx):
+    out = []
+    for fctx in ctx.files:
+        # local single-assignment map per function, for key = (...) sites
+        assigns: dict[tuple, ast.AST] = {}
+        for fnode in ast.walk(fctx.tree):
+            if not isinstance(fnode, _FUNC_NODES + (ast.Module,)):
+                continue
+            for node in (own_nodes(fnode)
+                         if not isinstance(fnode, ast.Module)
+                         else ast.iter_child_nodes(fnode)):
+                if (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)):
+                    assigns[(id(fnode), node.targets[0].id)] = node.value
+
+        def key_of(node):
+            if isinstance(node, ast.Subscript):
+                return node.slice
+            return None
+
+        for node in ast.walk(fctx.tree):
+            key = None
+            if (isinstance(node, ast.Subscript)
+                    and isinstance(node.value, ast.Name)
+                    and _CACHE_NAME_RE.search(node.value.id)
+                    and node.value.id in fctx.mod.globals):
+                key = node.slice
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr in ("get", "setdefault", "pop")
+                  and isinstance(node.func.value, ast.Name)
+                  and _CACHE_NAME_RE.search(node.func.value.id)
+                  and node.func.value.id in fctx.mod.globals
+                  and node.args):
+                key = node.args[0]
+            elif (isinstance(node, ast.Call)
+                  and (dotted_name(node.func) or "")
+                  .rsplit(".", 1)[-1] == "_cached_executable"
+                  and node.args):
+                key = node.args[0]
+            if key is None:
+                continue
+            exprs = [key]
+            if isinstance(key, ast.Name):
+                owner = fctx.enclosing_def(node)
+                bound = assigns.get((id(owner), key.id))
+                exprs = [bound] if bound is not None else []
+            for expr in exprs:
+                for bad, msg in _key_expr_problems(fctx, expr):
+                    out.append(_finding("R005", fctx, bad, msg))
+        # lru_cache'd functions with unhashable-annotated params
+        for fnode in ast.walk(fctx.tree):
+            if not isinstance(fnode, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                continue
+            cached = any(
+                (dotted_name(d.func if isinstance(d, ast.Call) else d)
+                 or "").rsplit(".", 1)[-1] in ("lru_cache", "cache")
+                for d in fnode.decorator_list)
+            if not cached:
+                continue
+            for p in (fnode.args.posonlyargs + fnode.args.args
+                      + fnode.args.kwonlyargs):
+                ann = p.annotation
+                if ann is None:
+                    continue
+                base = ann.value if isinstance(ann, ast.Subscript) else ann
+                name = _resolve(fctx, base) or dotted_name(base) or ""
+                if name in _UNHASHABLE_ANN:
+                    out.append(_finding(
+                        "R005", fctx, p,
+                        f"lru_cache'd `{fnode.name}` takes "
+                        f"`{p.arg}: {name}` — unhashable (or value-"
+                        "carrying) cache key; pass a hashable "
+                        "signature instead"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R006 — scan-body allocation and dtype drift
+# ---------------------------------------------------------------------------
+
+_SCAN_ALLOCATORS = {"jax.numpy.concatenate", "jax.numpy.append",
+                    "jax.numpy.vstack", "jax.numpy.hstack"}
+_F64_NAMES = {"numpy.float64", "jax.numpy.float64"}
+
+
+@rule("R006", "scan-body allocation / dtype drift",
+      "scan step functions run once per time step: per-step "
+      "concatenation or list growth turns O(T) into O(T^2), and any "
+      "float64 reference silently promotes (or errors) under the "
+      "f32 jit contract")
+def r006(ctx):
+    out = []
+    for qual in sorted(ctx.scan_bodies):
+        info = ctx.graph.functions[qual]
+        fctx = ctx.file_of(info)
+        if fctx is None:
+            continue
+        for node in own_nodes(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            full = _resolve(fctx, node.func) or ""
+            if full in _SCAN_ALLOCATORS:
+                out.append(_finding(
+                    "R006", fctx, node,
+                    f"{full.rsplit('.', 1)[-1]} inside scan body "
+                    f"`{info.name}` allocates per step — carry a "
+                    "pre-sized buffer (dynamic_update_slice) or "
+                    "restructure the carry"))
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "append"
+                  and isinstance(node.func.value, ast.Name)):
+                out.append(_finding(
+                    "R006", fctx, node,
+                    f"Python list append inside scan body "
+                    f"`{info.name}` — side effects run at trace time "
+                    "only and leak the tracer"))
+    for qual in sorted(ctx.hot):
+        info = ctx.graph.functions[qual]
+        fctx = ctx.file_of(info)
+        if fctx is None:
+            continue
+        for node in own_nodes(info.node):
+            full = None
+            if isinstance(node, ast.Attribute):
+                full = _resolve(fctx, node)
+            if full in _F64_NAMES:
+                out.append(_finding(
+                    "R006", fctx, node,
+                    f"float64 reference inside hot function "
+                    f"`{info.name}` — the traced pipeline is f32; "
+                    "f64 either errors (x64 off) or silently doubles "
+                    "bandwidth (x64 on)"))
+            elif (isinstance(node, ast.keyword) and node.arg == "dtype"
+                  and isinstance(node.value, ast.Constant)
+                  and node.value.value == "float64"):
+                out.append(_finding(
+                    "R006", fctx, node.value,
+                    f"dtype=\"float64\" inside hot function "
+                    f"`{info.name}` — f32 contract"))
+    return out

@@ -920,11 +920,11 @@ def _row_stage(plat: PlatformSpec):
 
     def stage(vec, th, rates, gate_scale, p_base, p_wan):
         out = eng(vec, th)
-        pods, pods_s = offload.pods_streams_device(
+        pods, pods_stream = offload.pods_streams_device(
             vec["placement"][:, asr_j], vec["fps_scale"],
             vec["upload_duty"], rates, gate_scale)
         mw_p = p_base + p_wan * out["mbps"]
-        return out["total"], out["mbps"], mw_p, pods, pods_s
+        return out["total"], out["mbps"], mw_p, pods, pods_stream
 
     return stage
 
@@ -948,7 +948,7 @@ def _row_eval(plat: PlatformSpec, rows: list, n_users: float,
     p_base, p_wan = _puck_coeffs(plat)
     fn = _cached_executable(("rows", plat),
                             lambda: jax.jit(_row_stage(plat)))
-    total, mbps, mw_p, pods, pods_s = fn(
+    total, mbps, mw_p, pods, pods_stream = fn(
         sset.vec(), scenarios._theta(plat, theta),
         jnp.asarray(rr["tok_per_cap"], jnp.float32),
         jnp.float32(n_users),       # duty=1.0, the daysim convention
@@ -956,7 +956,7 @@ def _row_eval(plat: PlatformSpec, rows: list, n_users: float,
     jax.block_until_ready(total)
     return np.column_stack([
         np.asarray(total, np.float64), np.asarray(pods, np.float64),
-        np.asarray(mbps, np.float64), np.asarray(pods_s, np.float64),
+        np.asarray(mbps, np.float64), np.asarray(pods_stream, np.float64),
         np.asarray(mw_p, np.float64)])
 
 
@@ -1071,7 +1071,7 @@ def _combo_tables(cb: _Combo, dt_s: float, n_steps: int,
     t = len(seg_idx)
     mw = cb.mw_levels                       # (L, n_seg)
     pods = cb.pods_levels
-    pods_s = cb.pods_stream_levels          # (L, n_seg, S)
+    pods_stream = cb.pods_stream_levels          # (L, n_seg, S)
     # puck active power comes from the device table stage (one f32 FMA
     # per row, cached alongside the other columns); fall back to the
     # host expression for combos filled by out-of-tree code
@@ -1084,16 +1084,16 @@ def _combo_tables(cb: _Combo, dt_s: float, n_steps: int,
         pad = max_levels - mw.shape[0]
         mw = np.concatenate([mw, np.repeat(mw[-1:], pad, 0)])
         pods = np.concatenate([pods, np.repeat(pods[-1:], pad, 0)])
-        pods_s = np.concatenate([pods_s, np.repeat(pods_s[-1:], pad, 0)])
+        pods_stream = np.concatenate([pods_stream, np.repeat(pods_stream[-1:], pad, 0)])
         mw_p = np.concatenate([mw_p, np.repeat(mw_p[-1:], pad, 0)])
-    n_streams = pods_s.shape[-1]
+    n_streams = pods_stream.shape[-1]
     step_mw = np.zeros((n_steps, max_levels), np.float32)
     step_pods = np.zeros((n_steps, max_levels), np.float32)
-    step_pods_s = np.zeros((n_steps, max_levels, n_streams), np.float32)
+    step_pods_stream = np.zeros((n_steps, max_levels, n_streams), np.float32)
     step_mw_p = np.zeros((n_steps, max_levels), np.float32)
     step_mw[:t] = mw.T[seg_idx]
     step_pods[:t] = pods.T[seg_idx]
-    step_pods_s[:t] = pods_s.transpose(1, 0, 2)[seg_idx]
+    step_pods_stream[:t] = pods_stream.transpose(1, 0, 2)[seg_idx]
     step_mw_p[:t] = mw_p.T[seg_idx]
     amb = np.full(n_steps, cb.schedule.segments[-1].ambient_c, np.float32)
     amb[:t] = np.asarray([s.ambient_c for s in cb.schedule.segments],
@@ -1118,7 +1118,7 @@ def _combo_tables(cb: _Combo, dt_s: float, n_steps: int,
         amult[lv:] = cb.policy.action(lv).active_mult
     const = _combo_const(cb, dt_s, standby_mw, shutdown_c)
     return {"step_mw": step_mw, "step_mw_p": step_mw_p,
-            "step_pods": step_pods, "step_pods_s": step_pods_s,
+            "step_pods": step_pods, "step_pods_stream": step_pods_stream,
             "ambient": amb,
             "active": active, "valid": valid, "charge": charge,
             "charge_p": charge_p, "act_mult": amult,
@@ -1437,6 +1437,8 @@ def _build_fused(plats: tuple, backend: str):
                          f"expected 'xla' or 'pallas'")
 
     def fused(dyn, ix):
+        # repro: ignore[R002]: trace-counter by design — it MUST run at
+        # trace time only; the zero-retrace tests assert it stays flat
         EXEC_STATS["traces"] += 1
         outs = []
         for stage, g in zip(stages, dyn["groups"]):

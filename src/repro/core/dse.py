@@ -127,9 +127,16 @@ def sensitivity(scenario: Scenario | None = None, keys=None, platform=None):
     keys = keys or list(aria2.THETA0)
     th0 = {k: jnp.asarray(float(aria2.THETA0[k])) for k in keys}
     sset = ScenarioSet.from_scenarios([sc])
+    # R002: total_mw runs host-side placement validation and rebuilds
+    # the knob vector on every call; under jax.grad that host work sat
+    # inside the traced path.  Validate and build once, differentiate
+    # only the device engine eval.
+    scenarios._validate(plat, sset)
+    eng = scenarios._engine(plat)
+    vec = sset.vec()
 
     def f(th):
-        return scenarios.total_mw(plat, sset, th)[0]
+        return eng(vec, scenarios._theta(plat, th))["total"][0]
 
     grads = jax.grad(f)(th0)
     base = float(f(th0))

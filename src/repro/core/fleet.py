@@ -349,7 +349,7 @@ def _stack_archetype_tables(spec: PopulationSpec, combos: list,
         "mw_p": np.stack([tb["step_mw_p"] for tb in tbs], 1),
         "pods": np.stack([tb["step_pods"] for tb in tbs], 1),
         # (T, A, S, L): streams before levels so take_linear indexes L
-        "pods_s": np.stack([tb["step_pods_s"] for tb in tbs],
+        "pods_stream": np.stack([tb["step_pods_stream"] for tb in tbs],
                            1).transpose(0, 1, 3, 2),
         "amb": np.stack([tb["ambient"] for tb in tbs], 1),      # (T, A)
         "active": np.stack([tb["active"] for tb in tbs], 1),
@@ -426,7 +426,7 @@ def _integrate_fleet(user: dict, const_u: dict, xs: dict,
     one = jnp.ones(n, jnp.float32)
     zero = jnp.zeros(n, jnp.float32)
     state = (one, one, amb0, amb0, amb0, amb0, zero, zero, zero)
-    n_streams = xs["pods_s"].shape[2]
+    n_streams = xs["pods_stream"].shape[2]
     curve0 = jnp.zeros((n_bins, n_streams), jnp.float32)
     acc0 = {"curve": curve0, "curve_c": curve0,
             "first": zero, "hit": jnp.zeros(n, bool),
@@ -445,9 +445,9 @@ def _integrate_fleet(user: dict, const_u: dict, xs: dict,
         state, out = jax.vmap(daysim._step_math,
                               in_axes=(0, 0, 0))(state, xu, const_u)
         lf = out["level"].astype(jnp.float32)
-        ps = jax.vmap(design.take_linear)(x["pods_s"][arch], lf)  # (N, S)
-        pods_s = (out["act"] * out["alive"])[:, None] * ps
-        binc = jax.ops.segment_sum(pods_s * user["w"][:, None],
+        ps = jax.vmap(design.take_linear)(x["pods_stream"][arch], lf)  # (N, S)
+        pods_stream = (out["act"] * out["alive"])[:, None] * ps
+        binc = jax.ops.segment_sum(pods_stream * user["w"][:, None],
                                    x["bins"][user["joff"]],
                                    num_segments=n_bins)
         curve, curve_c = _kahan_add(acc["curve"], acc["curve_c"], binc)
@@ -742,7 +742,7 @@ def reference_fleet(pop: Population, *, dt_s: float = 60.0,
         shut[u] = ref["shut"][-1] > 0.5
         pod_hours[u] = np.float64(ref["pods"]).sum() * h
         aa = ref["act"] * ref["alive"]          # float32, device order
-        ps = tb["step_pods_s"][np.arange(n_steps), ref["level"]]
+        ps = tb["step_pods_stream"][np.arange(n_steps), ref["level"]]
         contrib = aa[:, None] * ps              # float32 products
         np.add.at(curve, bins[:t, joff[u]],
                   np.asarray(contrib[:t], np.float64))

@@ -428,8 +428,8 @@ def pods_streams_device(asr_on, fps_scale, upload_duty, tok_per_cap,
         elif s == "audio":
             x = x * (1.0 - asr_on)
         cols.append(x)
-    pods_s = jnp.stack(cols, axis=-1)
-    return jnp.sum(pods_s, axis=-1), pods_s
+    pods_stream = jnp.stack(cols, axis=-1)
+    return jnp.sum(pods_stream, axis=-1), pods_stream
 
 
 def pods_relaxed(vec: dict, n_users: float = 1e6, duty: float = 0.35,

@@ -36,6 +36,8 @@ class DataConfig:
 
 
 def _batch_rng(cfg: DataConfig, step: int) -> np.random.Generator:
+    # repro: ignore[R003]: deliberate host-side loader RNG — a pure
+    # function of (seed, step, host); no state crosses the jit boundary
     return np.random.default_rng(
         np.random.SeedSequence([cfg.seed, step, cfg.host_id]))
 

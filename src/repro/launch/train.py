@@ -54,22 +54,29 @@ def train(arch: str, *, smoke: bool = True, steps: int = 50,
                 ckpt_dir, (params, opt_state), last)
             print(f"resumed from step {start}")
 
-    def loss_of(p, b):
+    # R003: the synthetic encdec/vlm side inputs used to be drawn from
+    # constant PRNGKey(1)/(2) inside the jitted step, so every step saw
+    # the same noise; thread a per-step key instead (folded outside the
+    # jit, passed in as an array so warm steps don't retrace)
+    data_key = jax.random.PRNGKey(17)
+
+    def loss_of(p, b, k):
         extra = {}
         if cfg.family == "encdec":
             b = dict(b)
             b["frames"] = jax.random.normal(
-                jax.random.PRNGKey(1), (batch, cfg.audio_frames, cfg.d_model))
+                jax.random.fold_in(k, 1),
+                (batch, cfg.audio_frames, cfg.d_model))
         if cfg.family == "vlm":
             b = dict(b)
             b["vision_embeds"] = jax.random.normal(
-                jax.random.PRNGKey(2),
+                jax.random.fold_in(k, 2),
                 (batch, cfg.vision_tokens, cfg.vision_embed_dim))
         return model.loss_fn(p, cfg, b, env=env, remat=False)
 
     @jax.jit
-    def step_fn(p, o, e, b):
-        loss, grads = jax.value_and_grad(loss_of)(p, b)
+    def step_fn(p, o, e, b, k):
+        loss, grads = jax.value_and_grad(loss_of)(p, b, k)
         if e is not None:
             grads, e = comp_lib.compress_grads(grads, e)
         p, o, metrics = opt_lib.update(opt_cfg, grads, o, p)
@@ -84,8 +91,9 @@ def train(arch: str, *, smoke: bool = True, steps: int = 50,
     for s in range(start, steps):
         wd.start()
         b = lm_batch(dcfg, s)
-        params, opt_state, err_state, m = step_fn(params, opt_state,
-                                                  err_state, b)
+        params, opt_state, err_state, m = step_fn(
+            params, opt_state, err_state, b,
+            jax.random.fold_in(data_key, s))
         losses.append(float(m["loss"]))
         wd.stop(s)
         if s % log_every == 0 or s == steps - 1:

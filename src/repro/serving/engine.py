@@ -45,6 +45,8 @@ class Server:
         self.queue: list[Request] = []
         self.stats = ServeStats()
 
+        # repro: ignore[R001]: one jit per Server instance (one Server
+        # per process); cfg/env are deliberately baked into the closure
         self._decode = jax.jit(
             lambda p, t, c, l: model.decode_step(p, cfg, t, c, l, env=env))
 

@@ -1,0 +1,28 @@
+"""R001 fixture: retrace hazards the analyzer must flag."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branchy(x, n):
+    if x > 0:                       # python branch on a traced argument
+        return x + n
+    return -x
+
+
+def jit_per_iteration(fns, x):
+    outs = []
+    for f in fns:
+        outs.append(jax.jit(f)(x))  # fresh compile every loop iteration
+    return outs
+
+
+def fresh_lambda(z):
+    return jax.jit(lambda a: a + 1.0)(z)  # new jit object per call
+
+
+def kernel(x, opts=[1, 2]):
+    return x * opts[0]
+
+
+fast_kernel = jax.jit(kernel, static_argnames="opts")  # unhashable default

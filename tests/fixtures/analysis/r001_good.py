@@ -1,0 +1,34 @@
+"""R001 fixture: retrace-safe idioms that must NOT fire."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branchless(x, n):
+    return jnp.where(x > 0, x + n, -x)  # traced select, no python branch
+
+
+# module-level jit: built once at import, reused forever
+double = jax.jit(lambda a: a * 2.0)
+
+
+@functools.lru_cache(maxsize=8)
+def make_scaler(factor: float):
+    # cached builder: one jit per distinct factor, not per call
+    return jax.jit(lambda a: a * factor)
+
+
+def batched_init(keys):
+    # vmap consumed immediately at its own call site (IIFE) — the
+    # transform is part of this expression, not a stored program
+    return jax.vmap(lambda k: k * 2)(keys)
+
+
+@jax.jit
+def outer_step(p, b):
+    # grad built inside an already-traced body inlines into the outer
+    # trace; it does not compile anything per call
+    loss, g = jax.value_and_grad(lambda q: (q * b).sum())(p)
+    return loss, g

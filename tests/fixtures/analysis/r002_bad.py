@@ -1,0 +1,20 @@
+"""R002 fixture: host synchronization inside traced bodies."""
+import numpy as np
+import jax
+
+STATS = {"calls": 0}
+
+
+@jax.jit
+def hot(x):
+    y = np.asarray(x)       # host transfer of a traced value
+    v = x.item()            # device sync
+    s = float(x)            # scalarizes a tracer
+    print(x)                # host I/O inside the trace
+    return y.sum() + v + s
+
+
+@jax.jit
+def counted(x):
+    STATS["calls"] += 1     # mutates module state at trace time
+    return x * 2.0

@@ -1,0 +1,33 @@
+"""R002 fixture: host work in the right places — must NOT fire."""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+TABLE = [1.0, 2.0, 4.0]
+
+
+@jax.jit
+def hot(x):
+    # host call on a trace-time constant (module global, not a traced
+    # argument) constant-folds into the program
+    consts = jnp.asarray(np.array(TABLE, np.float32))
+    return x * consts[0]
+
+
+@functools.lru_cache(maxsize=4)
+def build_table(n: int):
+    # cached builder body runs once per key: host work here is setup,
+    # not per-call sync
+    return jnp.asarray(np.asarray(list(range(n)), np.float32))
+
+
+@jax.jit
+def hot_with_builder(x):
+    return x + build_table(8)
+
+
+def cold_report(x):
+    # never reachable from a traced root — host sync is its job
+    return float(np.asarray(x).sum())

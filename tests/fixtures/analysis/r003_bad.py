@@ -1,0 +1,25 @@
+"""R003 fixture: RNG discipline violations."""
+import numpy as np
+import jax
+
+
+def legacy_noise(n):
+    return np.random.rand(n)        # global numpy RNG state
+
+
+def correlated(seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (2,))
+    b = jax.random.uniform(key, (2,))   # same key consumed twice
+    return a + b
+
+
+def constant_key():
+    return jax.random.normal(jax.random.PRNGKey(1), (2,))  # inline literal key
+
+
+def same_key_every_iter(key, xs):
+    out = []
+    for x in xs:
+        out.append(x + jax.random.normal(key, (2,)))  # key bound outside loop
+    return out

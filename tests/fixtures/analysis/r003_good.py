@@ -1,0 +1,22 @@
+"""R003 fixture: disciplined key handling — must NOT fire."""
+import numpy as np
+import jax
+
+
+def decorrelated(key):
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (2,))
+    b = jax.random.uniform(kb, (2,))
+    return a + b
+
+
+def per_step(key, n):
+    outs = []
+    for i in range(n):
+        outs.append(jax.random.normal(jax.random.fold_in(key, i), (2,)))
+    return outs
+
+
+def typed_rng(rng: np.random.Generator) -> np.random.Generator:
+    # type annotations naming numpy RNG classes are not RNG calls
+    return rng

@@ -1,0 +1,14 @@
+"""R004 fixture: unit-suffix violations in power/time math."""
+
+
+def mixed_units(p_mw, e_mwh, t_h, t_s):
+    bad_sum = p_mw + e_mwh          # power + energy
+    bad_sub = t_h - t_s             # hours - seconds
+    if p_mw > e_mwh:                # comparing power to energy
+        bad_sum = bad_sum + 1.0
+    x_mwh = p_mw                    # assigning power into an energy name
+    bad_derived = p_mw + e_mwh * t_h    # mw + mwh*h
+    return bad_sum, bad_sub, x_mwh, bad_derived
+
+
+pods_s = 3.0    # ambiguous: pods-per-second or pods*seconds?

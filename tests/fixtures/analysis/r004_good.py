@@ -1,0 +1,10 @@
+"""R004 fixture: dimensionally consistent math — must NOT fire."""
+
+
+def consistent(p_mw, e_mwh, t_h, t_s, x_mbps, mw_per_mbps,
+               usd_per_kwh, e_kwh):
+    tot_mwh = e_mwh + p_mw * t_h            # energy + power*time
+    link_mw = p_mw + mw_per_mbps * x_mbps   # rate units cancel
+    cost_usd = usd_per_kwh * e_kwh          # per-kwh * kwh -> usd
+    dt_h = t_s / 3600.0                     # explicit conversion via literal
+    return tot_mwh, link_mw, cost_usd, dt_h

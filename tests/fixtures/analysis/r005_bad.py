@@ -1,0 +1,19 @@
+"""R005 fixture: cache-key hygiene violations."""
+import functools
+
+import numpy as np
+
+_EXEC_CACHE = {}
+
+
+def remember(arr, shape):
+    _EXEC_CACHE[[1, 2]] = arr               # list literal key: unhashable
+    hit = _EXEC_CACHE.get(np.asarray(shape))    # array-valued key
+    key = (id(arr), arr.tobytes())
+    _EXEC_CACHE[key] = arr      # id() is allocation-dependent; tobytes is O(n)
+    return hit
+
+
+@functools.lru_cache(maxsize=4)
+def cached_sum(xs: list):                   # unhashable parameter annotation
+    return sum(xs)

@@ -1,0 +1,21 @@
+"""R006 fixture: scan-body allocation and f64 drift."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+logs = []
+
+
+def step(carry, x):
+    carry = jnp.concatenate([carry, x[None]])   # growing alloc per step
+    logs.append(x)                              # python list grows under trace
+    return carry, x
+
+
+def run(xs):
+    return jax.lax.scan(step, jnp.zeros((1,)), xs)
+
+
+@jax.jit
+def upcast(x):
+    return x.astype(np.float64)     # f64 in a traced body (x64 drift)

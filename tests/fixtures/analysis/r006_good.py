@@ -1,0 +1,19 @@
+"""R006 fixture: allocation-free scan bodies, f32 math — must NOT fire."""
+import jax
+import jax.numpy as jnp
+
+
+def step(carry, x):
+    buf, i = carry
+    buf = jax.lax.dynamic_update_slice(buf, x[None], (i,))
+    return (buf, i + 1), x
+
+
+def run(xs):
+    n = xs.shape[0]
+    return jax.lax.scan(step, (jnp.zeros((n,)), 0), xs)
+
+
+@jax.jit
+def downcast(x):
+    return x.astype(jnp.float32)

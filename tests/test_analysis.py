@@ -1,0 +1,242 @@
+"""reprolint (repro.analysis) — rule fixtures, suppressions, baseline,
+CLI, and the tier-1 self-scan gate over src/repro."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.__main__ import main as lint_main
+from repro.analysis.engine import analyze
+from repro.analysis.findings import (SuppressionIndex, load_baseline,
+                                     write_baseline)
+from repro.analysis.rules import RULES, parse_unit
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+BASELINE = REPO / "analysis_baseline.json"
+ALL_RULES = ("R001", "R002", "R003", "R004", "R005", "R006")
+
+# every rule's bad fixture must produce at least this many findings —
+# pinned so a rule silently losing a detector fails loudly here
+MIN_BAD_FINDINGS = {"R001": 4, "R002": 5, "R003": 4,
+                    "R004": 6, "R005": 5, "R006": 3}
+
+
+def _scan(paths, rules=None, baseline=None):
+    return analyze([str(p) for p in paths], rules=rules,
+                   baseline_path=baseline)
+
+
+# ---------------------------------------------------------------- rules
+
+def test_registry_complete():
+    assert tuple(sorted(RULES)) == ALL_RULES
+    for rid, rule in RULES.items():
+        assert rule.id == rid
+        assert rule.title and rule.contract
+
+
+@pytest.mark.parametrize("rid", ALL_RULES)
+def test_bad_fixture_fires(rid):
+    res = _scan([FIXTURES / f"{rid.lower()}_bad.py"], rules=[rid])
+    hits = [f for _, f in res.new if f.rule == rid]
+    assert len(hits) >= MIN_BAD_FINDINGS[rid], \
+        [f.message for _, f in res.new]
+    assert res.exit_code == 1
+
+
+@pytest.mark.parametrize("rid", ALL_RULES)
+def test_good_fixture_silent(rid):
+    res = _scan([FIXTURES / f"{rid.lower()}_good.py"], rules=[rid])
+    assert res.new == [], [f.message for _, f in res.new]
+    assert res.exit_code == 0
+
+
+def test_good_fixtures_silent_under_all_rules():
+    # a good fixture must not trip a *different* rule either
+    res = _scan([FIXTURES / f"{r.lower()}_good.py" for r in ALL_RULES])
+    assert res.new == [], [f.message for _, f in res.new]
+
+
+# --------------------------------------------------------- unit algebra
+
+def test_unit_parse_decomposes_compound_suffixes():
+    assert parse_unit("p_mw") == {"mw": 1}
+    assert parse_unit("e_mwh") == {"mw": 1, "h": 1}
+    assert parse_unit("e_kwh") == {"kw": 1, "h": 1}
+    assert parse_unit("total") is None
+
+
+def test_unit_parse_keeps_negative_exponents():
+    # Counter arithmetic drops non-positive counts; the signed algebra
+    # must not, or per-unit rates collapse to their numerator
+    assert parse_unit("usd_per_kwh") == {"usd": 1, "kw": -1, "h": -1}
+    assert parse_unit("mw_per_mbps") == {"mw": 1, "mbps": -1}
+
+
+# ---------------------------------------------------------- suppression
+
+def test_same_line_suppression_matches(tmp_path):
+    f = tmp_path / "sup.py"
+    f.write_text("import numpy as np\n"
+                 "x = np.random.rand(4)  "
+                 "# repro: ignore[R003]: frozen fixture data\n")
+    res = _scan([f], rules=["R003"])
+    assert res.new == []
+    assert len(res.suppressed) == 1
+    assert res.suppressed[0][1] == "frozen fixture data"
+    assert res.unused_suppressions == []
+
+
+def test_standalone_comment_guards_next_source_line(tmp_path):
+    f = tmp_path / "sup.py"
+    f.write_text("import numpy as np\n"
+                 "# repro: ignore[R003]: deliberate legacy trace,\n"
+                 "# continued reason on a second comment line\n"
+                 "x = np.random.rand(4)\n")
+    res = _scan([f], rules=["R003"])
+    assert res.new == []
+    assert len(res.suppressed) == 1
+
+
+def test_suppression_without_reason_is_reported(tmp_path):
+    f = tmp_path / "sup.py"
+    f.write_text("import numpy as np\n"
+                 "x = np.random.rand(4)  # repro: ignore[R003]\n")
+    res = _scan([f], rules=["R003"])
+    rules_fired = sorted(f.rule for _, f in res.new)
+    assert rules_fired == ["R000", "R003"]   # reasonless comment + the
+    #                                          finding it failed to hide
+
+
+def test_unused_suppression_surfaces(tmp_path):
+    f = tmp_path / "sup.py"
+    f.write_text("x = 1  # repro: ignore[R003]: nothing fires here\n")
+    res = _scan([f], rules=["R003"])
+    assert res.new == []
+    assert len(res.unused_suppressions) == 1
+
+
+def test_suppression_is_rule_specific(tmp_path):
+    f = tmp_path / "sup.py"
+    f.write_text("import numpy as np\n"
+                 "x = np.random.rand(4)  "
+                 "# repro: ignore[R001]: wrong rule id\n")
+    res = _scan([f], rules=["R003"])
+    assert [f.rule for _, f in res.new] == ["R003"]
+
+
+# -------------------------------------------------------------- baseline
+
+def test_baseline_round_trip(tmp_path):
+    src = (FIXTURES / "r003_bad.py").read_text()
+    f = tmp_path / "mod.py"
+    f.write_text(src)
+    first = _scan([f], rules=["R003"])
+    n = len(first.new)
+    assert n >= MIN_BAD_FINDINGS["R003"]
+
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, [fi for _, fi in first.new])
+    assert len(load_baseline(bl)) == n
+
+    second = _scan([f], rules=["R003"], baseline=bl)
+    assert second.new == []
+    assert len(second.baselined) == n
+    assert second.exit_code == 0
+
+
+def test_baseline_survives_line_drift(tmp_path):
+    # fingerprints hash content, not line numbers: shifting the file
+    # down must not resurrect grandfathered findings
+    src = (FIXTURES / "r003_bad.py").read_text()
+    f = tmp_path / "mod.py"
+    f.write_text(src)
+    first = _scan([f], rules=["R003"])
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, [fi for _, fi in first.new])
+
+    f.write_text("# a new leading comment\n\n" + src)
+    shifted = _scan([f], rules=["R003"], baseline=bl)
+    assert shifted.new == []
+    assert len(shifted.baselined) == len(first.new)
+
+
+def test_baseline_does_not_hide_new_instances(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text("import numpy as np\n"
+                 "a = np.random.rand(4)\n")
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, [fi for _, fi in _scan([f], rules=["R003"]).new])
+
+    f.write_text("import numpy as np\n"
+                 "a = np.random.rand(4)\n"
+                 "b = np.random.standard_normal(4)\n")
+    res = _scan([f], rules=["R003"], baseline=bl)
+    assert len(res.baselined) == 1
+    assert len(res.new) == 1
+    assert res.exit_code == 1
+
+
+# ------------------------------------------------------------------ CLI
+
+def test_cli_json_format(capsys):
+    rc = lint_main([str(FIXTURES / "r003_bad.py"), "--rules=R003",
+                    "--no-baseline", "--format=json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1 and out["exit_code"] == 1
+    assert all(f["rule"] == "R003" for f in out["new"])
+    assert all(f["fingerprint"] for f in out["new"])
+
+
+def test_cli_github_format(capsys):
+    rc = lint_main([str(FIXTURES / "r004_bad.py"), "--rules=R004",
+                    "--no-baseline", "--format=github"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "::error file=" in out and "title=R004" in out
+
+
+def test_cli_fix_suggestions(capsys):
+    rc = lint_main([str(FIXTURES / "r003_bad.py"),
+                    str(FIXTURES / "r004_bad.py"),
+                    "--no-baseline", "--fix-suggestions"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "fix:" in out
+
+
+def test_cli_list_rules(capsys):
+    assert lint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ALL_RULES:
+        assert rid in out
+
+
+def test_cli_rejects_unknown_rule(capsys):
+    assert lint_main(["--rules=R999", str(FIXTURES)]) == 2
+
+
+# ------------------------------------------------- tier-1 self-scan gate
+
+def test_src_repro_is_lint_clean():
+    """The committed tree must carry zero unsuppressed, unbaselined
+    findings — this is the CI gate."""
+    res = _scan([REPO / "src" / "repro"], baseline=BASELINE)
+    assert res.new == [], "\n".join(
+        f"{f.path}:{f.line}: {f.rule} {f.message}" for _, f in res.new)
+    assert res.exit_code == 0
+    # every inline suppression must still be earning its keep
+    assert res.unused_suppressions == [], [
+        (s.comment_line, sorted(s.rules)) for s in res.unused_suppressions]
+
+
+def test_injected_bad_fixture_fails_the_gate():
+    """Acceptance check: the same invocation that passes on the
+    committed tree goes non-zero when any rule's bad fixture rides
+    along."""
+    bad = [FIXTURES / f"{r.lower()}_bad.py" for r in ALL_RULES]
+    res = _scan([REPO / "src" / "repro", *bad], baseline=BASELINE)
+    assert res.exit_code == 1
+    fired = {f.rule for _, f in res.new}
+    assert fired.issuperset(ALL_RULES), fired
