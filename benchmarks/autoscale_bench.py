@@ -1,0 +1,157 @@
+"""Stochastic fleet engine benchmark (core/montecarlo.py + autoscale.py).
+
+Times Monte Carlo population draws through the warm compiled fleet
+runner (the zero-retrace contract is *asserted*, not just reported)
+and prices the resulting diurnal curve dynamically — capacity lagging
+demand through spin-up latency and hysteresis — against the
+instantaneous autoscaled integral.
+
+Emits results/benchmarks/BENCH_autoscale.json and returns
+(rows, derived) for benchmarks/run.py.
+
+BENCH_autoscale.json schema (one JSON object):
+  n_users               int   users per Monte Carlo draw
+  n_draws               int   population draws through the warm runner
+  dt_s                  float integrator step
+  mc_s                  float wall time for the n_draws sweep
+                              (post-warmup: tables, scan, pricing)
+  draws_per_s           float n_draws / mc_s — the regression gate
+                              metric (>20% drop fails benchmarks/run.py)
+  retraces_after_first  int   fleet-scan traces during the timed sweep
+                              (MUST be 0: every draw reuses the warm
+                              executable)
+  survival_mean         float survival rate, mean across draws
+  survival_ci90         [lo, hi] 90% band across draws
+  autoscaled_usd        float $/day, instantaneous curve-follower
+                              (mean across draws)
+  dynamic_usd           float $/day with the default AutoscalerSpec
+                              (spin-up latency + hysteresis, booting
+                              pods billed; mean across draws)
+  dynamic_gap_pct       float dynamic-vs-instantaneous $/day gap — the
+                              cost of real controller lag
+  dropped_stream_hours  float QoS penalty: stream-hours dropped while
+                              the morning ramp outruns spin-up (mean)
+  spinup_sweep          obj   spinup_h -> dropped stream-hours on the
+                              mean curve (monotone to 0 at 0 latency)
+
+    PYTHONPATH=src python benchmarks/autoscale_bench.py
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+
+BENCH_DT_S = 120.0
+BENCH_USERS = 256
+BENCH_DRAWS = 8
+FLEET_SIZE = 1e6
+
+
+def run():
+    import numpy as np
+    from repro.core import fleet, montecarlo, offload
+    from repro.core.autoscale import INSTANT, AutoscalerSpec
+
+    scaler = AutoscalerSpec()
+    # warm: archetype compile + fleet-scan trace + autoscale trace
+    montecarlo.fleet_distribution(
+        fleet.DEFAULT_POPULATION, BENCH_USERS, n_draws=1, key=0,
+        dt_s=BENCH_DT_S, fleet_size=FLEET_SIZE, autoscaler=scaler)
+
+    t0 = fleet.FLEET_STATS["traces"]
+    tic = time.perf_counter()
+    dist = montecarlo.fleet_distribution(
+        fleet.DEFAULT_POPULATION, BENCH_USERS, n_draws=BENCH_DRAWS,
+        key=1, dt_s=BENCH_DT_S, fleet_size=FLEET_SIZE,
+        autoscaler=scaler)
+    mc_s = time.perf_counter() - tic
+    retraces = fleet.FLEET_STATS["traces"] - t0
+    assert retraces == 0, f"MC sweep retraced the fleet scan {retraces}x"
+
+    sv, cost = dist.survival_rate(), dist.cost()
+    auto_usd = cost["autoscaled_usd"]["mean"]
+    dyn_usd = cost["dynamic_usd"]["mean"]
+
+    # latency sweep on the mean curve: dropped QoS must be monotone in
+    # spin-up and vanish at zero latency (the parity limit)
+    mean_curve = dist.curve_draws.mean(axis=0)
+    mean_streams = dist.stream_curve_draws.mean(axis=0).sum(axis=1)
+    sweep = {}
+    for spinup in (2.0, 1.0, 0.5, 0.25, 0.0):
+        plan = offload.curve_cost(
+            mean_curve.sum(axis=1), dist.bin_hours,
+            autoscaler=AutoscalerSpec(spinup_h=spinup),
+            stream_curve=mean_streams)
+        sweep[f"{spinup:g}h"] = round(plan["dropped_stream_hours"], 1)
+    parity = offload.curve_cost(mean_curve.sum(axis=1),
+                                dist.bin_hours, autoscaler=INSTANT)
+    assert np.isclose(parity["dynamic"]["usd"],
+                      parity["autoscaled"]["usd"], rtol=1e-4)
+
+    result = {
+        "n_users": BENCH_USERS,
+        "n_draws": BENCH_DRAWS,
+        "dt_s": BENCH_DT_S,
+        "mc_s": round(mc_s, 3),
+        "draws_per_s": round(BENCH_DRAWS / mc_s, 2),
+        "retraces_after_first": retraces,
+        "survival_mean": round(sv["mean"], 4),
+        "survival_ci90": [round(sv["lo"], 4), round(sv["hi"], 4)],
+        "autoscaled_usd": round(auto_usd, 0),
+        "dynamic_usd": round(dyn_usd, 0),
+        "dynamic_gap_pct": round(100.0 * (dyn_usd / auto_usd - 1.0), 1),
+        "dropped_stream_hours": round(
+            cost["dropped_stream_hours"]["mean"], 1),
+        "spinup_sweep": sweep,
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "BENCH_autoscale.json").write_text(json.dumps(result,
+                                                         indent=1))
+    derived = (f"{BENCH_DRAWS}x{BENCH_USERS}users "
+               f"{result['draws_per_s']}draws/s retrace=0 "
+               f"gap={result['dynamic_gap_pct']}% "
+               f"dropped={result['dropped_stream_hours']}sh")
+    return [result], derived
+
+
+def smoke(n_users: int = 32, n_draws: int = 3):
+    """Tiny MC sweep + dynamic pricing: pins the zero-retrace contract,
+    a nonzero dropped-stream-hours penalty under the default spec, and
+    the zero-latency parity — inside the tier-1 budget.  Writes
+    nothing."""
+    import numpy as np
+    from repro.core import fleet, montecarlo, offload
+    from repro.core.autoscale import INSTANT, AutoscalerSpec
+
+    assert n_users <= 64
+    montecarlo.fleet_distribution(fleet.DEFAULT_POPULATION, n_users,
+                                  n_draws=1, key=0, dt_s=BENCH_DT_S)
+    t0 = fleet.FLEET_STATS["traces"]
+    dist = montecarlo.fleet_distribution(
+        fleet.DEFAULT_POPULATION, n_users, n_draws=n_draws, key=1,
+        dt_s=BENCH_DT_S, autoscaler=AutoscalerSpec())
+    retraces = fleet.FLEET_STATS["traces"] - t0
+    assert retraces == 0, f"smoke sweep retraced {retraces}x"
+    dropped = dist.cost()["dropped_stream_hours"]["mean"]
+    assert dropped > 0.0, "default mix should drop work on the ramp"
+    curve = dist.curve_draws.mean(axis=0).sum(axis=1)
+    parity = offload.curve_cost(curve, dist.bin_hours,
+                                autoscaler=INSTANT)
+    assert np.isclose(parity["dynamic"]["usd"],
+                      parity["autoscaled"]["usd"], rtol=1e-4)
+    assert parity["dropped_pod_hours"] == 0.0
+    sv = dist.survival_rate()
+    return ([{"survival_mean": sv["mean"]}],
+            f"{n_draws}x{n_users}users retrace=0 "
+            f"dropped={dropped:.1f}sh surv={sv['mean']:.2f} parity_ok")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    rows, derived = run()
+    print((OUT / "BENCH_autoscale.json").read_text())
+    print(derived)

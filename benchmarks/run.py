@@ -35,6 +35,7 @@ GATED_METRICS = {
     "BENCH_grad.json": (("calib_speedup", "higher"),),
     "BENCH_fleet.json": (("speedup", "higher"),),
     "BENCH_twin.json": (("warm_query_ms", "lower"),),
+    "BENCH_autoscale.json": (("draws_per_s", "higher"),),
 }
 REGRESSION_TOLERANCE = 0.20
 
@@ -114,14 +115,16 @@ def main(argv=None) -> int:
                     help="16-point joint grid only; no baselines, no gate")
     args = ap.parse_args(argv)
 
-    from . import daysim_bench, dse_bench, fleet_bench, grad_bench, \
-        joint_bench, kernel_benches, paper_benches, roofline, twin_bench
+    from . import autoscale_bench, daysim_bench, dse_bench, fleet_bench, \
+        grad_bench, joint_bench, kernel_benches, paper_benches, roofline, \
+        twin_bench
     if args.smoke:
         benches = [("joint_smoke", joint_bench.smoke),
                    ("backend_smoke", roofline.backend_smoke),
                    ("daysim_smoke", daysim_bench.smoke),
                    ("grad_smoke", grad_bench.smoke),
                    ("fleet_smoke", fleet_bench.smoke),
+                   ("autoscale_smoke", autoscale_bench.smoke),
                    ("twin_smoke", twin_bench.smoke)]
     else:
         benches = [
@@ -131,6 +134,7 @@ def main(argv=None) -> int:
             ("twin", twin_bench.run),
             ("grad_descent", grad_bench.run),
             ("fleet", fleet_bench.run),
+            ("autoscale", autoscale_bench.run),
             ("backend_roofline", roofline.backend_bench),
             ("table2_sensor_rates", paper_benches.table2_sensor_rates),
             ("fig3_power_composition", paper_benches.fig3_power_composition),

@@ -1,0 +1,229 @@
+"""Autoscaler dynamics: backend capacity that LAGS the diurnal curve.
+
+`offload.curve_cost`'s "autoscaled" pricing integrates the demand curve
+directly — an idealized autoscaler with zero reaction time.  Real
+fleets boot pods with minutes of spin-up latency, keep headroom via a
+target utilization, and hold a scale-down hysteresis band so capacity
+doesn't chatter around a noisy plateau.  `AutoscalerSpec` declares
+those dynamics as JSON-round-trip data and `simulate` integrates them
+through ONE `jax.lax.scan` over the (substep-resampled) diurnal curve:
+
+  * launches enter a fixed-length boot pipeline and only serve after
+    `spinup_h` (booting pods are still *billed* — you pay from launch);
+  * desired capacity is demand over `target_utilization`, clipped to
+    `[min_pods, max_pods]`;
+  * capacity above the hysteresis band scales down immediately
+    (deprovisioning is cheap); inside the band it holds, so capacity
+    never oscillates on demand wiggles smaller than the band — the
+    chatter-free property tests/test_autoscale.py pins;
+  * served work is `min(demand, capacity)`; the shortfall while the
+    morning ramp outruns spin-up becomes **dropped work** — dropped
+    pod-hours, and, against the fleet's active-stream curve, dropped
+    **stream-hours**: the QoS objective `dse.fleet_pareto` trades
+    against $/day.
+
+As `spinup_h -> 0` (with `target_utilization=1`, `down_band=0`) the
+provisioned pod-hours converge to the instantaneous curve integral and
+dropped work to zero, so dynamic pricing degenerates to
+`offload.curve_cost`'s autoscaled figure — pinned by the parity test.
+
+The scan runner is jitted once per boot-pipeline length
+(`lru_cache`), so latency/utilization sweeps re-use one executable;
+all reductions happen on the host in float64 from the per-substep
+trajectory (the scan itself stays float32 like the fleet scan).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class AutoscalerSpec:
+    """Declarative autoscaler dynamics.
+
+    `target_utilization` is the demand fraction of capacity the
+    controller aims for (headroom = 1/util - 1); `spinup_h` the
+    launch-to-serving boot latency; `down_band` the scale-down
+    hysteresis fraction (capacity holds while demand/util stays within
+    `[cap * (1 - down_band), cap]`); `min_pods`/`max_pods` clamp the
+    fleet (`max_pods=None` means uncapped); `substeps_per_bin` the
+    scan resolution inside each curve bin."""
+    name: str = "default"
+    target_utilization: float = 0.75
+    spinup_h: float = 0.5
+    down_band: float = 0.10
+    min_pods: float = 0.0
+    max_pods: float | None = None
+    substeps_per_bin: int = 12
+
+    def __post_init__(self):
+        if not 0.0 < self.target_utilization <= 1.0:
+            raise ValueError(f"target_utilization must be in (0, 1], "
+                             f"got {self.target_utilization}")
+        if self.spinup_h < 0.0:
+            raise ValueError(f"spinup_h must be >= 0, got "
+                             f"{self.spinup_h}")
+        if not 0.0 <= self.down_band < 1.0:
+            raise ValueError(f"down_band must be in [0, 1), got "
+                             f"{self.down_band}")
+        if self.min_pods < 0.0:
+            raise ValueError(f"min_pods must be >= 0, got "
+                             f"{self.min_pods}")
+        if self.max_pods is not None and self.max_pods < self.min_pods:
+            raise ValueError(f"max_pods={self.max_pods} < "
+                             f"min_pods={self.min_pods}")
+        if not (isinstance(self.substeps_per_bin, int)
+                and self.substeps_per_bin >= 1):
+            raise ValueError(f"substeps_per_bin must be an int >= 1, "
+                             f"got {self.substeps_per_bin!r}")
+
+    def to_dict(self) -> dict:
+        return {"name": self.name,
+                "target_utilization": self.target_utilization,
+                "spinup_h": self.spinup_h,
+                "down_band": self.down_band,
+                "min_pods": self.min_pods,
+                "max_pods": self.max_pods,
+                "substeps_per_bin": self.substeps_per_bin}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AutoscalerSpec":
+        return cls(
+            d.get("name", "default"),
+            float(d.get("target_utilization", 0.75)),
+            float(d.get("spinup_h", 0.5)),
+            float(d.get("down_band", 0.10)),
+            float(d.get("min_pods", 0.0)),
+            None if d.get("max_pods") is None else float(d["max_pods"]),
+            int(d.get("substeps_per_bin", 12)))
+
+
+# one idealized spec shared by the parity tests and benchmarks: zero
+# latency, no headroom, no band — dynamic pricing must equal the
+# instantaneous curve integral under it
+INSTANT = AutoscalerSpec("instant", target_utilization=1.0,
+                         spinup_h=0.0, down_band=0.0)
+
+
+@functools.lru_cache(maxsize=32)
+def _scale_runner(n_boot: int):
+    """Jitted capacity scan for one boot-pipeline length.
+
+    The pipeline length is the only shape-bearing knob, so latency
+    sweeps at a fixed `substeps_per_bin` compile once per distinct
+    `round(spinup_h / dt_h)`; utilization/band/clamp changes are traced
+    values and never retrace."""
+    def run(demand, params):
+        def body(carry, d):
+            cap, boot = carry
+            if n_boot:                  # pods finishing boot come online
+                cap = cap + boot[0]
+                boot = jnp.roll(boot, -1).at[-1].set(0.0)
+            booting = boot.sum()
+            desired = jnp.clip(d / params["util"], params["min_pods"],
+                               params["max_pods"])
+            launch = jnp.maximum(desired - (cap + booting), 0.0)
+            if n_boot:
+                boot = boot.at[-1].add(launch)
+            else:
+                cap = cap + launch
+            down = desired < cap * (1.0 - params["band"])
+            cap = jnp.where(down,
+                            jnp.maximum(desired, params["min_pods"]),
+                            cap)
+            served = jnp.minimum(d, cap)
+            out = {"cap": cap, "booting": boot.sum(),
+                   "served": served, "dropped": d - served,
+                   "launch": launch,
+                   "down": down.astype(jnp.float32)}
+            return (cap, boot), out
+
+        # start in steady state at the first substep's demand: the
+        # fleet was sized correctly at midnight, so dropped work comes
+        # from ramps the controller cannot follow, not a cold start
+        cap0 = jnp.clip(demand[0] / params["util"], params["min_pods"],
+                        params["max_pods"])
+        boot0 = jnp.zeros(n_boot, jnp.float32)
+        _, traj = jax.lax.scan(body, (cap0, boot0), demand)
+        return traj
+
+    return jax.jit(run)
+
+
+def _validate_curve(curve, bin_hours: float) -> np.ndarray:
+    c = np.asarray(curve, np.float64)
+    if c.ndim != 1 or c.size == 0:
+        raise ValueError(f"expected a (B,) demand curve, got shape "
+                         f"{np.shape(curve)}")
+    if float(c.min()) < 0.0:
+        raise ValueError("curve has negative pods")
+    if not math.isclose(bin_hours * c.size, 24.0, rel_tol=1e-9):
+        raise ValueError(f"curve covers {bin_hours * c.size:g} h "
+                         f"({c.size} bins x {bin_hours:g} h), expected "
+                         f"a 24 h diurnal day")
+    return c
+
+
+def simulate(spec: AutoscalerSpec, curve, bin_hours: float = 1.0,
+             stream_curve=None) -> dict:
+    """Integrate the autoscaler over one diurnal day.
+
+    `curve` is the (B,) average-pods-per-bin demand
+    (`FleetReport.curve_total`); `stream_curve` the matching
+    concurrently-live stream counts (`FleetReport.stream_curve_total`)
+    used to convert the dropped demand fraction into stream-hours.
+    Demand is held piecewise-constant across `spec.substeps_per_bin`
+    substeps, so ramps happen at bin edges and a boot latency longer
+    than one substep visibly lags them.
+
+    Returns provisioned/served/dropped pod-hours (provisioned bills
+    online + booting pods), the per-bin mean capacity curve, dropped
+    stream-hours (None without `stream_curve`), and the effective
+    spin-up latency after rounding to whole substeps."""
+    c = _validate_curve(curve, bin_hours)
+    dt_h = bin_hours / spec.substeps_per_bin
+    n_boot = int(round(spec.spinup_h / dt_h))
+    demand = np.repeat(c, spec.substeps_per_bin).astype(np.float32)
+    params = {
+        "util": jnp.float32(spec.target_utilization),
+        "band": jnp.float32(spec.down_band),
+        "min_pods": jnp.float32(spec.min_pods),
+        "max_pods": jnp.float32(np.inf if spec.max_pods is None
+                                else spec.max_pods),
+    }
+    traj = jax.block_until_ready(
+        _scale_runner(n_boot)(jnp.asarray(demand), params))
+    traj = {k: np.asarray(v, np.float64) for k, v in traj.items()}
+
+    billed = traj["cap"] + traj["booting"]
+    dropped_frac = np.divide(traj["dropped"], demand,
+                             out=np.zeros_like(traj["dropped"]),
+                             where=demand > 0)
+    out = {
+        "spec": spec.to_dict(),
+        "effective_spinup_h": n_boot * dt_h,
+        "capacity_curve": traj["cap"].reshape(
+            c.size, spec.substeps_per_bin).mean(axis=1),
+        "peak_capacity_pods": float(billed.max()),
+        "provisioned_pod_hours": float(billed.sum() * dt_h),
+        "served_pod_hours": float(traj["served"].sum() * dt_h),
+        "dropped_pod_hours": float(traj["dropped"].sum() * dt_h),
+        "dropped_stream_hours": None,
+        "launched_pods": float(traj["launch"].sum()),
+        "scale_down_events": int(traj["down"].sum()),
+    }
+    if stream_curve is not None:
+        s = np.asarray(stream_curve, np.float64)
+        if s.shape != c.shape:
+            raise ValueError(f"stream_curve shape {s.shape} != demand "
+                             f"curve shape {c.shape}")
+        streams_sub = np.repeat(s, spec.substeps_per_bin)
+        out["dropped_stream_hours"] = float(
+            (dropped_frac * streams_sub).sum() * dt_h)
+    return out

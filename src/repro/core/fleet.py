@@ -38,6 +38,15 @@ ratio, and timezone-spreading experiments that flatten the peak.
 `reference_fleet` is the per-user pure-Python oracle (a loop over
 `daysim.reference_integrate`) — parity-tested in tests/test_fleet.py:
 survival flags bit-identical, curve bins to 1e-6.
+
+Stochastic-fleet hooks (see `core.montecarlo` / `core.autoscale`):
+`FLEET_STATS["traces"]` counts compilations of the fleet scan so Monte
+Carlo sweeps can pin zero retraces after the first draw; the scan also
+accumulates an **active-stream curve** (average concurrent streams per
+UTC bin — the denominator of the dropped-stream-hours QoS objective);
+and `fleet_day(n_days=...)` integrates a multi-day horizon where SoC
+carries between days with overnight dock charging while thermal state,
+throttle triggers and the shutdown latch reset each morning.
 """
 from __future__ import annotations
 
@@ -54,6 +63,18 @@ from .daysim import (DaySchedule, STREAMS, ThrottlePolicy, battery_for,
                      get_policy, get_schedule, puck_for)
 
 DEFAULT_N_BINS = 24
+
+# execution-shape telemetry: how many times the fleet scan was traced.
+# Monte Carlo draws share population shapes, so every draw after the
+# first must hit the warm `_fleet_runner` executable — tests pin this
+# counter across draws exactly like `daysim.EXEC_STATS["traces"]`.
+FLEET_STATS = {"traces": 0}
+
+# overnight dock power (mW) for multi-day horizons: a 0.5 A / 5 V phone
+# charger — large enough that a typical overnight gap fully recharges
+# the shipped SKUs, so `n_days > 1` defaults to independent days unless
+# the caller models a worse charger
+DEFAULT_OVERNIGHT_MW = 2500.0
 
 
 # ---------------------------------------------------------------------------
@@ -367,11 +388,21 @@ def _bin_tables(spec: PopulationSpec, pop: Population, dt_s: float,
     a pure function of (wake_hour - tz), which takes only a handful of
     distinct values, so the (T, J) table stays tiny at any N and the
     HOST computes it once in float64 — the device and the pure-Python
-    oracle index the same integers, no float-divergence risk."""
-    wake = np.asarray([a.wake_hour for a in spec.archetypes],
-                      np.float64)[pop.archetype]
-    off = np.mod(wake - pop.tz_hours, 24.0)
-    uniq, joff = np.unique(off, return_inverse=True)
+    oracle index the same integers, no float-divergence risk.
+
+    The offset table enumerates every archetype x timezone combination
+    of the SPEC (not just the sampled ones), so the (T, J) shape — and
+    therefore the compiled fleet program — is identical across Monte
+    Carlo draws: a small draw that happens to miss a timezone must not
+    retrace the warm runner."""
+    wake_a = np.asarray([a.wake_hour for a in spec.archetypes],
+                        np.float64)
+    tz_a = np.asarray(spec.tz_hours, np.float64)
+    uniq = np.unique(np.mod(wake_a[:, None] - tz_a[None, :], 24.0))
+    off = np.mod(wake_a[pop.archetype] - pop.tz_hours, 24.0)
+    # exact match: `off` recomputes the same float64 subtraction the
+    # table was built from, so searchsorted lands on the entry itself
+    joff = np.searchsorted(uniq, off)
     t_h = np.arange(n_steps, dtype=np.float64) * (dt_s / 3600.0)
     bins = np.floor(np.mod(t_h[:, None] + uniq[None, :], 24.0)
                     * (n_bins / 24.0)).astype(np.int32)
@@ -412,29 +443,39 @@ def _kahan_add(total, comp, inc):
 
 
 def _integrate_fleet(user: dict, const_u: dict, xs: dict,
-                     n_bins: int) -> tuple:
-    """Scan the whole (local shard of the) population through one day.
+                     n_bins: int, n_days: int = 1) -> tuple:
+    """Scan the whole (local shard of the) population through the
+    horizon: an outer `lax.scan` over days, an inner scan over steps.
 
     Per step: gather each user's archetype tables, apply the climate
     offset, advance `daysim._step_math` vmapped across users, and
     accumulate (a) the per-stream diurnal load curve into UTC bins via
-    segment-sum and (b) per-user survival/peak/pod-hour reductions —
-    nothing (T, N)-shaped is ever materialized."""
+    segment-sum, (b) the active-stream curve (how many streams are
+    concurrently live — the dropped-work QoS denominator) and (c)
+    per-user survival/peak/pod-hour reductions — nothing (T, N)-shaped
+    is ever materialized.  Between days SoC carries with the overnight
+    dock charge (`user["night_dsoc"]`, clipped at full) while thermal
+    state returns to ambient and throttle/shutdown latches reset; the
+    day-0 "charge" lands on a full battery, so `n_days=1` reproduces
+    the single-day program exactly."""
+    # repro: ignore[R002]: trace-counter by design — it MUST run at
+    # trace time only; the Monte Carlo zero-retrace tests pin it flat
+    FLEET_STATS["traces"] += 1
     arch = user["arch"]
     n = arch.shape[0]
     amb0 = xs["amb"][0][arch] + user["amb_off"]
     one = jnp.ones(n, jnp.float32)
     zero = jnp.zeros(n, jnp.float32)
-    state = (one, one, amb0, amb0, amb0, amb0, zero, zero, zero)
     n_streams = xs["pods_stream"].shape[2]
     curve0 = jnp.zeros((n_bins, n_streams), jnp.float32)
     acc0 = {"curve": curve0, "curve_c": curve0,
+            "streams": curve0, "streams_c": curve0,
             "first": zero, "hit": jnp.zeros(n, bool),
             "peak": jnp.full(n, -jnp.inf, jnp.float32),
             "ph": zero, "ph_c": zero}
 
     def step(carry, x):
-        state, acc = carry
+        state, acc, t_off = carry
         xu = {
             "mw": x["mw"][arch], "mw_p": x["mw_p"][arch],
             "pods": x["pods"][arch], "amult": user["amult"],
@@ -446,17 +487,23 @@ def _integrate_fleet(user: dict, const_u: dict, xs: dict,
                               in_axes=(0, 0, 0))(state, xu, const_u)
         lf = out["level"].astype(jnp.float32)
         ps = jax.vmap(design.take_linear)(x["pods_stream"][arch], lf)  # (N, S)
-        pods_stream = (out["act"] * out["alive"])[:, None] * ps
-        binc = jax.ops.segment_sum(pods_stream * user["w"][:, None],
-                                   x["bins"][user["joff"]],
+        aa = (out["act"] * out["alive"])[:, None] * user["w"][:, None]
+        pods_stream = aa * ps
+        ubins = x["bins"][user["joff"]]
+        binc = jax.ops.segment_sum(pods_stream, ubins,
                                    num_segments=n_bins)
+        live = aa * (ps > 0.0)          # streams concurrently active
+        sbinc = jax.ops.segment_sum(live, ubins, num_segments=n_bins)
         curve, curve_c = _kahan_add(acc["curve"], acc["curve_c"], binc)
+        streams, streams_c = _kahan_add(acc["streams"],
+                                        acc["streams_c"], sbinc)
         ph, ph_c = _kahan_add(acc["ph"], acc["ph_c"], out["pods"])
         dead = (jnp.minimum(out["soc"], out["soc_p"]) <= 0.0) \
             | (out["shut"] > 0.5)
         acc = {
             "curve": curve, "curve_c": curve_c,
-            "first": jnp.where(dead & ~acc["hit"], x["t1"],
+            "streams": streams, "streams_c": streams_c,
+            "first": jnp.where(dead & ~acc["hit"], t_off + x["t1"],
                                acc["first"]),
             "hit": acc["hit"] | dead,
             "peak": jnp.maximum(acc["peak"],
@@ -464,23 +511,42 @@ def _integrate_fleet(user: dict, const_u: dict, xs: dict,
                                           out["t_skin"], -jnp.inf)),
             "ph": ph, "ph_c": ph_c,
         }
-        return (state, acc), None
+        return (state, acc, t_off), None
 
-    (state, acc), _ = jax.lax.scan(step, (state, acc0), xs)
-    per_user = {"end_soc": state[0], "end_soc_p": state[1],
-                "shut": state[8], "first": acc["first"],
+    def day(carry, d):
+        soc, soc_p, shut_any, acc = carry
+        # overnight dock charge (no-op on day 0: min(1 + dsoc, 1) == 1);
+        # thermal state, throttle triggers and the shutdown latch reset
+        # with the morning reboot, so day dynamics stay bit-compatible
+        # with the single-day integrator
+        soc = jnp.minimum(soc + user["night_dsoc"], 1.0)
+        soc_p = jnp.minimum(soc_p + user["night_dsoc_p"], 1.0)
+        state = (soc, soc_p, amb0, amb0, amb0, amb0, zero, zero, zero)
+        # death times are counted in per-user WORN steps, so the offset
+        # of day d is d * (that user's valid steps), not the padded T
+        t_off = user["dsteps"] * d
+        (state, acc, _), _ = jax.lax.scan(step, (state, acc, t_off), xs)
+        shut_any = jnp.maximum(shut_any, state[8])
+        return (state[0], state[1], shut_any, acc), state[8]
+
+    days = jnp.arange(n_days, dtype=jnp.float32)
+    (soc, soc_p, shut_any, acc), _ = jax.lax.scan(
+        day, (one, one, zero, acc0), days)
+    per_user = {"end_soc": soc, "end_soc_p": soc_p,
+                "shut": shut_any, "first": acc["first"],
                 "hit": acc["hit"], "peak": acc["peak"],
                 "pod_steps": acc["ph"]}
-    return per_user, acc["curve"]
+    return per_user, {"pods": acc["curve"], "streams": acc["streams"]}
 
 
 @functools.lru_cache(maxsize=8)
-def _fleet_runner(n_shards: int, n_bins: int):
+def _fleet_runner(n_shards: int, n_bins: int, n_days: int = 1):
     """Jit-compiled (and shard-mapped, when the mesh has >1 device)
-    fleet integrator.  Cached per (mesh size, bin count) so repeat
-    calls — benchmarks, Pareto sweeps — reuse the compiled program."""
+    fleet integrator.  Cached per (mesh size, bin count, horizon) so
+    repeat calls — benchmarks, Pareto sweeps, Monte Carlo draws —
+    reuse the compiled program (`FLEET_STATS["traces"]` stays flat)."""
     def run(user, const_u, xs):
-        return _integrate_fleet(user, const_u, xs, n_bins)
+        return _integrate_fleet(user, const_u, xs, n_bins, n_days)
 
     if n_shards == 1:
         return jax.jit(run)
@@ -489,8 +555,9 @@ def _fleet_runner(n_shards: int, n_bins: int):
     mesh = compat.make_mesh((n_shards,), ("users",))
 
     def run_psum(user, const_u, xs):
-        per_user, curve = _integrate_fleet(user, const_u, xs, n_bins)
-        return per_user, jax.lax.psum(curve, "users")
+        per_user, curves = _integrate_fleet(user, const_u, xs, n_bins,
+                                            n_days)
+        return per_user, jax.lax.psum(curves, "users")
 
     return jax.jit(compat.shard_map(
         run_psum, mesh=mesh,
@@ -518,16 +585,24 @@ def _pad_users(arrs: dict, n_shards: int) -> tuple:
 
 @dataclass
 class FleetReport:
-    """One simulated fleet-day.  `curve` is the diurnal backend load —
-    average pods active per UTC hour-of-day bin, per stream (in
-    `streams` order), scaled to `fleet_size` users; per-user arrays
-    share the sampled population's leading dim N."""
+    """One simulated fleet horizon (a day by default).  `curve` is the
+    diurnal backend load — average pods active per UTC hour-of-day bin
+    (the time integral of instantaneous pod demand divided by the bin
+    width, averaged across horizon days), per stream (in `streams`
+    order), scaled to `fleet_size` users, so
+    ``curve_total.sum() * bin_hours`` IS pod-hours per day.
+    `stream_curve` is the matching average count of concurrently-live
+    streams per bin — the exposure an under-provisioned autoscaler
+    drops (see `core.autoscale`).  Per-user arrays share the sampled
+    population's leading dim N; for `n_days > 1` horizons,
+    `time_to_empty_h` counts WORN hours until the first death and
+    `shutdown` flags a thermal hard-kill on any day."""
     population: Population
     streams: tuple
     curve: np.ndarray               # (n_bins, S)
     dt_s: float
     fleet_size: float
-    day_hours: np.ndarray           # (N,)
+    day_hours: np.ndarray           # (N,) whole-horizon worn hours
     time_to_empty_h: np.ndarray     # (N,)
     peak_skin_c: np.ndarray         # (N,)
     end_soc: np.ndarray             # (N,)
@@ -535,6 +610,8 @@ class FleetReport:
     pod_hours: np.ndarray           # (N,) per-user backend demand
     skin_limit_c: float = 43.0
     n_shards: int = 1
+    stream_curve: np.ndarray | None = None   # (n_bins, S)
+    n_days: int = 1
 
     def __len__(self) -> int:
         return len(self.population)
@@ -543,6 +620,12 @@ class FleetReport:
     def curve_total(self) -> np.ndarray:
         """(n_bins,) pods-vs-hour-of-day summed over streams."""
         return self.curve.sum(axis=1)
+
+    @property
+    def stream_curve_total(self) -> np.ndarray | None:
+        """(n_bins,) concurrently-live streams, summed over kinds."""
+        return (None if self.stream_curve is None
+                else self.stream_curve.sum(axis=1))
 
     def survives(self) -> np.ndarray:
         """(N,) bool, same contract as `DayReport.survives`: full day on
@@ -581,11 +664,18 @@ class FleetReport:
             })
         return rows
 
-    def capacity_plan(self) -> dict:
+    def capacity_plan(self, autoscaler=None) -> dict:
         """Autoscaled vs peak-provisioned pricing of the diurnal curve
-        (see `offload.curve_cost`), plus fleet survival headlines."""
+        (see `offload.curve_cost`), plus fleet survival headlines.
+
+        Pass an `autoscale.AutoscalerSpec` to also price the *dynamic*
+        fleet — capacity that lags demand through spin-up latency and
+        hysteresis — including the dropped-stream-hours QoS penalty
+        against this report's active-stream curve."""
         out = offload.curve_cost(self.curve_total,
-                                 bin_hours=24.0 / self.curve.shape[0])
+                                 bin_hours=24.0 / self.curve.shape[0],
+                                 autoscaler=autoscaler,
+                                 stream_curve=self.stream_curve_total)
         out["fleet_size"] = self.fleet_size
         out["survival_rate"] = round(self.survival_rate(), 4)
         out["tte_quantiles_h"] = self.tte_quantiles()
@@ -604,6 +694,8 @@ def fleet_day(population, n_users: int | None = None, key=0, *,
               standby_mw: float = daysim.DEFAULT_STANDBY_MW,
               shutdown_c: float = daysim.DEFAULT_SHUTDOWN_C,
               skin_limit_c: float = 43.0,
+              n_days: int = 1,
+              overnight_charge_mw: float = DEFAULT_OVERNIGHT_MW,
               theta=None, results_dir=None) -> FleetReport:
     """Integrate a whole population's day and aggregate the diurnal
     backend load curve.
@@ -617,7 +709,17 @@ def fleet_day(population, n_users: int | None = None, key=0, *,
     backend demand is user-additive).  Keep `dt_s` under roughly twice
     the SoC-node thermal time constant (~126 s for the default
     `ThermalSpec`) — the explicit-Euler thermal step goes unstable
-    beyond it, exactly as in `daysim.simulate`."""
+    beyond it, exactly as in `daysim.simulate`.
+
+    `n_days > 1` integrates a multi-day horizon in the SAME compiled
+    program (an outer scan over days): each user's SoC carries between
+    days topped up by `overnight_charge_mw` on the dock for their
+    schedule's off-wrist gap (24 h minus worn hours), thermal state
+    and throttle/shutdown latches reset each morning, and the returned
+    curve is the per-day average.  The default dock power fully
+    recharges the shipped SKUs overnight; lower it to model users who
+    skip or trickle the charge and watch survival decay across the
+    week."""
     if isinstance(population, PopulationSpec):
         if n_users is None:
             raise ValueError("pass n_users when sampling from a "
@@ -635,6 +737,11 @@ def fleet_day(population, n_users: int | None = None, key=0, *,
     if n_shards > jax.local_device_count():
         raise ValueError(f"n_shards={n_shards} exceeds the "
                          f"{jax.local_device_count()} local devices")
+    if not (isinstance(n_days, int) and n_days >= 1):
+        raise ValueError(f"n_days must be an int >= 1, got {n_days!r}")
+    if overnight_charge_mw < 0.0:
+        raise ValueError(f"overnight_charge_mw must be >= 0, got "
+                         f"{overnight_charge_mw}")
 
     combos = _archetype_combos(spec, theta, results_dir)
     xs, tbs = _stack_archetype_tables(spec, combos, dt_s, standby_mw,
@@ -644,6 +751,22 @@ def fleet_day(population, n_users: int | None = None, key=0, *,
     xs["bins"] = bins
     const_u = _user_const(spec, combos, tbs, pop, dt_s)
 
+    h = dt_s / 3600.0
+    day_steps = np.asarray([tb["valid"].sum() for tb in tbs],
+                           np.float64)[pop.archetype]
+    # overnight dock energy -> SoC fraction, per node: charge power x
+    # the off-wrist gap over effective (age-derated) capacity, all in
+    # float64 like `_user_const`'s coefficients
+    gap_h = np.maximum(24.0 - day_steps * h, 0.0)
+    cap = np.asarray([cb.battery.capacity_mwh for cb in combos],
+                     np.float64)[pop.archetype]
+    cap_eff = cap * (1.0 - pop.fade)
+    cap_p = np.asarray(
+        [cb.puck.battery.capacity_mwh if cb.puck is not None
+         else cb.battery.capacity_mwh for cb in combos],
+        np.float64)[pop.archetype]
+    night = overnight_charge_mw * gap_h
+
     amult = np.stack([tb["act_mult"] for tb in tbs])    # (A, L)
     user = {
         "arch": pop.archetype.astype(np.int32),
@@ -651,6 +774,9 @@ def fleet_day(population, n_users: int | None = None, key=0, *,
         "joff": joff,
         "w": np.ones(n, np.float32),
         "amult": amult[pop.archetype],
+        "night_dsoc": (night / cap_eff).astype(np.float32),
+        "night_dsoc_p": (night / cap_p).astype(np.float32),
+        "dsteps": day_steps.astype(np.float32),
     }
     padded, _ = _pad_users({**user, **{f"const/{k}": v
                                        for k, v in const_u.items()}},
@@ -658,30 +784,36 @@ def fleet_day(population, n_users: int | None = None, key=0, *,
     user_p = {k: padded[k] for k in user}
     const_p = {k: padded[f"const/{k}"] for k in const_u}
 
-    run = _fleet_runner(n_shards, n_bins)
-    per_user, curve = jax.block_until_ready(
+    run = _fleet_runner(n_shards, n_bins, n_days)
+    per_user, curves = jax.block_until_ready(
         run(jax.tree_util.tree_map(jnp.asarray, user_p),
             jax.tree_util.tree_map(jnp.asarray, const_p),
             jax.tree_util.tree_map(jnp.asarray, xs)))
     per_user = {k: np.asarray(v)[:n] for k, v in per_user.items()}
-    curve = np.asarray(curve, np.float64)
+    # the scan accumulates raw per-step pod counts; one step covers
+    # dt_s of wall time, so normalizing by (step hours / bin hours)
+    # turns the sum into the average pods live during the bin — the
+    # units `offload.curve_cost` and `autoscale.simulate` integrate —
+    # and /n_days averages the horizon back to one diurnal day
+    bin_hours = 24.0 / n_bins
+    norm = (h / bin_hours) / n_days
+    curve = np.asarray(curves["pods"], np.float64) * norm
+    stream_curve = np.asarray(curves["streams"], np.float64) * norm
 
-    day_steps = np.asarray([tb["valid"].sum() for tb in tbs],
-                           np.float64)[pop.archetype]
-    h = dt_s / 3600.0
     hit = per_user["hit"].astype(bool)
     tte = np.where(hit, per_user["first"].astype(np.float64),
-                   day_steps) * h
+                   day_steps * n_days) * h
     scale = (fleet_size / n) if fleet_size else 1.0
     return FleetReport(
         population=pop, streams=STREAMS, curve=curve * scale,
         dt_s=dt_s, fleet_size=fleet_size or float(n),
-        day_hours=day_steps * h, time_to_empty_h=tte,
+        day_hours=day_steps * h * n_days, time_to_empty_h=tte,
         peak_skin_c=per_user["peak"].astype(np.float64),
         end_soc=per_user["end_soc"].astype(np.float64),
         shutdown=per_user["shut"] > 0.5,
         pod_hours=per_user["pod_steps"].astype(np.float64) * h,
-        skin_limit_c=skin_limit_c, n_shards=n_shards)
+        skin_limit_c=skin_limit_c, n_shards=n_shards,
+        stream_curve=stream_curve * scale, n_days=n_days)
 
 
 def reference_fleet(pop: Population, *, dt_s: float = 60.0,
@@ -704,6 +836,7 @@ def reference_fleet(pop: Population, *, dt_s: float = 60.0,
     n_levels_max = max(cb.policy.n_levels for cb in combos)
 
     curve = np.zeros((n_bins, len(STREAMS)), np.float64)
+    stream_curve = np.zeros((n_bins, len(STREAMS)), np.float64)
     tte = np.zeros(n)
     peak = np.zeros(n)
     shut = np.zeros(n, bool)
@@ -744,11 +877,17 @@ def reference_fleet(pop: Population, *, dt_s: float = 60.0,
         aa = ref["act"] * ref["alive"]          # float32, device order
         ps = tb["step_pods_stream"][np.arange(n_steps), ref["level"]]
         contrib = aa[:, None] * ps              # float32 products
+        live = aa[:, None] * (ps > 0.0).astype(np.float32)
         np.add.at(curve, bins[:t, joff[u]],
                   np.asarray(contrib[:t], np.float64))
+        np.add.at(stream_curve, bins[:t, joff[u]],
+                  np.asarray(live[:t], np.float64))
+    # same per-step -> average-pods-per-bin normalization as fleet_day
+    norm = h / (24.0 / n_bins)
     return FleetReport(
-        population=pop, streams=STREAMS, curve=curve, dt_s=dt_s,
+        population=pop, streams=STREAMS, curve=curve * norm, dt_s=dt_s,
         fleet_size=float(n), day_hours=day_steps[pop.archetype] * h,
         time_to_empty_h=tte, peak_skin_c=peak,
         end_soc=np.zeros(n), shutdown=shut, pod_hours=pod_hours,
-        skin_limit_c=skin_limit_c, n_shards=0)
+        skin_limit_c=skin_limit_c, n_shards=0,
+        stream_curve=stream_curve * norm)

@@ -117,36 +117,61 @@ def _check_fleet_args(n_users: float, duty: float) -> None:
         raise ValueError(f"duty={duty} outside [0, 1]")
 
 
-def curve_cost(pods_by_hour, bin_hours: float = 1.0) -> dict:
-    """Price a diurnal backend load curve: autoscaled vs peak-provisioned.
+def curve_cost(pods_by_hour, bin_hours: float = 1.0, *,
+               per_stream: bool = False, autoscaler=None,
+               stream_curve=None) -> dict:
+    """Price a diurnal backend load curve: autoscaled vs peak-provisioned
+    (vs *dynamic*, when an autoscaler is supplied).
 
     `pods_by_hour` is a (B,) pods-vs-hour-of-day curve (average pods
     active during each bin) or (B, S) per-stream curves, summed over
-    streams first.  Two provisioning strategies priced via `pod_cost`:
+    streams first.  The bins must cover exactly one 24 h day
+    (`bin_hours * B == 24`) — a 48-bin curve priced with the default
+    `bin_hours=1.0` would silently double the day.  Provisioning
+    strategies priced via `pod_cost`:
 
-      autoscaled        — capacity follows the curve; pod-hours/day is
-                          the curve integral (sum * bin_hours)
+      autoscaled        — capacity follows the curve instantaneously;
+                          pod-hours/day is the curve integral
+                          (sum * bin_hours)
       peak_provisioned  — static fleet sized for the worst bin running
                           all day (the per-user worst-case answer a
                           steady-state model gives)
+      dynamic           — only with `autoscaler` (an
+                          `autoscale.AutoscalerSpec`): capacity LAGS
+                          demand through spin-up latency and the
+                          hysteresis band, billing booting pods and
+                          dropping the shortfall (see
+                          `autoscale.simulate`); `stream_curve` (B,)
+                          converts the dropped fraction into the
+                          dropped-stream-hours QoS figure
 
-    The trough/peak ratio is the flatness headline: 1.0 means timezone
-    spreading has fully flattened the day and autoscaling buys nothing.
+    With `per_stream=True` and a (B, S) input, `"per_stream"` carries
+    the per-stream autoscaled pod-hours/$ breakdown that the plain sum
+    throws away.  The trough/peak ratio is the flatness headline: 1.0
+    means timezone spreading has fully flattened the day and
+    autoscaling buys nothing.
     """
-    curve = np.asarray(pods_by_hour, np.float64)
-    if curve.ndim == 2:
-        curve = curve.sum(axis=1)
+    raw = np.asarray(pods_by_hour, np.float64)
+    curve = raw.sum(axis=1) if raw.ndim == 2 else raw
     if curve.ndim != 1 or curve.size == 0:
         raise ValueError(f"expected a (B,) or (B, S) curve, "
                          f"got shape {np.shape(pods_by_hour)}")
     if float(curve.min()) < 0.0:
         raise ValueError("curve has negative pods")
+    if not np.isclose(bin_hours * curve.size, 24.0, rtol=1e-9):
+        raise ValueError(f"curve covers {bin_hours * curve.size:g} h "
+                         f"({curve.size} bins x {bin_hours:g} h), "
+                         f"expected a 24 h diurnal day — pass the "
+                         f"matching bin_hours")
+    if per_stream and raw.ndim != 2:
+        raise ValueError("per_stream=True needs a (B, S) curve, got "
+                         f"shape {np.shape(pods_by_hour)}")
     peak = float(curve.max())
     trough = float(curve.min())
     auto_ph = float(curve.sum() * bin_hours)
     peak_ph = peak * curve.size * bin_hours
     auto, prov = pod_cost(auto_ph), pod_cost(peak_ph)
-    return {
+    out = {
         "peak_pods": peak, "trough_pods": trough,
         "trough_peak_ratio": trough / peak if peak > 0 else 1.0,
         "autoscaled": auto, "peak_provisioned": prov,
@@ -154,6 +179,27 @@ def curve_cost(pods_by_hour, bin_hours: float = 1.0) -> dict:
         "savings_pct": (100.0 * (1.0 - auto["usd"] / prov["usd"])
                         if prov["usd"] > 0 else 0.0),
     }
+    if per_stream:
+        stream_ph = raw.sum(axis=0) * bin_hours         # (S,)
+        out["per_stream"] = {
+            **pod_cost(stream_ph),
+            "peak_pods": raw.max(axis=0),
+            "share": (stream_ph / auto_ph if auto_ph > 0
+                      else np.zeros_like(stream_ph)),
+        }
+    if autoscaler is not None:
+        from . import autoscale     # local: offload has no jax deps
+        sim = autoscale.simulate(autoscaler, curve, bin_hours,
+                                 stream_curve=stream_curve)
+        dyn = pod_cost(sim["provisioned_pod_hours"])
+        out["dynamic"] = dyn
+        out["dynamic_gap_usd"] = dyn["usd"] - auto["usd"]
+        out["dropped_pod_hours"] = sim["dropped_pod_hours"]
+        out["dropped_stream_hours"] = sim["dropped_stream_hours"]
+        out["autoscaler"] = sim["spec"]
+        out["effective_spinup_h"] = sim["effective_spinup_h"]
+        out["peak_capacity_pods"] = sim["peak_capacity_pods"]
+    return out
 
 
 @dataclass(frozen=True)

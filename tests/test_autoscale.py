@@ -1,0 +1,204 @@
+"""Autoscaler dynamics (core/autoscale.py) + the dynamic pricing wiring.
+
+The load-bearing acceptance chain: on the DEFAULT population mix the
+lagging autoscaler drops a nonzero amount of stream-hours on the
+morning ramp, the penalty shrinks monotonically as spin-up latency
+goes to zero, and at zero latency (util=1, no band) the dynamic price
+converges to `offload.curve_cost`'s instantaneous autoscaled figure.
+Around it: spec validation + JSON round-trip, the chatter-free
+hysteresis property (same shape as the `ThrottlePolicy` test in
+test_daysim.py), a pinned ramp-outruns-spinup case, and the
+`capacity_plan(autoscaler=...)` report plumbing.
+"""
+import json
+
+import numpy as np
+import pytest
+from _proptest import given, settings, st
+
+from repro.core import autoscale, fleet, offload
+from repro.core.autoscale import AutoscalerSpec
+
+DT_S = 120.0
+
+
+@pytest.fixture(scope="module")
+def rep():
+    """One default-mix fleet day; module-scoped — the curve is reused
+    by every pricing/parity test below."""
+    pop = fleet.sample_population(fleet.DEFAULT_POPULATION, 64, key=0)
+    return fleet.fleet_day(pop, dt_s=DT_S)
+
+
+# ---------------------------------------------------------------------------
+# spec: validation + JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="target_utilization"):
+        AutoscalerSpec(target_utilization=0.0)
+    with pytest.raises(ValueError, match="target_utilization"):
+        AutoscalerSpec(target_utilization=1.2)
+    with pytest.raises(ValueError, match="spinup_h"):
+        AutoscalerSpec(spinup_h=-0.1)
+    with pytest.raises(ValueError, match="down_band"):
+        AutoscalerSpec(down_band=1.0)
+    with pytest.raises(ValueError, match="min_pods"):
+        AutoscalerSpec(min_pods=-1.0)
+    with pytest.raises(ValueError, match="max_pods"):
+        AutoscalerSpec(min_pods=5.0, max_pods=2.0)
+    with pytest.raises(ValueError, match="substeps_per_bin"):
+        AutoscalerSpec(substeps_per_bin=0)
+
+
+def test_spec_json_roundtrip():
+    for spec in (AutoscalerSpec(), autoscale.INSTANT,
+                 AutoscalerSpec("capped", 0.9, 1.5, 0.2, 2.0, 500.0, 6)):
+        back = AutoscalerSpec.from_dict(
+            json.loads(json.dumps(spec.to_dict())))
+        assert back == spec
+
+
+# ---------------------------------------------------------------------------
+# simulate: validation + pinned dynamics
+# ---------------------------------------------------------------------------
+
+def test_simulate_validates_curve():
+    with pytest.raises(ValueError, match="negative"):
+        autoscale.simulate(autoscale.INSTANT, [1.0] * 23 + [-1.0])
+    with pytest.raises(ValueError, match="24 h"):
+        autoscale.simulate(autoscale.INSTANT, np.ones(48))
+    with pytest.raises(ValueError, match="demand curve"):
+        autoscale.simulate(autoscale.INSTANT, np.ones((24, 2)))
+    with pytest.raises(ValueError, match="stream_curve"):
+        autoscale.simulate(autoscale.INSTANT, np.ones(24),
+                           stream_curve=np.ones(12))
+
+
+def test_ramp_outruns_spinup_pinned():
+    """Instant 10 -> 100 pod jump at bin 8 with a 1 h boot: the fleet
+    serves 10 pods for exactly the boot hour, dropping 90 pod-hours —
+    and the dropped fraction times the stream curve is stream-hours."""
+    curve = np.full(24, 10.0)
+    curve[8:20] = 100.0
+    streams = np.full(24, 40.0)
+    spec = AutoscalerSpec(target_utilization=1.0, spinup_h=1.0,
+                          down_band=0.0)
+    sim = autoscale.simulate(spec, curve, stream_curve=streams)
+    assert sim["effective_spinup_h"] == 1.0
+    assert np.isclose(sim["dropped_pod_hours"], 90.0, rtol=1e-5)
+    # 90% of demand dropped for 1 h at 40 live streams
+    assert np.isclose(sim["dropped_stream_hours"], 36.0, rtol=1e-5)
+    assert np.isclose(sim["served_pod_hours"],
+                      curve.sum() - 90.0, rtol=1e-5)
+    # booting pods are billed: provisioned covers the boot hour too
+    assert sim["provisioned_pod_hours"] \
+        > sim["served_pod_hours"] - 1e-6
+
+
+def test_zero_latency_tracks_demand_exactly(rep):
+    """The INSTANT spec (no latency, util=1, no band) must reproduce
+    `curve_cost`'s autoscaled integral: the dynamic fleet degenerates
+    to the idealized curve-follower."""
+    bh = 24.0 / rep.curve.shape[0]
+    sim = autoscale.simulate(autoscale.INSTANT, rep.curve_total, bh,
+                             stream_curve=rep.stream_curve_total)
+    assert sim["dropped_pod_hours"] == 0.0
+    assert sim["dropped_stream_hours"] == 0.0
+    assert np.isclose(sim["provisioned_pod_hours"],
+                      rep.curve_total.sum() * bh, rtol=1e-5)
+
+
+def test_default_mix_drops_work_and_latency_monotone(rep):
+    """THE acceptance pin: the default population's morning ramp
+    outruns the default autoscaler (dropped stream-hours > 0), the
+    penalty shrinks monotonically as spin-up latency -> 0, and the
+    zero-latency end converges to the instantaneous price."""
+    bh = 24.0 / rep.curve.shape[0]
+    plan = rep.capacity_plan(autoscaler=AutoscalerSpec())
+    assert plan["dropped_stream_hours"] > 0.0
+
+    dropped, usd = [], []
+    for spinup in (2.0, 1.0, 0.5, 0.25, 0.0):
+        spec = AutoscalerSpec(target_utilization=1.0, spinup_h=spinup,
+                              down_band=0.0)
+        p = rep.capacity_plan(autoscaler=spec)
+        dropped.append(p["dropped_stream_hours"])
+        usd.append(p["dynamic"]["usd"])
+    assert dropped[0] > 0.0
+    assert all(a >= b - 1e-9 for a, b in zip(dropped, dropped[1:]))
+    assert dropped[-1] == 0.0
+    auto_usd = rep.capacity_plan()["autoscaled"]["usd"]
+    assert np.isclose(usd[-1], auto_usd, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hysteresis: capacity never chatters inside the band
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(band=st.floats(min_value=0.05, max_value=0.5),
+       amp=st.floats(min_value=0.0, max_value=0.95))
+def test_hysteresis_never_chatters(band, amp):
+    """Demand wiggles strictly inside the scale-down band: capacity
+    must hold perfectly flat — no launches, no scale-downs, no drops
+    (the `ThrottlePolicy` chatter-free property, lifted to pods)."""
+    t = np.arange(24, dtype=np.float64)
+    wiggle = 0.5 - 0.5 * np.cos(t * 1.7)     # in [0, 1], starts at 0
+    curve = 100.0 * (1.0 - band * amp * wiggle)
+    spec = AutoscalerSpec(target_utilization=0.8, spinup_h=0.5,
+                          down_band=band)
+    sim = autoscale.simulate(spec, curve)
+    cap0 = curve[0] / spec.target_utilization
+    assert np.allclose(sim["capacity_curve"], cap0, rtol=1e-6)
+    assert sim["launched_pods"] == 0.0
+    assert sim["scale_down_events"] == 0
+    assert sim["dropped_pod_hours"] == 0.0
+
+
+def test_unimodal_demand_gives_unimodal_capacity():
+    """A smooth single-peak day must produce capacity that rises then
+    falls once — oscillation inside the band would show up as extra
+    sign changes in the capacity differences."""
+    t = np.arange(24, dtype=np.float64)
+    curve = 50.0 + 45.0 * np.sin(np.pi * t / 24.0) ** 2
+    sim = autoscale.simulate(AutoscalerSpec(), curve)
+    d = np.diff(sim["capacity_curve"])
+    signs = np.sign(d[np.abs(d) > 1e-9])
+    flips = np.count_nonzero(np.diff(signs) != 0)
+    assert flips <= 1, (flips, sim["capacity_curve"])
+
+
+# ---------------------------------------------------------------------------
+# pricing plumbing: curve_cost / capacity_plan / fleet_pareto
+# ---------------------------------------------------------------------------
+
+def test_curve_cost_dynamic_entry(rep):
+    plan = offload.curve_cost(rep.curve_total,
+                              bin_hours=24.0 / rep.curve.shape[0],
+                              autoscaler=AutoscalerSpec(),
+                              stream_curve=rep.stream_curve_total)
+    assert plan["dynamic"]["usd"] > 0.0
+    assert plan["dynamic_gap_usd"] == pytest.approx(
+        plan["dynamic"]["usd"] - plan["autoscaled"]["usd"])
+    assert plan["autoscaler"]["name"] == "default"
+    assert plan["dropped_pod_hours"] >= 0.0
+    # headroom (util < 1) makes the real fleet dearer than the ideal
+    assert plan["dynamic"]["usd"] > plan["autoscaled"]["usd"]
+
+
+def test_fleet_pareto_gains_qos_axis():
+    from repro.core import dse
+    variants = [
+        ("saver", fleet.DEFAULT_POPULATION.with_overrides(
+            "saver", policy="battery_saver")),
+        ("none", fleet.DEFAULT_POPULATION.with_overrides(
+            "none", policy="none")),
+    ]
+    ff = dse.fleet_pareto(variants=variants, n_users=16, key=0,
+                          dt_s=DT_S, fleet_size=1e6,
+                          autoscaler=AutoscalerSpec())
+    assert all("dropped_stream_hours" in r for r in ff.rows)
+    assert all("dynamic_usd_per_day" in r for r in ff.rows)
+    assert all(r["dropped_stream_hours"] >= 0.0 for r in ff.rows)
+    assert ff.front_mask.any()

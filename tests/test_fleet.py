@@ -59,6 +59,22 @@ def test_parity_curve_bins_1e6(pair):
                        atol=1e-6 * scale)
     assert np.allclose(rep.pod_hours, ref.pod_hours, rtol=1e-6,
                        atol=1e-9)
+    sscale = max(1.0, float(ref.stream_curve.max()))
+    assert np.allclose(rep.stream_curve, ref.stream_curve, rtol=1e-6,
+                       atol=1e-6 * sscale)
+
+
+def test_curve_integral_is_pod_hours(pair):
+    """The curve is average-pods-per-bin, so its time integral must
+    equal the summed per-user pod-hours — and stay invariant under a
+    finer dt (the old per-step sum scaled with 3600/dt_s)."""
+    rep, _ = pair
+    bin_hours = 24.0 / rep.curve.shape[0]
+    assert np.isclose(rep.curve_total.sum() * bin_hours,
+                      rep.pod_hours.sum(), rtol=1e-6)
+    fine = fleet.fleet_day(rep.population, dt_s=DT_S / 2)
+    assert np.allclose(fine.curve_total, rep.curve_total, rtol=0.05,
+                       atol=1e-6)
 
 
 def test_parity_mixed_survival(pair):
@@ -173,11 +189,12 @@ def test_population_take(pop8):
 
 
 def test_shard_invariance_subprocess():
-    """Same key + same fleet on a 2-device mesh == single device, down
-    to bit-identical survival (XLA_FLAGS must be set before jax loads,
-    hence the subprocess)."""
+    """Same key + same fleet on a 4-device mesh == 2-device == single
+    device, down to bit-identical survival, and the Monte Carlo
+    distribution is shard-count-invariant for the same key (XLA_FLAGS
+    must be set before jax loads, hence the subprocess)."""
     env = {**os.environ,
-           "XLA_FLAGS": "--xla_force_host_platform_device_count=2"}
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4"}
     res = subprocess.run(
         [sys.executable, str(REPO / "tests" / "_fleet_shard_check.py")],
         env=env, capture_output=True, text=True, timeout=300)
@@ -242,6 +259,78 @@ def test_curve_cost_pricing_math():
         offload.curve_cost(np.asarray([1.0, -1.0]))
     with pytest.raises(ValueError, match="curve"):
         offload.curve_cost(np.zeros((0,)))
+
+
+def test_curve_cost_validates_day_coverage():
+    """A 48-bin curve priced with the default bin_hours=1.0 would
+    silently double the day — the bins must cover exactly 24 h."""
+    with pytest.raises(ValueError, match="24 h"):
+        offload.curve_cost(np.ones(48))
+    with pytest.raises(ValueError, match="24 h"):
+        offload.curve_cost(np.ones(24), bin_hours=0.5)
+    out = offload.curve_cost(np.ones(48), bin_hours=0.5)
+    assert np.isclose(out["autoscaled"]["pod_hours"], 24.0)
+
+
+def test_curve_cost_per_stream_breakdown():
+    curves = np.stack([np.full(24, 2.0), np.full(24, 1.0),
+                       np.zeros(24)], axis=1)          # (24, 3)
+    out = offload.curve_cost(curves, per_stream=True)
+    ps = out["per_stream"]
+    assert np.allclose(ps["pod_hours"], [48.0, 24.0, 0.0])
+    assert np.isclose(ps["pod_hours"].sum(),
+                      out["autoscaled"]["pod_hours"])
+    assert np.allclose(ps["share"], [2 / 3, 1 / 3, 0.0])
+    assert np.allclose(ps["peak_pods"], [2.0, 1.0, 0.0])
+    with pytest.raises(ValueError, match="per_stream"):
+        offload.curve_cost(np.ones(24), per_stream=True)
+
+
+# ---------------------------------------------------------------------------
+# week-scale horizon: overnight charge carryover between days
+# ---------------------------------------------------------------------------
+
+def test_week_full_recharge_matches_single_day(pop8):
+    """With the default dock power every SKU fully recharges in the
+    overnight gap, so each of the 7 days is the same day: the per-day
+    average curve matches a 1-day run and the only users whose
+    survival can flip are those dying exactly at a day boundary."""
+    r1 = fleet.fleet_day(pop8, dt_s=DT_S)
+    r7 = fleet.fleet_day(pop8, dt_s=DT_S, n_days=7)
+    assert r7.n_days == 7
+    scale = max(1.0, float(r1.curve.max()))
+    assert np.allclose(r7.curve, r1.curve, rtol=1e-5,
+                       atol=1e-5 * scale)
+    assert np.allclose(r7.day_hours, r1.day_hours * 7)
+    flip = r1.survives() != r7.survives()
+    assert np.all(r1.time_to_empty_h[flip]
+                  >= r1.day_hours[flip] - 1e-9)
+    # users who died mid-day keep the same (worn-hours) death time
+    died = r1.time_to_empty_h < r1.day_hours - 1e-9
+    assert np.allclose(r7.time_to_empty_h[died],
+                       r1.time_to_empty_h[died])
+
+
+def test_week_undercharged_fleet_decays(pop8):
+    """No overnight charge: nobody makes a whole week, and a trickle
+    charger sits between the extremes."""
+    r1 = fleet.fleet_day(pop8, dt_s=DT_S)
+    r7_full = fleet.fleet_day(pop8, dt_s=DT_S, n_days=7)
+    r7_zero = fleet.fleet_day(pop8, dt_s=DT_S, n_days=7,
+                              overnight_charge_mw=0.0)
+    assert r7_zero.survival_rate() == 0.0
+    assert np.all(r7_zero.time_to_empty_h
+                  <= r7_full.time_to_empty_h + 1e-9)
+    # dead batteries stop demanding backend pods: per-day average load
+    # can only shrink when days aren't recharged
+    assert r7_zero.curve_total.sum() <= r1.curve_total.sum() + 1e-9
+
+
+def test_fleet_day_validates_horizon_args(pop8):
+    with pytest.raises(ValueError, match="n_days"):
+        fleet.fleet_day(pop8, dt_s=DT_S, n_days=0)
+    with pytest.raises(ValueError, match="overnight_charge_mw"):
+        fleet.fleet_day(pop8, dt_s=DT_S, overnight_charge_mw=-1.0)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,159 @@
+"""Monte Carlo fleets (core/montecarlo.py): key splitting, warm-runner
+reuse, CRN across variants, band math, JSON round-trip, and the MC
+fleet_pareto rows.
+
+The load-bearing pin is the zero-retrace contract: every draw after
+the first must reuse the warm compiled fleet runner
+(`fleet.FLEET_STATS["traces"]` stays flat across draws), which is what
+keeps Monte Carlo at fleet-scan speed instead of compile speed.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import dse, fleet, montecarlo
+from repro.core.autoscale import AutoscalerSpec
+
+DT_S = 120.0
+N_USERS = 23        # deliberately odd and unique to this module so the
+                    # first draw really does trace a fresh shape
+
+
+@pytest.fixture(scope="module")
+def dist():
+    return montecarlo.fleet_distribution(
+        fleet.DEFAULT_POPULATION, N_USERS, n_draws=4, key=11,
+        dt_s=DT_S, autoscaler=AutoscalerSpec())
+
+
+# ---------------------------------------------------------------------------
+# key plumbing
+# ---------------------------------------------------------------------------
+
+def test_draw_keys_deterministic_and_distinct():
+    k1 = montecarlo.draw_keys(5, 4)
+    k2 = montecarlo.draw_keys(5, 4)
+    assert np.array_equal(np.asarray(k1), np.asarray(k2))
+    assert len({tuple(np.asarray(k).tolist()) for k in k1}) == 4
+    with pytest.raises(ValueError, match="n_draws"):
+        montecarlo.draw_keys(5, 0)
+
+
+def test_common_random_numbers_across_variants():
+    """`with_overrides` keeps the mixture weights, so the same key
+    samples the identical users under every design/policy variant —
+    the CRN contract fleet_pareto's deltas rest on."""
+    base = fleet.DEFAULT_POPULATION
+    variant = base.with_overrides("v", policy="none")
+    for k in montecarlo.draw_keys(3, 3):
+        pa = fleet.sample_population(base, 16, k)
+        pb = fleet.sample_population(variant, 16, k)
+        for f in ("archetype", "tz_hours", "ambient_offset_c", "fade"):
+            assert np.array_equal(getattr(pa, f), getattr(pb, f)), f
+
+
+# ---------------------------------------------------------------------------
+# the zero-retrace contract
+# ---------------------------------------------------------------------------
+
+def test_draws_after_first_reuse_warm_runner():
+    """First draw may trace the fleet scan; draws 2..N and any later
+    same-shape distribution must leave the trace counter untouched."""
+    montecarlo.fleet_distribution(fleet.DEFAULT_POPULATION, N_USERS,
+                                  n_draws=1, key=0, dt_s=DT_S)
+    t0 = fleet.FLEET_STATS["traces"]
+    montecarlo.fleet_distribution(fleet.DEFAULT_POPULATION, N_USERS,
+                                  n_draws=5, key=1, dt_s=DT_S)
+    assert fleet.FLEET_STATS["traces"] == t0
+
+
+# ---------------------------------------------------------------------------
+# distribution contents
+# ---------------------------------------------------------------------------
+
+def test_distribution_shapes_and_bands(dist):
+    assert dist.n_draws == 4
+    assert dist.survival_draws.shape == (4,)
+    assert dist.curve_draws.shape == (4, fleet.DEFAULT_N_BINS,
+                                      len(dist.streams))
+    assert dist.stream_curve_draws.shape == dist.curve_draws.shape
+    sv = dist.survival_rate()
+    assert sv["lo"] <= sv["mean"] <= sv["hi"]
+    assert 0.0 <= sv["lo"] and sv["hi"] <= 1.0
+    tq = dist.tte_quantiles()
+    assert tq["p5"]["mean"] <= tq["p95"]["mean"]
+    bands = dist.curve_bands()
+    assert np.all(bands["lo"] <= bands["mean"] + 1e-12)
+    assert np.all(bands["mean"] <= bands["hi"] + 1e-12)
+    cost = dist.cost()
+    assert cost["autoscaled_usd"]["mean"] > 0.0
+    assert cost["dynamic_usd"]["mean"] \
+        >= cost["autoscaled_usd"]["mean"]
+    assert cost["dropped_stream_hours"]["mean"] >= 0.0
+    assert dist.summary()["n_draws"] == 4
+
+
+def test_distribution_draws_actually_vary(dist):
+    """Different subkeys sample different fleets — if every draw were
+    identical the bands would be vacuous."""
+    assert np.ptp(dist.usd_draws) > 0.0
+    assert any(np.ptp(dist.tte_draws[:, i]) > 0.0
+               for i in range(dist.tte_draws.shape[1]))
+
+
+def test_distribution_deterministic_in_key():
+    d1 = montecarlo.fleet_distribution(
+        fleet.DEFAULT_POPULATION, N_USERS, n_draws=2, key=9, dt_s=DT_S)
+    d2 = montecarlo.fleet_distribution(
+        fleet.DEFAULT_POPULATION, N_USERS, n_draws=2, key=9, dt_s=DT_S)
+    assert np.array_equal(d1.survival_draws, d2.survival_draws)
+    assert np.array_equal(d1.curve_draws, d2.curve_draws)
+    d3 = montecarlo.fleet_distribution(
+        fleet.DEFAULT_POPULATION, N_USERS, n_draws=2, key=10,
+        dt_s=DT_S)
+    assert not np.array_equal(d1.curve_draws, d3.curve_draws)
+
+
+def test_distribution_json_roundtrip(dist):
+    back = montecarlo.FleetDistribution.from_dict(
+        json.loads(json.dumps(dist.to_dict())))
+    assert back.spec_name == dist.spec_name
+    assert back.streams == dist.streams
+    assert np.allclose(back.survival_draws, dist.survival_draws)
+    assert np.allclose(back.curve_draws, dist.curve_draws)
+    assert np.allclose(back.dynamic_usd_draws, dist.dynamic_usd_draws)
+    assert back.autoscaler == dist.autoscaler
+    assert back.summary() == dist.summary()
+
+
+def test_distribution_validates_ci():
+    with pytest.raises(ValueError, match="ci"):
+        montecarlo.fleet_distribution(fleet.DEFAULT_POPULATION, 4,
+                                      n_draws=1, ci=1.0, dt_s=DT_S)
+
+
+# ---------------------------------------------------------------------------
+# fleet_pareto with MC bands
+# ---------------------------------------------------------------------------
+
+def test_fleet_pareto_mc_bands():
+    variants = [
+        ("saver", fleet.DEFAULT_POPULATION.with_overrides(
+            "saver", policy="battery_saver")),
+        ("none", fleet.DEFAULT_POPULATION.with_overrides(
+            "none", policy="none")),
+    ]
+    ff = dse.fleet_pareto(variants=variants, n_users=16, key=0,
+                          dt_s=DT_S, fleet_size=1e6, n_draws=3,
+                          autoscaler=AutoscalerSpec())
+    assert len(ff.rows) == 2
+    for r in ff.rows:
+        assert r["n_draws"] == 3
+        assert r["survival_lo"] <= r["survival_rate"] \
+            <= r["survival_hi"]
+        assert r["usd_lo"] <= r["usd_per_day"] <= r["usd_hi"]
+        assert r["dropped_stream_hours"] >= 0.0
+        assert r["dropped_stream_hours"] \
+            <= r["dropped_stream_hours_hi"] + 1e-9
+    assert ff.front_mask.any()
