@@ -14,9 +14,15 @@ BENCH_autoscale.json schema (one JSON object):
   n_draws               int   population draws through the warm runner
   dt_s                  float integrator step
   mc_s                  float wall time for the n_draws sweep
-                              (post-warmup: tables, scan, pricing)
+                              (post-warmup: pop gathers, scan, pricing;
+                              spec-derived tables hoisted via
+                              fleet.prepare_fleet)
   draws_per_s           float n_draws / mc_s — the regression gate
                               metric (>20% drop fails benchmarks/run.py)
+  draws_per_s_rederive  float same sweep with reuse_prep=False (the
+                              old per-draw host re-derivation) — the
+                              "before" number the prep hoist is
+                              measured against
   retraces_after_first  int   fleet-scan traces during the timed sweep
                               (MUST be 0: every draw reuses the warm
                               executable)
@@ -56,10 +62,14 @@ def run():
     from repro.core.autoscale import INSTANT, AutoscalerSpec
 
     scaler = AutoscalerSpec()
-    # warm: archetype compile + fleet-scan trace + autoscale trace
+    # warm: archetype compile + fleet-scan trace + autoscale trace.
+    # Full-size so the timed sweeps below see steady state — the first
+    # full sweep in a process pays one-off dispatch/alloc warmup that
+    # would otherwise land on whichever path runs first.
     montecarlo.fleet_distribution(
-        fleet.DEFAULT_POPULATION, BENCH_USERS, n_draws=1, key=0,
-        dt_s=BENCH_DT_S, fleet_size=FLEET_SIZE, autoscaler=scaler)
+        fleet.DEFAULT_POPULATION, BENCH_USERS, n_draws=BENCH_DRAWS,
+        key=0, dt_s=BENCH_DT_S, fleet_size=FLEET_SIZE,
+        autoscaler=scaler)
 
     t0 = fleet.FLEET_STATS["traces"]
     tic = time.perf_counter()
@@ -70,6 +80,16 @@ def run():
     mc_s = time.perf_counter() - tic
     retraces = fleet.FLEET_STATS["traces"] - t0
     assert retraces == 0, f"MC sweep retraced the fleet scan {retraces}x"
+
+    # the "before" path: re-derive the spec half on the host per draw
+    tic = time.perf_counter()
+    dist_re = montecarlo.fleet_distribution(
+        fleet.DEFAULT_POPULATION, BENCH_USERS, n_draws=BENCH_DRAWS,
+        key=1, dt_s=BENCH_DT_S, fleet_size=FLEET_SIZE,
+        autoscaler=scaler, reuse_prep=False)
+    rederive_s = time.perf_counter() - tic
+    assert np.array_equal(dist.survival_draws, dist_re.survival_draws)
+    assert np.array_equal(dist.curve_draws, dist_re.curve_draws)
 
     sv, cost = dist.survival_rate(), dist.cost()
     auto_usd = cost["autoscaled_usd"]["mean"]
@@ -97,6 +117,7 @@ def run():
         "dt_s": BENCH_DT_S,
         "mc_s": round(mc_s, 3),
         "draws_per_s": round(BENCH_DRAWS / mc_s, 2),
+        "draws_per_s_rederive": round(BENCH_DRAWS / rederive_s, 2),
         "retraces_after_first": retraces,
         "survival_mean": round(sv["mean"], 4),
         "survival_ci90": [round(sv["lo"], 4), round(sv["hi"], 4)],
@@ -111,7 +132,8 @@ def run():
     (OUT / "BENCH_autoscale.json").write_text(json.dumps(result,
                                                          indent=1))
     derived = (f"{BENCH_DRAWS}x{BENCH_USERS}users "
-               f"{result['draws_per_s']}draws/s retrace=0 "
+               f"{result['draws_per_s']}draws/s "
+               f"(rederive={result['draws_per_s_rederive']}) retrace=0 "
                f"gap={result['dynamic_gap_pct']}% "
                f"dropped={result['dropped_stream_hours']}sh")
     return [result], derived

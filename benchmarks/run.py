@@ -34,7 +34,9 @@ GATED_METRICS = {
                           ("day_pareto_ms", "lower")),
     "BENCH_grad.json": (("calib_speedup", "higher"),),
     "BENCH_fleet.json": (("speedup", "higher"),),
-    "BENCH_twin.json": (("warm_query_ms", "lower"),),
+    "BENCH_twin.json": (("warm_query_ms", "lower"),
+                        ("cached_cold_query_ms", "lower"),
+                        ("batched_query_ms_per_item", "lower")),
     "BENCH_autoscale.json": (("draws_per_s", "higher"),),
 }
 REGRESSION_TOLERANCE = 0.20
@@ -125,7 +127,8 @@ def main(argv=None) -> int:
                    ("grad_smoke", grad_bench.smoke),
                    ("fleet_smoke", fleet_bench.smoke),
                    ("autoscale_smoke", autoscale_bench.smoke),
-                   ("twin_smoke", twin_bench.smoke)]
+                   ("twin_smoke", twin_bench.smoke),
+                   ("twin_batch_smoke", twin_bench.batch_smoke)]
     else:
         benches = [
             ("dse_batched_vs_loop", dse_bench.run),

@@ -38,7 +38,8 @@ for trip in (38.0, 40.0, 42.0):
           f"median throttled {np.median(r.throttled_h):5.2f} h, "
           f"{twin.stats.last_ms:6.1f} ms")
 
-# queued batch of what-ifs, drained in slot-sized batches
+# queued what-ifs, micro-batched through ONE vmapped executable per
+# shape-signature group and fanned back out in submission order
 cell = daysim.BATTERIES["default"]
 for frac in (0.8, 1.0, 1.2):
     twin.submit(policy=gov, battery=dataclasses.replace(
@@ -51,5 +52,14 @@ for wi in twin.run():
           f"front {int(r.front_mask.sum())}, {wi.ms:6.1f} ms")
 
 st = twin.stats
-print(f"\n{st.queries} queries: {st.traces} traces, "
-      f"{st.exec_hits} warm executable hits, mean {st.mean_ms:.0f} ms")
+print(f"\n{st.queries} queries in {st.batches} batched executions: "
+      f"{st.traces} traces, {st.exec_hits} warm executable hits, "
+      f"mean {st.mean_ms:.0f} ms")
+
+# every daysim cache tier in one snapshot: scenario-row tables, host
+# assemblies, value-keyed pipelines, compiled executables
+for tier, s in daysim.cache_stats().items():
+    extras = "".join(f", {k}={s[k]}" for k in ("evictions", "traces")
+                     if k in s)
+    print(f"cache[{tier}]: {s['hits']} hits / {s['misses']} misses, "
+          f"{s['size']} live{extras}")

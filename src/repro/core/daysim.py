@@ -832,7 +832,8 @@ class _Combo:
 _ROW_CACHE: dict = {}
 _ROW_CACHE_MAX = 200_000
 _CTX_IDS: dict = {}
-CACHE_STATS = {"hits": 0, "misses": 0, "evaluate_calls": 0}
+CACHE_STATS = {"hits": 0, "misses": 0, "evaluate_calls": 0,
+               "evictions": 0}
 
 
 def _theta_key(theta) -> tuple | None:
@@ -858,7 +859,7 @@ def _row_key(row: dict) -> tuple:
 def clear_row_cache() -> None:
     _ROW_CACHE.clear()
     _CTX_IDS.clear()
-    CACHE_STATS.update(hits=0, misses=0, evaluate_calls=0)
+    CACHE_STATS.update(hits=0, misses=0, evaluate_calls=0, evictions=0)
 
 
 # host cache of COMPILED executables: the `_ROW_CACHE` idea extended to
@@ -871,7 +872,11 @@ def clear_row_cache() -> None:
 _EXEC_CACHE: dict = {}
 _PIPELINES: dict = {}
 _PIPELINES_MAX = 32
+_ASSEMBLIES: dict = {}
+_ASSEMBLIES_MAX = 64
 EXEC_STATS = {"hits": 0, "misses": 0, "traces": 0}
+PIPELINE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+ASSEMBLY_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def _cached_executable(key, build):
@@ -888,7 +893,45 @@ def _cached_executable(key, build):
 def clear_exec_cache() -> None:
     _EXEC_CACHE.clear()
     _PIPELINES.clear()
+    _ASSEMBLIES.clear()
     EXEC_STATS.update(hits=0, misses=0, traces=0)
+    PIPELINE_STATS.update(hits=0, misses=0, evictions=0)
+    ASSEMBLY_STATS.update(hits=0, misses=0, evictions=0)
+
+
+def cache_stats() -> dict:
+    """One snapshot of every daysim cache tier: hit/miss/eviction (and
+    trace) counters plus the live entry count, keyed by tier.
+
+    ``rows`` is the `_ROW_CACHE` row-evaluation cache, ``assemblies``
+    the value-keyed host-assembly cache, ``pipelines`` the value-keyed
+    assembled-pipeline cache, and ``exec`` the signature-keyed compiled
+    executable cache (whose ``traces`` counter the zero-retrace tests
+    pin).  The FIFO tiers evict silently during queries; this accessor
+    is how benchmarks and `examples/what_if.py` make that visible."""
+    return {
+        "rows": {**CACHE_STATS, "size": len(_ROW_CACHE)},
+        "assemblies": {**ASSEMBLY_STATS, "size": len(_ASSEMBLIES)},
+        "pipelines": {**PIPELINE_STATS, "size": len(_PIPELINES)},
+        "exec": {**EXEC_STATS, "size": len(_EXEC_CACHE)},
+    }
+
+
+def bucket_size(n: int) -> int:
+    """Canonical shape bucket for a grid axis: the smallest power of
+    two >= n (1, 2, 4, 8, ...).
+
+    Query grids are padded up to bucket sizes with zero-weight clones
+    of entry 0 before compilation, so the compiled-executable signature
+    depends on the BUCKET, not the raw axis size — a what-if that
+    changes the combo count from 9 to 12 reuses the warm 16-lane
+    program instead of retracing.  Padded combos are forced to
+    worst-case objectives inside the fused body (see `_build_fused`),
+    which leaves the real rows' front mask bit-identical, and their
+    lanes are sliced off before the DayReport is built."""
+    if n <= 0:
+        raise ValueError(f"bucket_size needs n > 0, got {n}")
+    return 1 << (n - 1).bit_length()
 
 
 def _jit_pipeline(fn):
@@ -1021,6 +1064,7 @@ def _compile_platform(plat: PlatformSpec, combos: list, n_users: float,
     # the value extraction above could drop entries this call indexes)
     while len(_ROW_CACHE) > _ROW_CACHE_MAX:
         del _ROW_CACHE[next(iter(_ROW_CACHE))]
+        CACHE_STATS["evictions"] += 1
 
 
 def _battery_const(bat: BatterySpec, th: ThermalSpec, dt_s: float,
@@ -1408,6 +1452,26 @@ def _design_key(d: dict) -> tuple:
 
 
 @dataclass
+class _Assembly:
+    """Host half of one fully-valued fused query, padded to canonical
+    bucket shapes: numpy masters for the value-level inputs (`dyn`),
+    numpy gather indices / step data (`ix`), and the static signature
+    the compiled executable is keyed by.  Backend-independent — the
+    single-query path pushes `ix` to the device once (`_Pipeline`),
+    the batch path stacks K assemblies along a leading query axis."""
+    combos: list
+    skipped: list
+    dyn: dict               # numpy masters (incl. combo_w), bucketed
+    ix: dict                # numpy gather indices / step data, bucketed
+    plats: tuple            # platform specs, row-stage order
+    sig: tuple              # static shape signature (no backend)
+    key: tuple              # value-level identity (no backend)
+    n_real: int             # combos before bucket padding
+    n_users: float
+    dt_s: float
+
+
+@dataclass
 class _Pipeline:
     """One assembled fused-day query: host masters + device indices +
     the compiled program.  `dyn` is re-pushed from numpy every call
@@ -1417,6 +1481,7 @@ class _Pipeline:
     dyn: dict               # numpy masters, pushed per query
     ix: dict                # device-resident gather indices / step data
     fn: object              # jitted fused(dyn, ix) -> summary dict
+    n_real: int             # combos before bucket padding
 
 
 def _build_fused(plats: tuple, backend: str):
@@ -1467,24 +1532,49 @@ def _build_fused(plats: tuple, backend: str):
         from . import dse
         obj = jnp.stack([summ["time_to_empty_h"], summ["peak_skin_c"],
                          summ["pod_hours"]], axis=1)
-        summ["front_mask"] = dse.non_dominated_jax(obj, maximize=(0,))
+        # bucket padding: zero-weight clone lanes are forced to the
+        # worst corner (tte -inf maximized; peak/pods +inf minimized),
+        # so every real row strictly dominates them and the real rows'
+        # front mask is bit-identical to the unpadded grid's
+        w = dyn["combo_w"] > 0.0
+        obj = jnp.where(w[:, None],
+                        obj, jnp.asarray([-jnp.inf, jnp.inf, jnp.inf],
+                                         obj.dtype))
+        summ["front_mask"] = dse.non_dominated_jax(obj, maximize=(0,)) & w
         return summ
 
     return fused
 
 
-def _fused_pipeline(platforms, designs, schedules, policies, dt_s,
-                    n_users, standby_mw, battery, thermal, theta,
-                    results_dir, shutdown_c, backend) -> _Pipeline:
-    """Assemble (or fetch) the fused pipeline for one fully-valued query.
+def _build_fused_batch(plats: tuple, backend: str):
+    """The fused body vmapped over a leading query axis: K value-level
+    what-ifs (stacked `dyn` / `ix` pytrees) evaluate through ONE jitted
+    program.  The inner body is `_build_fused`'s — same ops, vmapped —
+    so each lane's objectives, survival flags and front mask are
+    bit-identical to the serial single-query program's (parity-pinned
+    in tests/test_twin_serving.py), and the trace counter inside it
+    bumps once per batch-shape trace, keeping the zero-retrace
+    contract observable for batched serving too."""
+    fused = _build_fused(plats, backend)
 
-    Two cache tiers back the interactive twin: `_PIPELINES` (FIFO,
-    value-keyed) returns the whole assembled pipeline — repeated
-    identical queries skip even the host-side index build — and
-    `_EXEC_CACHE` (signature-keyed) shares the compiled program across
-    queries that differ only in VALUES (policy thresholds, design knobs,
-    schedule ambients), so a what-if delta re-pushes small host arrays
-    and calls a warm executable: zero tracing, zero host table work."""
+    def fused_batch(dyn, ix):
+        return jax.vmap(fused)(dyn, ix)
+
+    return fused_batch
+
+
+def _assemble_query(platforms, designs, schedules, policies, dt_s,
+                    n_users, standby_mw, battery, thermal, theta,
+                    results_dir, shutdown_c) -> _Assembly:
+    """Assemble (or fetch) the bucket-padded host half of one query.
+
+    Combo and per-platform row axes are padded up to canonical
+    `bucket_size` shapes with clones of entry 0 (`dyn["combo_w"]`
+    carries the real/pad mask), so the static signature — and hence
+    the compiled executable — depends on the bucket, not the raw axis
+    size.  Assemblies are value-keyed in the `_ASSEMBLIES` FIFO so
+    repeated identical queries (and batch items) skip the host build
+    entirely."""
     groups, skipped = _enumerate_combos(platforms, designs, schedules,
                                         policies, battery, thermal)
     combos = [cb for _, grp in groups for cb in grp]
@@ -1495,11 +1585,12 @@ def _fused_pipeline(platforms, designs, schedules, policies, dt_s,
                               for cb in grp))
                  for plat, grp in groups),
            float(dt_s), float(n_users), float(standby_mw),
-           _theta_key(theta), str(results_dir), float(shutdown_c),
-           backend)
-    pipe = _PIPELINES.get(key)
-    if pipe is not None:
-        return pipe
+           _theta_key(theta), str(results_dir), float(shutdown_c))
+    asm = _ASSEMBLIES.get(key)
+    if asm is not None:
+        ASSEMBLY_STATS["hits"] += 1
+        return asm
+    ASSEMBLY_STATS["misses"] += 1
 
     T = max(cb.schedule.n_steps(dt_s) for cb in combos)
     L = max(cb.policy.n_levels for cb in combos)
@@ -1515,6 +1606,8 @@ def _fused_pipeline(platforms, designs, schedules, policies, dt_s,
             slices.append(_combo_rows(cb, rows))
         sset = ScenarioSet.build(rows, primitives=plat.primitives)
         scenarios._validate(plat, sset)
+        r_b = bucket_size(len(rows)) if rows else 0
+        sset = sset.pad(r_b)
         th = plat.theta_dict()
         if theta:
             th.update(theta)
@@ -1529,7 +1622,7 @@ def _fused_pipeline(platforms, designs, schedules, policies, dt_s,
             "theta": {k: np.float32(v) for k, v in th.items()},
             "p_base": np.float32(p_base), "p_wan": np.float32(p_wan)})
         theta_keys.append(tuple(sorted(th)))
-        row_counts.append(len(rows))
+        row_counts.append(r_b)
         for cb, (start, steady_i) in zip(grp, slices):
             segs = cb.schedule.segments
             n_seg, n_lvl = len(segs), cb.policy.n_levels
@@ -1571,35 +1664,174 @@ def _fused_pipeline(platforms, designs, schedules, policies, dt_s,
                 amult[l:] = cb.policy.action(l).active_mult
             amults.append(amult)
             consts.append(_combo_const(cb, dt_s, standby_mw, shutdown_c))
-        base += len(rows)
+        base += r_b
 
+    n_real = len(combos)
+    n_b = bucket_size(n_real)
+
+    def _pad_n(a):
+        a = np.asarray(a)
+        if n_b == n_real:
+            return a
+        return np.concatenate([a, np.repeat(a[:1], n_b - n_real, 0)])
+
+    combo_w = np.zeros(n_b, np.float32)
+    combo_w[:n_real] = 1.0
     dyn = {"groups": tuple(grp_dyn),
            "rates": np.asarray(rr["tok_per_cap"], np.float32),
            "gate": np.float32(n_users),
-           "act_mult": np.stack(amults),
-           "const": {k: np.asarray([c[k] for c in consts], np.float32)
+           "act_mult": _pad_n(np.stack(amults)),
+           "const": {k: _pad_n(np.asarray([c[k] for c in consts],
+                                          np.float32))
                      for k in consts[0]},
+           "combo_w": combo_w,
            "dt_s": np.float32(dt_s)}
-    ix = {"lvl_row": jnp.asarray(np.stack(lvl_row)),
-          "seg_of": jnp.asarray(np.stack(seg_of)),
-          "steady_of": jnp.asarray(np.asarray(steady_of, np.int32)),
-          "ambient": jnp.asarray(np.stack(ambs)),
-          "active": jnp.asarray(np.stack(acts)),
-          "valid": jnp.asarray(np.stack(vals)),
-          "charge": jnp.asarray(np.stack(chgs)),
-          "charge_p": jnp.asarray(np.stack(chgs_p))}
+    ix = {"lvl_row": _pad_n(np.stack(lvl_row)),
+          "seg_of": _pad_n(np.stack(seg_of)),
+          "steady_of": _pad_n(np.asarray(steady_of, np.int32)),
+          "ambient": _pad_n(np.stack(ambs)),
+          "active": _pad_n(np.stack(acts)),
+          "valid": _pad_n(np.stack(vals)),
+          "charge": _pad_n(np.stack(chgs)),
+          "charge_p": _pad_n(np.stack(chgs_p))}
 
     plats = tuple(plat for plat, _ in groups)
-    sig = ("fused", plats, backend, tuple(theta_keys),
-           tuple(row_counts), len(combos), T, L,
-           len(rr["tok_per_cap"]))
+    sig = ("fused", plats, tuple(theta_keys), tuple(row_counts),
+           n_b, T, L, len(rr["tok_per_cap"]))
+    asm = _Assembly(combos, skipped, dyn, ix, plats, sig, key, n_real,
+                    float(n_users), float(dt_s))
+    _ASSEMBLIES[key] = asm
+    while len(_ASSEMBLIES) > _ASSEMBLIES_MAX:
+        del _ASSEMBLIES[next(iter(_ASSEMBLIES))]
+        ASSEMBLY_STATS["evictions"] += 1
+    return asm
+
+
+def _fused_pipeline(platforms, designs, schedules, policies, dt_s,
+                    n_users, standby_mw, battery, thermal, theta,
+                    results_dir, shutdown_c, backend) -> _Pipeline:
+    """Assemble (or fetch) the fused pipeline for one fully-valued query.
+
+    Three cache tiers back the interactive twin: `_PIPELINES` (FIFO,
+    value-keyed) returns the whole assembled pipeline — repeated
+    identical queries skip even the host-side index build —
+    `_ASSEMBLIES` caches the backend-independent host half, and
+    `_EXEC_CACHE` (signature-keyed, bucket-padded shapes) shares the
+    compiled program across queries that differ only in VALUES (policy
+    thresholds, design knobs, schedule ambients) or that land in the
+    same shape bucket, so a what-if delta re-pushes small host arrays
+    and calls a warm executable: zero tracing, zero host table work."""
+    asm = _assemble_query(platforms, designs, schedules, policies, dt_s,
+                          n_users, standby_mw, battery, thermal, theta,
+                          results_dir, shutdown_c)
+    key = asm.key + (backend,)
+    pipe = _PIPELINES.get(key)
+    if pipe is not None:
+        PIPELINE_STATS["hits"] += 1
+        return pipe
+    PIPELINE_STATS["misses"] += 1
     fn = _cached_executable(
-        sig, lambda: _jit_pipeline(_build_fused(plats, backend)))
-    pipe = _Pipeline(combos, skipped, dyn, ix, fn)
+        asm.sig + (backend,),
+        lambda: _jit_pipeline(_build_fused(asm.plats, backend)))
+    pipe = _Pipeline(asm.combos, asm.skipped, asm.dyn,
+                     jax.tree_util.tree_map(jnp.asarray, asm.ix), fn,
+                     asm.n_real)
     _PIPELINES[key] = pipe
     while len(_PIPELINES) > _PIPELINES_MAX:
         del _PIPELINES[next(iter(_PIPELINES))]
+        PIPELINE_STATS["evictions"] += 1
     return pipe
+
+
+def _host_summary(summ: dict, n_real: int) -> tuple:
+    """Device summary dict -> (front, steady, host fields), with the
+    bucket-padding lanes sliced off."""
+    front = np.asarray(summ.pop("front_mask"))[:n_real]
+    steady = np.asarray(summ.pop("steady_mw"), np.float64)[:n_real]
+    host = {k: (np.asarray(v)[:n_real] if v.dtype == bool
+                else np.asarray(v, np.float64)[:n_real])
+            for k, v in summ.items()}
+    return front, steady, host
+
+
+def _batch_defaults() -> dict:
+    return {"platforms": DEFAULT_PLATFORMS, "designs": DEFAULT_DESIGNS,
+            "schedules": DEFAULT_SCHEDULES, "policies": DEFAULT_POLICIES,
+            "dt_s": DEFAULT_DT_S, "n_users": 1e6,
+            "standby_mw": DEFAULT_STANDBY_MW, "battery": None,
+            "thermal": None, "theta": None, "results_dir": None,
+            "shutdown_c": DEFAULT_SHUTDOWN_C}
+
+
+def day_grid_batch(queries, backend: str = "xla", **shared) -> list:
+    """Evaluate a stack of K fully-valued queries through ONE jitted
+    program with a leading query axis.
+
+    Each entry of `queries` is a dict of `day_grid` grid kwargs
+    (axes/values), layered over `shared` and the daysim defaults.  All
+    K queries must land in the SAME bucketed shape signature (same
+    platforms, theta keys, schedule steps, level count and combo/row
+    buckets) — value-level differences (designs, thresholds,
+    batteries, n_users, ambients) are exactly what the leading axis
+    carries.  Queries are assembled on the host (value-cached), padded
+    to a `bucket_size(K)` batch with clones of query 0, stacked leaf
+    by leaf and pushed once; the batch executable is `jax.vmap` over
+    the single-query fused body, so every lane's front mask and
+    survival flags are bit-identical to the serial query's.  Returns
+    one `DayReport` per query (front attached), pad lanes discarded.
+
+    Only the "xla" backend batches (the pallas day kernel has no batch
+    grid); serial `day_grid(backend="pallas")` remains available."""
+    if backend != "xla":
+        raise ValueError(f"unknown or unbatchable backend {backend!r}; "
+                         f"batched queries support backend='xla' only")
+    queries = list(queries)
+    if not queries:
+        raise ValueError("day_grid_batch needs at least one query")
+    asms = []
+    for q in queries:
+        kw = _batch_defaults()
+        kw.update(shared)
+        kw.update(q)
+        asms.append(_assemble_query(**kw))
+    sig0 = asms[0].sig
+    for i, a in enumerate(asms[1:], 1):
+        if a.sig != sig0:
+            raise ValueError(
+                f"batch query {i} maps to a different bucketed shape "
+                f"signature than query 0 ({a.sig} vs {sig0}); a batch "
+                f"shares ONE compiled program — group queries by "
+                f"signature first (DesignTwin.run micro-batches this "
+                f"way)")
+    k = len(asms)
+    k_b = bucket_size(k)
+    stacked = asms + [asms[0]] * (k_b - k)
+    dyn_k = jax.tree_util.tree_map(
+        lambda *xs: jnp.asarray(np.stack(xs)),
+        *[a.dyn for a in stacked])
+    ix_k = jax.tree_util.tree_map(
+        lambda *xs: jnp.asarray(np.stack(xs)),
+        *[a.ix for a in stacked])
+    fn = _cached_executable(
+        ("batch", k_b) + sig0 + (backend,),
+        lambda: _jit_pipeline(_build_fused_batch(asms[0].plats,
+                                                 backend)))
+    out = dict(fn(dyn_k, ix_k))
+    jax.block_until_ready(out["shutdown"])
+    reports = []
+    for i, asm in enumerate(asms):
+        summ = {kk: v[i] for kk, v in out.items()}
+        front, steady, host = _host_summary(summ, asm.n_real)
+        rep = DayReport(
+            combos=[cb.label() for cb in asm.combos],
+            steady_mw=steady, n_users=asm.n_users, dt_s=asm.dt_s,
+            skipped=asm.skipped,
+            battery_fade=np.asarray([cb.battery.fade
+                                     for cb in asm.combos]),
+            **host)
+        rep.front_mask = front
+        reports.append(rep)
+    return reports
 
 
 def day_grid(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
@@ -1637,11 +1869,7 @@ def day_grid(platforms=DEFAULT_PLATFORMS, designs=DEFAULT_DESIGNS,
         dyn = jax.tree_util.tree_map(jnp.asarray, pipe.dyn)
         summ = dict(pipe.fn(dyn, pipe.ix))
         jax.block_until_ready(summ["shutdown"])
-        front = np.asarray(summ.pop("front_mask"))
-        steady = np.asarray(summ.pop("steady_mw"), np.float64)
-        host = {k: (np.asarray(v) if v.dtype == bool
-                    else np.asarray(v, np.float64))
-                for k, v in summ.items()}
+        front, steady, host = _host_summary(summ, pipe.n_real)
         rep = DayReport(
             combos=[cb.label() for cb in pipe.combos],
             steady_mw=steady, n_users=n_users, dt_s=dt_s,

@@ -483,6 +483,21 @@ def day_pareto(platforms=None, designs=None, schedules=None, policies=None,
     return rep
 
 
+def day_pareto_batch(queries, **shared):
+    """Batched `day_pareto`: K value-level what-ifs through ONE jitted
+    program with a leading query axis.
+
+    `queries` is a sequence of dicts of `day_pareto` grid kwargs
+    (axes/values) layered over `shared`; every query must land in the
+    same bucketed shape signature (same platforms / schedule lengths /
+    combo buckets — value-level deltas only), which is what
+    `serving.twin.DesignTwin.query_batch` micro-batches by.  Returns
+    one `DayReport` per query, `front_mask` filled, each bit-identical
+    to the serial `day_pareto` answer for the same kwargs."""
+    from . import daysim
+    return daysim.day_grid_batch(list(queries), **shared)
+
+
 def survives_day(rep=None, skin_limit_c: float = 43.0, **kw):
     """(N,) bool per combo: the cell lasts the whole schedule AND peak
     skin temperature stays under the comfort limit.  Pass an existing

@@ -409,26 +409,6 @@ def _bin_tables(spec: PopulationSpec, pop: Population, dt_s: float,
     return bins, joff.astype(np.int32)
 
 
-def _user_const(spec: PopulationSpec, combos: list, tbs: list,
-                pop: Population, dt_s: float) -> dict:
-    """Per-user scan constants: archetype constants gathered per user,
-    with the battery-age capacity derating folded into the glasses
-    cell's dSoC coefficient.  The coefficient is recomputed in float64
-    exactly as `daysim._battery_const` does for an aged `BatterySpec`,
-    then cast — so a fleet user and a standalone `reference_integrate`
-    run of the same aged device see bit-identical constants."""
-    arch = pop.archetype
-    const_u = {}
-    for k in tbs[0]["const"]:
-        vals = np.asarray([tb["const"][k] for tb in tbs], np.float32)
-        const_u[k] = vals[arch]
-    cap = np.asarray([cb.battery.capacity_mwh for cb in combos],
-                     np.float64)[arch]
-    cap_eff = cap * (1.0 - pop.fade)
-    const_u["dsoc_coeff"] = (dt_s / (3600.0 * cap_eff)).astype(np.float32)
-    return const_u
-
-
 # ---------------------------------------------------------------------------
 # the fleet scan: whole-population state through daysim._step_math
 # ---------------------------------------------------------------------------
@@ -687,6 +667,75 @@ class FleetReport:
 # entry points
 # ---------------------------------------------------------------------------
 
+@dataclass
+class FleetPrep:
+    """Spec-derived half of a fleet day, hoisted out of the per-draw
+    loop: archetype combos, the stacked time-major scan tables already
+    resident on the device, and the per-archetype constants that
+    per-user gathers index into.  Everything here is a pure function
+    of (spec, dt_s, n_bins, standby_mw, shutdown_c, theta,
+    results_dir) — Monte Carlo draws only re-derive the pop-dependent
+    gathers (`joff`, age-derated dSoC, night top-up), so a tight draw
+    loop skips the daysim table compile AND the big host->device table
+    push every iteration."""
+    spec: PopulationSpec
+    dt_s: float
+    n_bins: int
+    standby_mw: float
+    shutdown_c: float
+    combos: list
+    xs_dev: dict                # device-resident scan tables incl bins
+    n_steps: int
+    uniq: np.ndarray            # (J,) distinct wake-tz offsets, f64
+    wake_a: np.ndarray          # (A,) archetype wake hours, f64
+    const_a: dict               # (A,) scan constants per archetype
+    cap_a: np.ndarray           # (A,) glasses capacity mwh, f64
+    cap_p_a: np.ndarray         # (A,) puck (or glasses) capacity, f64
+    day_steps_a: np.ndarray     # (A,) worn steps per day, f64
+    amult: np.ndarray           # (A, L) active multiplier ladder
+
+
+def prepare_fleet(spec: PopulationSpec, *, dt_s: float = 60.0,
+                  n_bins: int = DEFAULT_N_BINS,
+                  standby_mw: float = daysim.DEFAULT_STANDBY_MW,
+                  shutdown_c: float = daysim.DEFAULT_SHUTDOWN_C,
+                  theta=None, results_dir=None) -> FleetPrep:
+    """Build the population-independent `FleetPrep` for `fleet_day`.
+
+    The per-archetype constants and capacities are computed exactly as
+    the inline path computes them (same float64 intermediates, same
+    casts), so a `fleet_day(pop, prep=prep)` report is bit-identical
+    to `fleet_day(pop)` with matching kwargs — parity-pinned in
+    tests/test_montecarlo.py."""
+    combos = _archetype_combos(spec, theta, results_dir)
+    xs, tbs = _stack_archetype_tables(spec, combos, dt_s, standby_mw,
+                                      shutdown_c)
+    n_steps = xs["t1"].shape[0]
+    wake_a = np.asarray([a.wake_hour for a in spec.archetypes],
+                        np.float64)
+    tz_a = np.asarray(spec.tz_hours, np.float64)
+    uniq = np.unique(np.mod(wake_a[:, None] - tz_a[None, :], 24.0))
+    t_h = np.arange(n_steps, dtype=np.float64) * (dt_s / 3600.0)
+    xs["bins"] = np.floor(np.mod(t_h[:, None] + uniq[None, :], 24.0)
+                          * (n_bins / 24.0)).astype(np.int32)
+    const_a = {k: np.asarray([tb["const"][k] for tb in tbs], np.float32)
+               for k in tbs[0]["const"]}
+    return FleetPrep(
+        spec=spec, dt_s=dt_s, n_bins=n_bins, standby_mw=standby_mw,
+        shutdown_c=shutdown_c, combos=combos,
+        xs_dev=jax.tree_util.tree_map(jnp.asarray, xs),
+        n_steps=n_steps, uniq=uniq, wake_a=wake_a, const_a=const_a,
+        cap_a=np.asarray([cb.battery.capacity_mwh for cb in combos],
+                         np.float64),
+        cap_p_a=np.asarray(
+            [cb.puck.battery.capacity_mwh if cb.puck is not None
+             else cb.battery.capacity_mwh for cb in combos],
+            np.float64),
+        day_steps_a=np.asarray([tb["valid"].sum() for tb in tbs],
+                               np.float64),
+        amult=np.stack([tb["act_mult"] for tb in tbs]))
+
+
 def fleet_day(population, n_users: int | None = None, key=0, *,
               dt_s: float = 60.0, n_shards: int | None = None,
               n_bins: int = DEFAULT_N_BINS,
@@ -696,7 +745,8 @@ def fleet_day(population, n_users: int | None = None, key=0, *,
               skin_limit_c: float = 43.0,
               n_days: int = 1,
               overnight_charge_mw: float = DEFAULT_OVERNIGHT_MW,
-              theta=None, results_dir=None) -> FleetReport:
+              theta=None, results_dir=None,
+              prep: FleetPrep | None = None) -> FleetReport:
     """Integrate a whole population's day and aggregate the diurnal
     backend load curve.
 
@@ -743,37 +793,51 @@ def fleet_day(population, n_users: int | None = None, key=0, *,
         raise ValueError(f"overnight_charge_mw must be >= 0, got "
                          f"{overnight_charge_mw}")
 
-    combos = _archetype_combos(spec, theta, results_dir)
-    xs, tbs = _stack_archetype_tables(spec, combos, dt_s, standby_mw,
-                                      shutdown_c)
-    n_steps = xs["t1"].shape[0]
-    bins, joff = _bin_tables(spec, pop, dt_s, n_steps, n_bins)
-    xs["bins"] = bins
-    const_u = _user_const(spec, combos, tbs, pop, dt_s)
+    if prep is None:
+        prep = prepare_fleet(spec, dt_s=dt_s, n_bins=n_bins,
+                             standby_mw=standby_mw,
+                             shutdown_c=shutdown_c, theta=theta,
+                             results_dir=results_dir)
+    else:
+        if prep.spec is not spec:
+            raise ValueError("prep was built for a different "
+                             "PopulationSpec than this population's")
+        mismatch = [(k, got, want) for k, got, want in
+                    (("dt_s", prep.dt_s, dt_s),
+                     ("n_bins", prep.n_bins, n_bins),
+                     ("standby_mw", prep.standby_mw, standby_mw),
+                     ("shutdown_c", prep.shutdown_c, shutdown_c))
+                    if got != want]
+        if mismatch:
+            raise ValueError(f"prep kwargs disagree with fleet_day "
+                             f"kwargs: {mismatch}")
+    arch = pop.archetype
+    combos = prep.combos
+    # exact match: `off` recomputes the same float64 subtraction the
+    # uniq table was built from, so searchsorted lands on the entry
+    joff = np.searchsorted(
+        prep.uniq, np.mod(prep.wake_a[arch] - pop.tz_hours,
+                          24.0)).astype(np.int32)
+    const_u = {k: v[arch] for k, v in prep.const_a.items()}
+    cap_eff = prep.cap_a[arch] * (1.0 - pop.fade)
+    const_u["dsoc_coeff"] = (dt_s / (3600.0 * cap_eff)).astype(
+        np.float32)
 
     h = dt_s / 3600.0
-    day_steps = np.asarray([tb["valid"].sum() for tb in tbs],
-                           np.float64)[pop.archetype]
+    day_steps = prep.day_steps_a[arch]
     # overnight dock energy -> SoC fraction, per node: charge power x
     # the off-wrist gap over effective (age-derated) capacity, all in
-    # float64 like `_user_const`'s coefficients
+    # float64 like the dSoC coefficients
     gap_h = np.maximum(24.0 - day_steps * h, 0.0)
-    cap = np.asarray([cb.battery.capacity_mwh for cb in combos],
-                     np.float64)[pop.archetype]
-    cap_eff = cap * (1.0 - pop.fade)
-    cap_p = np.asarray(
-        [cb.puck.battery.capacity_mwh if cb.puck is not None
-         else cb.battery.capacity_mwh for cb in combos],
-        np.float64)[pop.archetype]
+    cap_p = prep.cap_p_a[arch]
     night = overnight_charge_mw * gap_h
 
-    amult = np.stack([tb["act_mult"] for tb in tbs])    # (A, L)
     user = {
-        "arch": pop.archetype.astype(np.int32),
+        "arch": arch.astype(np.int32),
         "amb_off": pop.ambient_offset_c.astype(np.float32),
         "joff": joff,
         "w": np.ones(n, np.float32),
-        "amult": amult[pop.archetype],
+        "amult": prep.amult[arch],
         "night_dsoc": (night / cap_eff).astype(np.float32),
         "night_dsoc_p": (night / cap_p).astype(np.float32),
         "dsteps": day_steps.astype(np.float32),
@@ -788,7 +852,7 @@ def fleet_day(population, n_users: int | None = None, key=0, *,
     per_user, curves = jax.block_until_ready(
         run(jax.tree_util.tree_map(jnp.asarray, user_p),
             jax.tree_util.tree_map(jnp.asarray, const_p),
-            jax.tree_util.tree_map(jnp.asarray, xs)))
+            prep.xs_dev))
     per_user = {k: np.asarray(v)[:n] for k, v in per_user.items()}
     # the scan accumulates raw per-step pod counts; one step covers
     # dt_s of wall time, so normalizing by (step hours / bin hours)

@@ -185,6 +185,25 @@ class ScenarioSet:
             upload_duty=self.upload_duty[idx],
             brightness=self.brightness[idx], names=names)
 
+    def pad(self, n_rows: int) -> "ScenarioSet":
+        """Pad up to ``n_rows`` by repeating row 0 (canonical shape
+        bucketing: the clone rows are valid scenarios, so validation
+        and the row power stages stay total; callers mask them out by
+        never indexing past the real rows).  No-op when already
+        ``n_rows`` long."""
+        n = len(self)
+        if n_rows < n:
+            raise ValueError(f"pad target {n_rows} < {n} real rows")
+        if n_rows == n or n == 0:
+            return self
+        idx = np.concatenate([np.arange(n),
+                              np.zeros(n_rows - n, np.int64)])
+        padded = self.take(idx)
+        if self.names:
+            return _dc_replace(padded, names=tuple(self.names)
+                               + ("",) * (n_rows - n))
+        return padded
+
     def row_matrix(self) -> np.ndarray:
         """(N, n_prim + 5) float64 matrix of every knob column — the
         canonical row identity used for deduplication."""

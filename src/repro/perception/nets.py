@@ -151,9 +151,35 @@ def asr_conformer(key, mel):
 # measured FLOPs per invocation
 # --------------------------------------------------------------------------
 
+_FLOPS_NETS = ("hand_tracker", "eye_tracker", "vio_imu", "vio_frontend",
+               "vad", "asr_1s")
+
+
+def _flops_cache_file():
+    """Disk cache for the measured-FLOPs table, next to the persistent
+    compile cache (same version key, same opt-out).  Lowering all six
+    nets costs ~3 s per fresh process and the result is a pure
+    function of (net definitions, jax version), so a tiny JSON beats
+    re-deriving it on every restart."""
+    from .. import compat
+    import os
+    if os.environ.get("REPRO_COMPILE_CACHE", "1") == "0":
+        return None
+    return compat.compile_cache_dir() / "measured_flops.json"
+
+
 @functools.lru_cache(maxsize=None)
 def measured_flops() -> dict[str, float]:
     """Compiled-FLOPs per single invocation of each primitive net."""
+    import json
+    cache = _flops_cache_file()
+    if cache is not None and cache.exists():
+        try:
+            out = json.loads(cache.read_text())
+            if set(out) == set(_FLOPS_NETS):
+                return {k: float(v) for k, v in out.items()}
+        except (json.JSONDecodeError, TypeError, ValueError):
+            pass                              # corrupt cache: re-derive
     key = jax.random.PRNGKey(0)
 
     def flops(fn, *shapes):
@@ -165,7 +191,7 @@ def measured_flops() -> dict[str, float]:
             ca = ca[0] if ca else {}
         return float((ca or {}).get("flops", 0.0))
 
-    return {
+    out = {
         "hand_tracker": flops(hand_tracker, (1, 2, 128, 128, 1)),
         "eye_tracker": flops(eye_tracker, (1, 2, 96, 96, 1)),
         "vio_imu": flops(vio_imu_net, (1, 200, 6)),
@@ -173,3 +199,10 @@ def measured_flops() -> dict[str, float]:
         "vad": flops(vad, (1, 100, 40)),
         "asr_1s": flops(asr_conformer, (1, 100, 80)),
     }
+    if cache is not None:
+        try:
+            cache.parent.mkdir(parents=True, exist_ok=True)
+            cache.write_text(json.dumps(out, indent=1))
+        except OSError:
+            pass                              # read-only checkout: skip
+    return out

@@ -1,5 +1,5 @@
-"""Interactive design twin: a what-if query engine over the fused
-day-Pareto pipeline.
+"""Interactive design twin: a batched multi-tenant what-if engine over
+the fused day-Pareto pipeline.
 
 The fused pipeline (`dse.day_pareto(engine="fused")`) compiles the whole
 scenario-tables → day-scan → objectives → non-dominated-front chain into
@@ -11,21 +11,44 @@ knob, a schedule — by re-pushing the small host arrays through the
 already-compiled executable: zero retraces, milliseconds per query
 (vs seconds for the pre-fusion host path).
 
+Three serving-stack mechanisms keep that latency flat under load:
+
+* **Canonical shape bucketing** — every grid axis that feeds a traced
+  shape (combos N, scenario rows R per platform, batch K) is padded up
+  to `daysim.bucket_size` (the next power of two: 1, 2, 4, 8, ...)
+  with zero-weight clone rows, so a what-if that changes an axis SIZE
+  still lands on a warm bucketed executable instead of retracing.
+* **Batched queries** — `query_batch()` / `what_if_many()` stack K
+  value-level what-ifs along a leading query axis and evaluate them
+  through ONE jitted program (`dse.day_pareto_batch`, a `jax.vmap` of
+  the single-query body, so results are bit-identical to serial
+  queries).  `submit()`/`run()` micro-batch the admission queue up to
+  `batch_window` items, grouping by bucketed shape signature and
+  fanning results back out in order.
+* **Persistent compilation cache** — construction calls
+  `compat.enable_persistent_cache()`, pointing jax's compilation cache
+  at ``results/compile_cache/jax-<version>/`` so a process restart
+  deserializes the fused executables from disk (~19 s cold first
+  query -> ~1 s).  Opt out with ``REPRO_COMPILE_CACHE=0``; relocate
+  with ``REPRO_COMPILE_CACHE_DIR=<dir>``.
+
 `query(**grid_overrides)` runs one full grid and returns the DayReport
 with the front attached; `what_if(design=..., policy=...)` is the
 single-combo ergonomic wrapper (singular axes become 1-tuples).
-`submit`/`run` give the twin the same admission-queue shape as
-`serving.engine.Server` so a UI or batch driver can enqueue what-ifs
-and drain them in slot-sized batches.  `TwinStats` tracks query count,
-latency, and the executable-cache hit/miss/trace deltas — the
-zero-retrace-when-warm contract is pinned by tests/test_twin.py.
+`TwinStats` tracks query count, latency, and the executable-cache
+hit/miss/trace deltas — the zero-retrace-when-warm contract (serial,
+batched, and across threads) is pinned by tests/test_twin.py and
+tests/test_twin_serving.py.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 
+from .. import compat
 from ..core import daysim, dse
+from .engine import drain_microbatched
 
 
 @dataclass
@@ -40,6 +63,8 @@ class WhatIf:
 @dataclass
 class TwinStats:
     queries: int = 0
+    batches: int = 0            # batched executions (query_batch calls
+                                # count one per signature group)
     exec_hits: int = 0          # warm executable reuses
     exec_misses: int = 0        # compiles triggered by our queries
     traces: int = 0             # actual retraces (0 when warm)
@@ -57,7 +82,10 @@ class DesignTwin:
     Base-grid axes default to the daysim defaults; any constructor
     kwarg accepted by `dse.day_pareto` (battery, thermal, theta,
     standby_mw, ...) rides along into every query.  `backend` selects
-    the day integrator ("xla" scan or the "pallas" fused-step kernel).
+    the day integrator ("xla" scan or the "pallas" fused-step kernel;
+    batched queries are xla-only).  All query paths are serialized
+    behind one lock, so threads may hammer `submit()`/`run()`/`query()`
+    concurrently and still see serial-identical results.
     """
 
     _SINGULAR = {"platform": "platforms", "design": "designs",
@@ -66,7 +94,9 @@ class DesignTwin:
     def __init__(self, platforms=None, designs=None, schedules=None,
                  policies=None, *, dt_s: float = daysim.DEFAULT_DT_S,
                  n_users: float = 1e6, backend: str = "xla",
-                 slots: int = 4, warm: bool = True, **grid_kw):
+                 slots: int = 4, batch_window: int = 16,
+                 warm: bool = True, **grid_kw):
+        compat.enable_persistent_cache()
         self.base = {k: v for k, v in (("platforms", platforms),
                                        ("designs", designs),
                                        ("schedules", schedules),
@@ -75,11 +105,25 @@ class DesignTwin:
         self.base.update(dt_s=dt_s, n_users=n_users, backend=backend,
                          **grid_kw)
         self.slots = slots
+        self.batch_window = batch_window
         self.queue: list[WhatIf] = []
         self.stats = TwinStats()
         self._qid = 0
+        self._lock = threading.Lock()
         if warm:
             self.query()
+
+    def _account(self, before: dict, t0: float, n_queries: int,
+                 n_batches: int = 0) -> None:
+        ms = (time.perf_counter() - t0) * 1e3
+        st = self.stats
+        st.queries += n_queries
+        st.batches += n_batches
+        st.exec_hits += daysim.EXEC_STATS["hits"] - before["hits"]
+        st.exec_misses += daysim.EXEC_STATS["misses"] - before["misses"]
+        st.traces += daysim.EXEC_STATS["traces"] - before["traces"]
+        st.last_ms = ms
+        st.total_ms += ms
 
     def query(self, **overrides) -> daysim.DayReport:
         """Run one full grid through the fused pipeline and time it.
@@ -89,23 +133,48 @@ class DesignTwin:
         folded into `self.stats`."""
         args = dict(self.base)
         args.update(overrides)
-        before = dict(daysim.EXEC_STATS)
-        t0 = time.perf_counter()
-        rep = dse.day_pareto(engine="fused", **args)
-        ms = (time.perf_counter() - t0) * 1e3
-        st = self.stats
-        st.queries += 1
-        st.exec_hits += daysim.EXEC_STATS["hits"] - before["hits"]
-        st.exec_misses += daysim.EXEC_STATS["misses"] - before["misses"]
-        st.traces += daysim.EXEC_STATS["traces"] - before["traces"]
-        st.last_ms = ms
-        st.total_ms += ms
+        with self._lock:
+            before = dict(daysim.EXEC_STATS)
+            t0 = time.perf_counter()
+            rep = dse.day_pareto(engine="fused", **args)
+            self._account(before, t0, 1)
         return rep
 
-    def what_if(self, **overrides) -> daysim.DayReport:
-        """`query` with ergonomic singular axes: `what_if(policy=p)`
-        pins that axis to the single value (a 1-tuple); plural/scalar
-        kwargs pass through unchanged."""
+    def query_batch(self, queries, **shared) -> list:
+        """Evaluate K value-level what-ifs through batched executables.
+
+        `queries` is a sequence of override dicts (each layered over
+        `shared` and the base grid).  Queries are grouped by bucketed
+        shape signature — each group runs as ONE `dse.day_pareto_batch`
+        program with a leading query axis — and the reports come back
+        in submission order, each bit-identical to the serial
+        `query(**q)` answer."""
+        args = dict(self.base)
+        args.update(shared)
+        backend = args.pop("backend", "xla")
+        queries = [dict(q) for q in queries]
+        if not queries:
+            return []
+        reports: list = [None] * len(queries)
+        with self._lock:
+            before = dict(daysim.EXEC_STATS)
+            t0 = time.perf_counter()
+            groups: dict = {}
+            for i, q in enumerate(queries):
+                kw = daysim._batch_defaults()
+                kw.update(args)
+                kw.update(q)
+                sig = daysim._assemble_query(**kw).sig
+                groups.setdefault(sig, []).append(i)
+            for idx in groups.values():
+                reps = dse.day_pareto_batch(
+                    [queries[i] for i in idx], backend=backend, **args)
+                for i, rep in zip(idx, reps):
+                    reports[i] = rep
+            self._account(before, t0, len(queries), len(groups))
+        return reports
+
+    def _singular(self, overrides: dict) -> dict:
         args = {}
         for k, v in overrides.items():
             plural = self._SINGULAR.get(k)
@@ -113,25 +182,42 @@ class DesignTwin:
                 args[plural] = (v,)
             else:
                 args[k] = v
-        return self.query(**args)
+        return args
+
+    def what_if(self, **overrides) -> daysim.DayReport:
+        """`query` with ergonomic singular axes: `what_if(policy=p)`
+        pins that axis to the single value (a 1-tuple); plural/scalar
+        kwargs pass through unchanged."""
+        return self.query(**self._singular(overrides))
+
+    def what_if_many(self, whatifs, **shared) -> list:
+        """`query_batch` with ergonomic singular axes per item."""
+        return self.query_batch([self._singular(w) for w in whatifs],
+                                **shared)
 
     # -- admission queue (the serving.engine.Server shape) ----------------
     def submit(self, **overrides) -> int:
         """Enqueue a what-if; returns its query id."""
-        self._qid += 1
-        self.queue.append(WhatIf(self._qid, overrides))
-        return self._qid
+        with self._lock:
+            self._qid += 1
+            self.queue.append(WhatIf(self._qid, overrides))
+            return self._qid
 
     def run(self, max_steps: int = 64) -> list[WhatIf]:
-        """Drain the queue in slot-sized batches (at most `max_steps`
-        queries); each finished WhatIf carries its report + latency."""
-        finished: list[WhatIf] = []
-        while self.queue and max_steps > 0:
-            batch = self.queue[: min(self.slots, max_steps)]
-            self.queue = self.queue[len(batch):]
-            for wi in batch:
-                wi.report = self.what_if(**wi.overrides)
-                wi.ms = self.stats.last_ms
-                finished.append(wi)
-                max_steps -= 1
-        return finished
+        """Drain the queue in micro-batches of up to `batch_window`
+        concurrent submissions (at most `max_steps` queries total);
+        each batch is evaluated through `what_if_many` — one compiled
+        program per shape-signature group — and every finished WhatIf
+        carries its report + its share of the batch latency."""
+
+        def eval_batch(batch: list[WhatIf]) -> list[WhatIf]:
+            reps = self.what_if_many([wi.overrides for wi in batch])
+            per_ms = self.stats.last_ms / max(len(batch), 1)
+            for wi, rep in zip(batch, reps):
+                wi.report = rep
+                wi.ms = per_ms
+            return batch
+
+        return drain_microbatched(self.queue, self.batch_window,
+                                  eval_batch, max_items=max_steps,
+                                  lock=self._lock)

@@ -68,6 +68,36 @@ def test_draws_after_first_reuse_warm_runner():
     assert fleet.FLEET_STATS["traces"] == t0
 
 
+def test_prep_reuse_bit_identical():
+    """The hoisted `fleet.prepare_fleet` path (the default) must give
+    bit-identical draws to the per-draw host re-derivation it
+    replaced."""
+    kw = dict(n_draws=3, key=7, dt_s=DT_S, fleet_size=1e6)
+    fast = montecarlo.fleet_distribution(fleet.DEFAULT_POPULATION,
+                                         N_USERS, **kw)
+    slow = montecarlo.fleet_distribution(fleet.DEFAULT_POPULATION,
+                                         N_USERS, reuse_prep=False,
+                                         **kw)
+    assert np.array_equal(fast.survival_draws, slow.survival_draws)
+    assert np.array_equal(fast.tte_draws, slow.tte_draws)
+    assert np.array_equal(fast.curve_draws, slow.curve_draws)
+    assert np.array_equal(fast.stream_curve_draws,
+                          slow.stream_curve_draws)
+
+
+def test_fleet_day_prep_validates_mismatch():
+    pop = fleet.sample_population(fleet.DEFAULT_POPULATION, N_USERS, 0)
+    prep = fleet.prepare_fleet(fleet.DEFAULT_POPULATION, dt_s=DT_S)
+    rep = fleet.fleet_day(pop, dt_s=DT_S, prep=prep)
+    assert rep.time_to_empty_h.shape == (N_USERS,)
+    with pytest.raises(ValueError, match="disagree"):
+        fleet.fleet_day(pop, dt_s=60.0, prep=prep)
+    other = fleet.DEFAULT_POPULATION.with_overrides("variant")
+    other_pop = fleet.sample_population(other, N_USERS, 0)
+    with pytest.raises(ValueError, match="different PopulationSpec"):
+        fleet.fleet_day(other_pop, dt_s=DT_S, prep=prep)
+
+
 # ---------------------------------------------------------------------------
 # distribution contents
 # ---------------------------------------------------------------------------

@@ -1,0 +1,294 @@
+"""Twin v2 serving contracts: batched queries, canonical shape
+bucketing, the persistent-compile-cache shim, and the cache-stats
+accessor.
+
+The load-bearing invariants:
+  * batched (`what_if_many` / `day_pareto_batch`) answers are
+    BIT-identical to serial `query`/`what_if` answers — front masks,
+    survival flags, every objective;
+  * bucket padding is invisible: reports carry only the real rows, and
+    axis sizes inside one bucket reuse the warm executable
+    (`EXEC_STATS["traces"]` flat);
+  * concurrent threads hammering `submit()`/`run()` with mixed shapes
+    serialize to the same results as serial queries, with no retraces
+    once the shapes are warm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import daysim, dse, scenarios
+from repro.serving.engine import drain_microbatched
+from repro.serving.twin import DesignTwin
+
+DT = 60.0
+
+_FIELDS = ("time_to_empty_h", "peak_skin_c", "pod_hours", "end_soc",
+           "energy_mwh", "throttled_h", "steady_mw", "day_hours")
+
+
+def _point_whatifs(k: int, start: int = 0) -> list:
+    gov = daysim.get_policy("thermal_governor")
+    return [{"platform": "aria2_display",
+             "design": daysim.DEFAULT_DESIGNS[1],
+             "schedule": "commuter",
+             "policy": dataclasses.replace(
+                 gov, name=f"t{start + i}",
+                 temp_trip_c=38.0 + 0.05 * (start + i))}
+            for i in range(k)]
+
+
+def _policies(k: int, start: int = 0) -> tuple:
+    gov = daysim.get_policy("thermal_governor")
+    return tuple(dataclasses.replace(gov, name=f"v{start + i}",
+                                     temp_trip_c=38.0 + 0.1 * (start + i))
+                 for i in range(k))
+
+
+def _assert_identical(a, b):
+    assert a.combos == b.combos
+    assert np.array_equal(a.front_mask, b.front_mask)
+    assert np.array_equal(a.survives(), b.survives())
+    for f in _FIELDS:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+
+
+@pytest.fixture(scope="module")
+def twin():
+    return DesignTwin(platforms=("aria2_display",),
+                      designs=daysim.DEFAULT_DESIGNS[:2],
+                      schedules=("commuter",), dt_s=DT)
+
+
+# -- bucketing primitives --------------------------------------------------
+
+def test_bucket_size():
+    assert [daysim.bucket_size(n) for n in (1, 2, 3, 5, 8, 9, 63, 64)] \
+        == [1, 2, 4, 8, 8, 16, 64, 64]
+    with pytest.raises(ValueError):
+        daysim.bucket_size(0)
+
+
+def test_scenarioset_pad():
+    sset = scenarios.ScenarioSet.build(
+        [{"on_device": ("asr",), "compression": 8.0, "name": "a"},
+         {"on_device": (), "compression": 16.0, "name": "b"},
+         {"on_device": (), "compression": 4.0, "name": "c"}])
+    padded = sset.pad(8)
+    assert len(padded) == 8
+    assert padded.names == ("a", "b", "c", "", "", "", "", "")
+    # clone rows repeat row 0 exactly
+    assert np.array_equal(padded.placement[3:], np.repeat(
+        sset.placement[:1], 5, axis=0))
+    assert np.array_equal(padded.compression[:3], sset.compression)
+    assert sset.pad(3) is sset
+    with pytest.raises(ValueError):
+        sset.pad(2)
+
+
+def test_report_carries_only_real_rows(twin):
+    rep = twin.query()
+    n = len(rep.combos)
+    assert daysim.bucket_size(n) > n    # padding actually happened
+    for f in _FIELDS:
+        assert getattr(rep, f).shape[0] == n
+    assert rep.front_mask.shape[0] == n
+
+
+# -- batched queries -------------------------------------------------------
+
+def test_batch_bit_identical_to_serial(twin):
+    whatifs = _point_whatifs(5)         # K=5 -> bucket 8: pad exercised
+    serial = [twin.what_if(**w) for w in whatifs]
+    batch = twin.what_if_many(whatifs)
+    assert len(batch) == 5
+    for s, b in zip(serial, batch):
+        _assert_identical(s, b)
+
+
+def test_batch_grid_queries_bit_identical(twin):
+    queries = [{"policies": _policies(2, 10 * i)} for i in range(3)]
+    serial = [twin.query(**q) for q in queries]
+    batch = twin.query_batch(queries)
+    for s, b in zip(serial, batch):
+        _assert_identical(s, b)
+
+
+def test_varied_k_batches_zero_retrace(twin):
+    twin.what_if_many(_point_whatifs(8, 50))      # warm the K-bucket 8
+    before = daysim.EXEC_STATS["traces"]
+    for k in (5, 6, 7, 8):                        # fresh values each
+        out = twin.what_if_many(_point_whatifs(k, 100 + 10 * k))
+        assert len(out) == k
+    assert daysim.EXEC_STATS["traces"] == before
+
+
+def test_varied_n_grids_zero_retrace(twin):
+    # 5- and 6-policy grids share one bucketed signature (combos 10/12
+    # -> bucket 16, rows -> bucket 256): sizes differ, executable warm
+    twin.query(policies=_policies(6))
+    before = daysim.EXEC_STATS["traces"]
+    r5 = twin.query(policies=_policies(5, 20))
+    r6 = twin.query(policies=_policies(6, 40))
+    assert daysim.EXEC_STATS["traces"] == before
+    assert len(r5.combos) == 10 and len(r6.combos) == 12
+
+
+def test_batch_mixed_signature_raises(twin):
+    with pytest.raises(ValueError, match="different bucketed shape"):
+        dse.day_pareto_batch(
+            [{"policies": _policies(2)}, {"policies": _policies(6)}],
+            platforms=("aria2_display",),
+            designs=daysim.DEFAULT_DESIGNS[:2],
+            schedules=("commuter",), dt_s=DT)
+
+
+def test_batch_rejects_pallas_and_empty():
+    with pytest.raises(ValueError, match="backend"):
+        daysim.day_grid_batch([{}], backend="pallas")
+    with pytest.raises(ValueError, match="at least one"):
+        daysim.day_grid_batch([])
+
+
+# -- admission queue / concurrency ----------------------------------------
+
+def test_drain_microbatched_window_and_budget():
+    queue = list(range(10))
+    seen = []
+
+    def eval_batch(batch):
+        seen.append(list(batch))
+        return batch
+
+    out = drain_microbatched(queue, 4, eval_batch, max_items=7)
+    assert out == list(range(7))
+    assert seen == [[0, 1, 2, 3], [4, 5, 6]]
+    assert queue == [7, 8, 9]
+    assert drain_microbatched(queue, 4, eval_batch) == [7, 8, 9]
+    assert queue == []
+
+
+def test_run_microbatches_and_fans_out(twin):
+    whatifs = _point_whatifs(5, 200)
+    serial = [twin.what_if(**w) for w in whatifs]
+    qids = [twin.submit(**w) for w in whatifs]
+    batches_before = twin.stats.batches
+    done = twin.run()
+    assert [wi.qid for wi in done] == qids
+    assert twin.queue == []
+    assert twin.stats.batches == batches_before + 1   # one sig group
+    for s, wi in zip(serial, done):
+        _assert_identical(s, wi.report)
+
+
+def test_concurrent_submit_run_mixed_shapes(twin):
+    whatifs = _point_whatifs(6, 300)
+    grids = [{"policies": _policies(2, 300 + 10 * i)} for i in range(4)]
+    serial = {f"p{i}": twin.what_if(**w) for i, w in enumerate(whatifs)}
+    serial.update({f"g{i}": twin.query(**q)
+                   for i, q in enumerate(grids)})
+    twin.what_if_many(whatifs)                  # warm both batch shapes
+    twin.query_batch(grids)
+
+    before = daysim.EXEC_STATS["traces"]
+    qid_to_key, results, errors = {}, {}, []
+
+    def submit_points(lo, hi):
+        for i in range(lo, hi):
+            qid_to_key[twin.submit(**whatifs[i])] = f"p{i}"
+
+    def submit_grids():
+        for i, q in enumerate(grids):
+            qid_to_key[twin.submit(**q)] = f"g{i}"
+
+    def drain():
+        try:
+            for wi in twin.run():
+                results[wi.qid] = wi.report
+        except Exception as e:                  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=submit_points, args=(0, 3)),
+               threading.Thread(target=submit_points, args=(3, 6)),
+               threading.Thread(target=submit_grids),
+               threading.Thread(target=drain),
+               threading.Thread(target=drain)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    results.update({wi.qid: wi.report for wi in twin.run()})
+
+    assert not errors
+    assert len(results) == len(qid_to_key) == 10
+    for qid, key in qid_to_key.items():
+        _assert_identical(serial[key], results[qid])
+    assert daysim.EXEC_STATS["traces"] == before, \
+        "concurrent warm serving retraced"
+
+
+# -- cache tiers -----------------------------------------------------------
+
+def test_cache_stats_accessor(twin):
+    stats = daysim.cache_stats()
+    assert set(stats) == {"rows", "assemblies", "pipelines", "exec"}
+    for tier in stats.values():
+        assert {"hits", "misses", "size"} <= set(tier)
+    a0 = stats["assemblies"]["hits"]
+    p0 = stats["pipelines"]["hits"]
+    twin.query()
+    twin.query()                        # identical: every tier hits
+    stats = daysim.cache_stats()
+    assert stats["assemblies"]["hits"] >= a0 + 2
+    assert stats["pipelines"]["hits"] >= p0 + 2
+    assert stats["exec"]["size"] >= 1
+    assert stats["rows"]["evictions"] >= 0
+
+
+def test_persistent_cache_shim(monkeypatch, tmp_path):
+    import jax
+    prev_enabled = compat._CACHE_ENABLED
+    prev_dir = jax.config.jax_compilation_cache_dir
+    try:
+        monkeypatch.setenv("REPRO_COMPILE_CACHE", "0")
+        compat._CACHE_ENABLED = None
+        assert compat.enable_persistent_cache() is None
+
+        monkeypatch.setenv("REPRO_COMPILE_CACHE", "1")
+        monkeypatch.setenv("REPRO_COMPILE_CACHE_DIR", str(tmp_path))
+        compat._CACHE_ENABLED = None
+        out = compat.enable_persistent_cache()
+        assert out == tmp_path / f"jax-{jax.__version__}"
+        assert out.is_dir()
+        assert jax.config.jax_compilation_cache_dir == str(out)
+        # idempotent: second call returns the same dir without rework
+        assert compat.enable_persistent_cache() == out
+    finally:
+        compat._CACHE_ENABLED = prev_enabled
+        if prev_dir is not None:
+            jax.config.update("jax_compilation_cache_dir", prev_dir)
+
+
+def test_measured_flops_disk_cache(monkeypatch, tmp_path):
+    import json
+    from repro.perception import nets
+    monkeypatch.setenv("REPRO_COMPILE_CACHE", "0")
+    assert nets._flops_cache_file() is None
+    monkeypatch.setenv("REPRO_COMPILE_CACHE", "1")
+    monkeypatch.setenv("REPRO_COMPILE_CACHE_DIR", str(tmp_path))
+    f = nets._flops_cache_file()
+    assert f.parent.parent == tmp_path
+    # a cached table with the right keys is served verbatim, no lowering
+    f.parent.mkdir(parents=True, exist_ok=True)
+    fake = {k: float(i + 1) for i, k in enumerate(nets._FLOPS_NETS)}
+    f.write_text(json.dumps(fake))
+    nets.measured_flops.cache_clear()
+    try:
+        assert nets.measured_flops() == fake
+    finally:
+        nets.measured_flops.cache_clear()
